@@ -1,0 +1,58 @@
+"""Shared benchmark utilities: timing + the TPU v5e roofline cost model used
+to translate measured spike statistics into modeled latency/energy (the
+paper reports FPGA latency/energy; we report the TPU-model equivalents and
+the EXACTLY reproducible quantities — spike counts, sparsity, accuracy —
+side by side)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+# TPU v5e model (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # B/s
+CHIP_POWER_W = 200.0         # typical board power (modeled)
+IDLE_FRAC = 0.3              # fraction of power burned regardless of work
+
+
+def time_call(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time per call (seconds) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+@dataclass
+class RooflineEstimate:
+    flops: float
+    bytes: float
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes / HBM_BW
+
+    @property
+    def time_s(self) -> float:
+        return max(self.compute_s, self.memory_s)
+
+    @property
+    def energy_j(self) -> float:
+        util = self.compute_s / max(self.time_s, 1e-30)
+        return self.time_s * CHIP_POWER_W * (IDLE_FRAC +
+                                             (1 - IDLE_FRAC) * util)
+
+
+def csv_row(*cols) -> str:
+    return ",".join(str(c) for c in cols)

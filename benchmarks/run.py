@@ -1,0 +1,50 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  BENCH_KD_STEPS=40 ... python -m benchmarks.run     # quick KD budget
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig8_kd_accuracy, kernel_bench, serve_throughput,
+                            table1_resources, table2_spikes,
+                            table3_efficiency, timestep_ablation)
+    sections = [
+        ("Fig 8 — KD pipeline accuracy (KDT/F&Q/KD-QAT/W2TTFS)",
+         fig8_kd_accuracy.main),
+        ("Table I — per-module resources", table1_resources.main),
+        ("Table II — ResNet-11 vs QKFResNet-11 spikes/latency/energy",
+         table2_spikes.main),
+        ("Table III — synaptic-op efficiency (GSOPS/W model)",
+         table3_efficiency.main),
+        ("Timestep ablation — single- vs multi-timestep execution",
+         timestep_ablation.main),
+        ("Kernel bench — Pallas kernels roofline + oracle timing",
+         kernel_bench.main),
+        ("Serving throughput — continuous batching + QKFormer (C4) mode",
+         serve_throughput.main),
+    ]
+    failed = []
+    for title, fn in sections:
+        print(f"\n{'=' * 72}\n== {title}\n{'=' * 72}")
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failed.append(title)
+        print(f"== ({time.time() - t0:.1f}s)")
+    if failed:
+        print(f"\nFAILED sections: {failed}")
+        sys.exit(1)
+    print("\nAll benchmark sections completed.")
+
+
+if __name__ == "__main__":
+    main()

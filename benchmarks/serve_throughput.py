@@ -1,0 +1,53 @@
+"""Serving-engine throughput across model families (reduced configs, CPU).
+
+Not a paper table — a framework benchmark: continuous batching vs
+sequential serving, and the paper-C4 (QKFormer) serving mode's cache-free
+decode, measured through the real engine. CPU wall-times are only
+meaningful RELATIVE to each other on this host.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import build_model, get_config, reduced
+from repro.serve import Engine, EngineConfig
+
+
+def run_engine(arch: str, slots: int, n_req: int = 8, max_new: int = 8,
+               **overrides) -> dict:
+    cfg = reduced(get_config(arch), **overrides)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, EngineConfig(max_slots=slots, max_len=64,
+                                             prefill_pad=16))
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for _ in range(n_req):
+        eng.submit(rng.integers(0, cfg.vocab_size, int(rng.integers(4, 16))),
+                   max_new=max_new)
+    eng.run_until_drained()
+    wall = time.perf_counter() - t0
+    st = eng.stats()
+    return {"arch": arch, "slots": slots, "tok_s": st["tokens"] / wall,
+            "ttft_s": st["ttft_mean_s"]}
+
+
+def main() -> None:
+    print("# engine throughput (reduced configs, relative numbers only)")
+    print("arch,mode,slots,tok_per_s,ttft_s")
+    for arch in ("qwen3-1.7b", "mamba2-130m", "zamba2-7b"):
+        seq = run_engine(arch, slots=1)
+        bat = run_engine(arch, slots=4)
+        print(f"{arch},sequential,1,{seq['tok_s']:.1f},{seq['ttft_s']:.2f}")
+        print(f"{arch},continuous,4,{bat['tok_s']:.1f},{bat['ttft_s']:.2f}")
+    qk = run_engine("qwen3-1.7b", slots=4, spiking=True,
+                    attention_kind="qk_spiking")
+    print(f"qwen3-1.7b,qkformer(C4) continuous,4,{qk['tok_s']:.1f},"
+          f"{qk['ttft_s']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Paper Table III: energy-efficiency comparison (GSOPS/W).
+
+Synaptic operations (SOPS) are EXACTLY reproducible: every spike triggers
+``fanout`` accumulations downstream, so SOPS = sum over layers of
+spikes x fanout. Efficiency = SOPS / (modeled time x modeled power), using
+the same TPU v5e cost model as the other tables. The paper's normalized
+GSOPS/W/kLUTs has a natural analogue: GSOPS/W/mm2 is unknowable here, so we
+report GSOPS/W and GSOPS/J-per-chip; the comparison that carries over is
+event vs dense execution on the SAME hardware model (the paper's 1.97x
+normalized-efficiency claim shape).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import CHIP_POWER_W, RooflineEstimate
+from repro.data import SyntheticImageDataset
+from repro.models import snn_cnn
+
+
+def synaptic_ops_per_image(arch: str, width: float = 0.25,
+                           batch: int = 32) -> dict:
+    cfg = snn_cnn.SNNCNNConfig(arch=arch, width_mult=width, timesteps=1)
+    var = snn_cnn.init(jax.random.PRNGKey(0), cfg)
+    ds = SyntheticImageDataset(image_size=32, seed=0)
+    imgs, _ = ds.batch(0, batch)
+    _, _, aux = snn_cnn.apply(var, jnp.asarray(imgs), cfg, train=True)
+
+    layers = snn_cnn.build_layers(cfg)
+    # fanout of a spike at layer i = kernel volume of the NEXT conv layer
+    fanouts = []
+    for layer in layers:
+        if layer[0] == "conv_bn_lif":
+            fanouts.append(9 * layer[2])
+        elif layer[0] == "resblock":
+            fanouts.append(9 * layer[2])
+        elif layer[0] == "qkformer":
+            fanouts.append(layer[1])
+        else:
+            fanouts.append(0)
+
+    spikes = [float(v) / batch for k, v in sorted(aux["spikes"].items())
+              if k.startswith("layer")]
+    sops = sum(s * f for s, f in zip(spikes, fanouts[1:] + [0]))
+    return {"arch": arch, "sops_per_img": sops,
+            "total_spikes": sum(spikes)}
+
+
+def main() -> None:
+    print("# Table III analogue — synaptic-op efficiency (TPU v5e model)")
+    print("arch,sops_per_img,GSOPS_W_event,GSOPS_W_dense,event_vs_dense")
+    from benchmarks.table2_spikes import measure
+    for arch in ("resnet11", "vgg11", "qkfresnet11"):
+        s = synaptic_ops_per_image(arch)
+        m = measure(arch)
+        t_event = m["latency_ms_event"] / 1e3
+        t_dense = m["latency_ms_dense"] / 1e3
+        e_event = m["energy_mJ_event"] / 1e3
+        e_dense = m["energy_mJ_dense"] / 1e3
+        g_event = s["sops_per_img"] / max(e_event, 1e-12) / 1e9
+        g_dense = s["sops_per_img"] / max(e_dense, 1e-12) / 1e9
+        print(f"{arch},{s['sops_per_img']:.4g},{g_event:.4g},"
+              f"{g_dense:.4g},{g_event / max(g_dense, 1e-12):.2f}x")
+    print("# paper claim shape: event-driven execution beats dense on the "
+          "same hardware (NEURAL: 1.97x normalized efficiency)")
+
+
+if __name__ == "__main__":
+    main()

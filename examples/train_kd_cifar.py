@@ -1,0 +1,51 @@
+"""End-to-end driver for the PAPER's experiment (Fig 2b / Fig 8):
+
+  ANN teacher (ResNet-18) -> KD single-timestep SNN student (VGG-11)
+  -> F&Q quantization -> KD-QAT -> W2TTFS head -> fused deployment model.
+
+Trains for a few hundred steps on synthetic CIFAR-like data and prints the
+stage-by-stage accuracy table (the paper's Fig 8) plus the Total-Spikes
+metric (Table II) of the final deployment artifact.
+
+  PYTHONPATH=src python examples/train_kd_cifar.py [--steps 220] [--arch vgg11]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=220)
+    ap.add_argument("--arch", default="vgg11",
+                    choices=["vgg11", "resnet11", "qkfresnet11"])
+    args = ap.parse_args()
+    os.environ["BENCH_KD_STEPS"] = str(args.steps)
+
+    # the benchmark module IS the pipeline implementation — reuse it
+    from benchmarks import fig8_kd_accuracy
+    res = fig8_kd_accuracy.run(args.arch)
+
+    import jax
+    import jax.numpy as jnp
+    from repro.core.quant import QuantConfig
+    from repro.data import SyntheticImageDataset
+    from repro.models import snn_cnn
+
+    # deployment artifact: BN-fused + quantized (what NEURAL's EPA executes)
+    cfg = snn_cnn.SNNCNNConfig(arch=args.arch, width_mult=0.125, timesteps=1,
+                               quant=QuantConfig(enabled=True, bits=8))
+    var = snn_cnn.init(jax.random.PRNGKey(1), cfg)
+    fused = snn_cnn.fuse_model(var, cfg)
+    ds = SyntheticImageDataset(image_size=32, seed=0)
+    imgs, _ = ds.batch(0, 16)
+    logits, aux = snn_cnn.apply_fused(fused, jnp.asarray(imgs), cfg)
+    print(f"\ndeployment model: fused+int8, total_spikes/img = "
+          f"{float(aux['total_spikes']) / 16:.0f} (paper Table II metric)")
+    print("stage accuracies:", {k: round(v, 4) for k, v in res.items()})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .base import ModelConfig, SHAPES, ShapeSpec, cells_for
+from .registry import ARCHS, build_model, get_config, reduced

@@ -1,0 +1,17 @@
+"""NEURAL's contributions as composable JAX modules.
+
+C1  kd.py / quant.py  — KD + fixed-point/FP8 QAT for single-timestep SNNs
+C2  w2ttfs.py         — window-to-time-to-first-spike pooling replacement
+C3  lif.py / events.py / surrogate.py — hybrid data-event spiking execution
+C4  qk_attention.py   — on-the-fly spiking QKFormer attention
+"""
+from .surrogate import spike, available_surrogates
+from .lif import LIFConfig, lif_forward, lif_multistep, lif_single_step, spike_rate, total_spikes
+from .w2ttfs import (window_counts, w2ttfs_expand, w2ttfs_reference,
+                     w2ttfs_classifier, w2ttfs_time_reuse, avgpool_classifier)
+from .qk_attention import (qk_token_mask, qk_channel_mask, qk_token_attention,
+                           qk_channel_attention, spiking_self_attention)
+from .kd import KDConfig, kd_loss, sequence_kd_loss, kl_divergence, softmax_cross_entropy, make_distill_loss_fn
+from .quant import QuantConfig, fake_quant, quantize_fixed, quantize_fp8, fuse_bn_into_conv, fuse_bn_into_linear, quantize_tree
+from .events import (block_count_map_2d, pad_to_blocks, block_occupancy,
+                     event_stats, synaptic_ops)

@@ -1,0 +1,102 @@
+"""Knowledge-distillation training framework (paper C1, Fig 2(b)).
+
+Pipeline stages, exactly as the paper names them (Fig 8 legend):
+  KDT     — full-precision student trained with logit-based KD from an ANN
+            teacher (ref [6]: logit KD, temperature-scaled KL + CE),
+  F&Q     — operator fusion + fixed-point quantization (post-training),
+  KD-QAT  — quantization-aware fine-tuning with the same KD loss,
+  W2TTFS  — swap average pooling for the W2TTFS head at inference.
+
+The framework is model-agnostic: it only needs ``apply(params, batch) ->
+logits`` for the student and teacher, so it distills the paper's CNNs and the
+spiking-LM extension alike.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class KDConfig:
+    temperature: float = 4.0
+    alpha: float = 0.7          # weight on the KD (KL) term; (1-alpha) on CE
+    feature_beta: float = 0.0   # optional hidden-state MSE term
+
+
+def softmax_cross_entropy(logits: Array, labels: Array) -> Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def kl_divergence(student_logits: Array, teacher_logits: Array,
+                  temperature: float) -> Array:
+    """KL(teacher || student) with temperature scaling, scaled by T^2 so the
+    gradient magnitude is independent of T (Hinton et al.)."""
+    t = temperature
+    p_t = jax.nn.softmax(teacher_logits / t, axis=-1)
+    logp_t = jax.nn.log_softmax(teacher_logits / t, axis=-1)
+    logp_s = jax.nn.log_softmax(student_logits / t, axis=-1)
+    kl = jnp.sum(p_t * (logp_t - logp_s), axis=-1)
+    return jnp.mean(kl) * (t * t)
+
+
+def kd_loss(student_logits: Array, teacher_logits: Array, labels: Array,
+            cfg: KDConfig = KDConfig(),
+            student_feats: Optional[Array] = None,
+            teacher_feats: Optional[Array] = None) -> tuple[Array, dict]:
+    ce = softmax_cross_entropy(student_logits, labels)
+    kl = kl_divergence(student_logits, jax.lax.stop_gradient(teacher_logits),
+                       cfg.temperature)
+    loss = (1.0 - cfg.alpha) * ce + cfg.alpha * kl
+    metrics = {"ce": ce, "kl": kl}
+    if cfg.feature_beta > 0.0 and student_feats is not None:
+        fmse = jnp.mean((student_feats - jax.lax.stop_gradient(teacher_feats)) ** 2)
+        loss = loss + cfg.feature_beta * fmse
+        metrics["feature_mse"] = fmse
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def sequence_kd_loss(student_logits: Array, teacher_logits: Array,
+                     tokens: Array, cfg: KDConfig = KDConfig(),
+                     mask: Optional[Array] = None) -> tuple[Array, dict]:
+    """Token-level KD for LM distillation (spiking-LM extension).
+
+    ``student_logits/teacher_logits``: [B, S, V]; ``tokens``: [B, S] targets.
+    """
+    b, s, v = student_logits.shape
+    sl = student_logits.reshape(b * s, v)
+    tl = teacher_logits.reshape(b * s, v)
+    lab = tokens.reshape(b * s)
+    if mask is not None:
+        m = mask.reshape(b * s).astype(sl.dtype)
+        logp = jax.nn.log_softmax(sl, axis=-1)
+        ce = -(jnp.take_along_axis(logp, lab[:, None], axis=-1)[:, 0] * m).sum() / jnp.maximum(m.sum(), 1.0)
+    else:
+        ce = softmax_cross_entropy(sl, lab)
+    kl = kl_divergence(sl, jax.lax.stop_gradient(tl), cfg.temperature)
+    loss = (1.0 - cfg.alpha) * ce + cfg.alpha * kl
+    return loss, {"ce": ce, "kl": kl, "loss": loss}
+
+
+def make_distill_loss_fn(student_apply: Callable, teacher_apply: Callable,
+                         teacher_params, cfg: KDConfig = KDConfig()) -> Callable:
+    """Build ``loss_fn(student_params, batch) -> (loss, metrics)``.
+
+    ``batch`` = {"inputs": ..., "labels": ...}. Teacher params are closed over
+    and stop-gradiented; teacher runs in eval mode through its own apply fn.
+    """
+
+    def loss_fn(student_params, batch):
+        s_logits = student_apply(student_params, batch["inputs"])
+        t_logits = teacher_apply(teacher_params, batch["inputs"])
+        return kd_loss(s_logits, t_logits, batch["labels"], cfg)
+
+    return loss_fn

@@ -1,0 +1,78 @@
+"""LIF neuron dynamics (paper Fig 1 / Fig 3 ④: MP update + threshold + reset).
+
+Discrete LIF used throughout the paper's models:
+
+    v[t]   = tau * v[t-1] * (1 - s[t-1])  +  I[t]      (hard reset)
+    s[t]   = H(v[t] - v_th)
+
+With the paper's single-timestep paradigm (T=1, v[0]=0) this degenerates to
+``s = H(I - v_th)`` — no temporal state, no multi-timestep scheduling. The
+multi-timestep path (lax.scan) is kept as the baseline the paper compares
+against (SiBrain/STI-SNN style T>1 execution).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .surrogate import spike
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class LIFConfig:
+    tau: float = 0.5            # decay (paper §V.A: tau = 0.5)
+    v_th: float = 1.0           # firing threshold
+    surrogate: str = "atan"
+    alpha: float = 2.0
+    soft_reset: bool = False    # paper uses hard reset; soft kept for ablation
+
+
+def lif_single_step(current: Array, cfg: LIFConfig = LIFConfig(),
+                    v_prev: Optional[Array] = None) -> tuple[Array, Array]:
+    """One LIF update. Returns (spikes, new membrane potential)."""
+    if v_prev is None:
+        v = current
+    else:
+        v = cfg.tau * v_prev + current
+    s = spike(v - cfg.v_th, cfg.surrogate, cfg.alpha)
+    if cfg.soft_reset:
+        v_next = v - cfg.v_th * s
+    else:
+        v_next = v * (1.0 - s)
+    return s, v_next
+
+
+def lif_forward(current: Array, cfg: LIFConfig = LIFConfig()) -> Array:
+    """Single-timestep spiking activation (paper's deployed mode): s = H(I - v_th)."""
+    return spike(current - cfg.v_th, cfg.surrogate, cfg.alpha)
+
+
+def lif_multistep(currents: Array, cfg: LIFConfig = LIFConfig()) -> Array:
+    """Multi-timestep LIF over leading time axis ``currents[T, ...]`` via scan.
+
+    Baseline execution mode (what SiBrain-style multi-timestep accelerators
+    run); used for the T>1 vs T=1 comparisons in the benchmarks.
+    """
+    v0 = jnp.zeros_like(currents[0])
+
+    def step(v, i_t):
+        s, v_next = lif_single_step(i_t, cfg, v_prev=v)
+        return v_next, s
+
+    _, spikes = jax.lax.scan(step, v0, currents)
+    return spikes
+
+
+def spike_rate(spikes: Array) -> Array:
+    """Fraction of active neurons — drives the event-skip analysis (C3)."""
+    return jnp.mean(spikes.astype(jnp.float32))
+
+
+def total_spikes(spikes: Array) -> Array:
+    """Total Spikes (TS) metric from paper Table II."""
+    return jnp.sum(spikes.astype(jnp.float32)).astype(jnp.int32)

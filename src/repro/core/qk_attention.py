@@ -1,0 +1,116 @@
+"""Spiking QKFormer Q-K attention (paper C4, Fig 5 "on-the-fly" dataflow).
+
+QKFormer's Q-K *token* attention (QKTA, ref [8]) on binary spikes:
+
+    Q, K in {0,1}^[B, N, D]
+    t_i  = sum_d Q[i, d]                  (Row Summation along the Q path)
+    A_i  = spike(t_i - theta)             (token activation mask, {0,1}^N)
+    X'   = A (broadcast) * K              (QK token mask applied to K)
+
+and the *channel* variant (QKCA): c_d = sum_i Q[i, d], mask over channels.
+
+NEURAL's hardware realization replaces the threshold on the row sum with a
+bitwise OR across channels (mask = any spike in the row) and fuses the whole
+thing into the PE->spike-buffer write-back path: no score matrix, no dedicated
+attention unit, O(N*D) work and a single pass over K. Both mask modes are
+implemented; ``mode="or"`` is what the atten_reg in Fig 5 computes.
+
+These are pure functions; the QKFormer *block* (Linear+BN+LIF plumbing,
+residuals, paper Fig 2(a)) lives with the models, and the fused Pallas kernel
+in ``repro.kernels.qk_attention`` implements the same contract for the
+write-back path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .surrogate import spike
+
+Array = jax.Array
+
+
+def qk_token_mask(q_spikes: Array, mode: str = "threshold",
+                  threshold: float = 1.0, surrogate: str = "atan",
+                  alpha: float = 2.0) -> Array:
+    """Per-token activation mask from Q spikes.
+
+    q_spikes: [..., N, D] binary. Returns [..., N, 1] binary mask.
+      mode="threshold": spike(sum_d Q - threshold)   (QKFormer, trainable path)
+      mode="or":        1[sum_d Q > 0]               (NEURAL atten_reg, Fig 5 (2))
+    """
+    rowsum = q_spikes.sum(axis=-1, keepdims=True)
+    if mode == "or":
+        return (rowsum > 0).astype(q_spikes.dtype)
+    return spike(rowsum - threshold, surrogate, alpha)
+
+
+def qk_channel_mask(q_spikes: Array, mode: str = "threshold",
+                    threshold: float = 1.0, surrogate: str = "atan",
+                    alpha: float = 2.0) -> Array:
+    """Per-channel activation mask. q_spikes: [..., N, D] -> [..., 1, D]."""
+    colsum = q_spikes.sum(axis=-2, keepdims=True)
+    if mode == "or":
+        return (colsum > 0).astype(q_spikes.dtype)
+    return spike(colsum - threshold, surrogate, alpha)
+
+
+def qk_token_attention(q_spikes: Array, k_spikes: Array, mode: str = "threshold",
+                       threshold: float = 1.0, surrogate: str = "atan",
+                       alpha: float = 2.0) -> Array:
+    """QKTA: mask K rows by the Q token mask. Shapes [..., N, D] -> [..., N, D].
+
+    Note the mask for row i depends only on row i of Q — this is what makes
+    the paper's "on-the-fly" fusion (and O(1)-state autoregressive decode)
+    possible: each token's output is computable the moment its Q/K rows are.
+    """
+    a = qk_token_mask(q_spikes, mode, threshold, surrogate, alpha)
+    return a * k_spikes
+
+
+def qk_channel_attention(q_spikes: Array, k_spikes: Array, mode: str = "threshold",
+                         threshold: float = 1.0, surrogate: str = "atan",
+                         alpha: float = 2.0) -> Array:
+    c = qk_channel_mask(q_spikes, mode, threshold, surrogate, alpha)
+    return c * k_spikes
+
+
+def spiking_self_attention(q: Array, k: Array, v: Array, scale: float = 0.125,
+                           causal: bool = False) -> Array:
+    """Spikformer-style SSA (used by QKFormer's final stage, ref [8]):
+    out = (Q K^T) V * scale with binary Q/K/V and NO softmax.
+
+    Because there is no softmax, for the non-causal case we associate as
+    Q (K^T V): O(N*D^2) instead of O(N^2*D) — the linear-attention identity
+    the binary formulation buys. The causal case uses a cumulative K^T V
+    prefix state (chunked), the basis of O(1)-state spiking LM decode.
+    """
+    if not causal:
+        kv = jnp.einsum("...nd,...ne->...de", k, v)
+        return jnp.einsum("...nd,...de->...ne", q, kv) * scale
+    # causal: prefix-sum of per-token outer products, chunked to bound memory
+    n = q.shape[-2]
+    chunk = min(128, n)
+    pad = (-n) % chunk
+    if pad:
+        qp = jnp.pad(q, [(0, 0)] * (q.ndim - 2) + [(0, pad), (0, 0)])
+        kp = jnp.pad(k, [(0, 0)] * (k.ndim - 2) + [(0, pad), (0, 0)])
+        vp = jnp.pad(v, [(0, 0)] * (v.ndim - 2) + [(0, pad), (0, 0)])
+    else:
+        qp, kp, vp = q, k, v
+    nc = qp.shape[-2] // chunk
+    qc = qp.reshape(*qp.shape[:-2], nc, chunk, qp.shape[-1])
+    kc = kp.reshape(*kp.shape[:-2], nc, chunk, kp.shape[-1])
+    vc = vp.reshape(*vp.shape[:-2], nc, chunk, vp.shape[-1])
+    # within-chunk causal part
+    scores = jnp.einsum("...cnd,...cmd->...cnm", qc, kc)
+    causal_mask = jnp.tril(jnp.ones((chunk, chunk), q.dtype))
+    intra = jnp.einsum("...cnm,...cme->...cne", scores * causal_mask, vc)
+    # inter-chunk: cumulative K^T V of all previous chunks
+    kv_chunks = jnp.einsum("...cnd,...cne->...cde", kc, vc)
+    kv_prefix = jnp.cumsum(kv_chunks, axis=-3) - kv_chunks  # exclusive
+    inter = jnp.einsum("...cnd,...cde->...cne", qc, kv_prefix)
+    out = (intra + inter).reshape(*qp.shape[:-2], qp.shape[-2], vp.shape[-1])
+    if pad:
+        out = out[..., :n, :]
+    return out * scale

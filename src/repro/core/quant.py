@@ -1,0 +1,107 @@
+"""Fixed-point / FP8 quantization + QAT (paper C1: "operator fusion and
+fixed-point quantization ... KD-based quantization-aware training").
+
+Fake-quant with straight-through estimator (STE): forward uses the quantized
+value, backward passes gradients unchanged. Supports
+  * symmetric fixed-point intN (per-tensor or per-channel scales) — the
+    paper's FPGA deployment format,
+  * fp8 (e4m3 / e5m2) — the precision row reported in paper Table III,
+and BN→conv operator fusion (paper Fig 2(b) "F&Q" stage).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    enabled: bool = False
+    mode: str = "int"          # "int" | "fp8_e4m3" | "fp8_e5m2"
+    bits: int = 8              # for "int" mode
+    per_channel: bool = True   # per-output-channel scale on weights
+    quantize_activations: bool = False
+    act_bits: int = 8
+
+
+def _ste(x: Array, xq: Array) -> Array:
+    """Straight-through estimator: forward xq, backward identity."""
+    return x + jax.lax.stop_gradient(xq - x)
+
+
+def quantize_fixed(x: Array, bits: int = 8, axis: Optional[int] = None) -> Array:
+    """Symmetric fixed-point fake-quant. ``axis`` = per-channel scale axis."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        amax = jnp.max(jnp.abs(x), axis=tuple(i for i in range(x.ndim) if i != axis),
+                       keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    return _ste(x, q * scale)
+
+
+def quantize_fp8(x: Array, variant: str = "e4m3") -> Array:
+    dt = jnp.float8_e4m3fn if variant == "e4m3" else jnp.float8_e5m2
+    xq = x.astype(dt).astype(x.dtype)
+    return _ste(x, xq)
+
+
+def fake_quant(x: Array, cfg: QuantConfig, *, is_weight: bool = True) -> Array:
+    """Apply the configured fake-quant. No-op when disabled."""
+    if not cfg.enabled:
+        return x
+    if not is_weight and not cfg.quantize_activations:
+        return x
+    if cfg.mode == "int":
+        bits = cfg.bits if is_weight else cfg.act_bits
+        axis = 0 if (is_weight and cfg.per_channel and x.ndim >= 2) else None
+        return quantize_fixed(x, bits, axis)
+    if cfg.mode.startswith("fp8"):
+        return quantize_fp8(x, cfg.mode.split("_")[1])
+    raise ValueError(f"unknown quant mode {cfg.mode!r}")
+
+
+def fuse_bn_into_conv(w: Array, b: Optional[Array], bn_gamma: Array,
+                      bn_beta: Array, bn_mean: Array, bn_var: Array,
+                      eps: float = 1e-5) -> tuple[Array, Array]:
+    """Operator fusion (paper Fig 2(b)): fold BN statistics into conv weights.
+
+    ``w`` has output channels on the LAST axis (HWIO, matching
+    lax.conv_general_dilated with dimension_numbers NHWC/HWIO).
+    """
+    inv_std = bn_gamma / jnp.sqrt(bn_var + eps)
+    w_fused = w * inv_std  # broadcasts over trailing (output-channel) axis
+    b0 = b if b is not None else jnp.zeros_like(bn_mean)
+    b_fused = (b0 - bn_mean) * inv_std + bn_beta
+    return w_fused, b_fused
+
+
+def fuse_bn_into_linear(w: Array, b: Optional[Array], bn_gamma: Array,
+                        bn_beta: Array, bn_mean: Array, bn_var: Array,
+                        eps: float = 1e-5) -> tuple[Array, Array]:
+    """Fold a BN that FOLLOWS a linear layer: y = gamma*(xW+b-mean)/std + beta."""
+    inv_std = bn_gamma / jnp.sqrt(bn_var + eps)
+    w_fused = w * inv_std[None, :]
+    b0 = b if b is not None else jnp.zeros_like(bn_mean)
+    b_fused = (b0 - bn_mean) * inv_std + bn_beta
+    return w_fused, b_fused
+
+
+def quantize_tree(params, cfg: QuantConfig):
+    """Fake-quant every floating leaf of a parameter pytree (QAT forward)."""
+    if not cfg.enabled:
+        return params
+
+    def q(x):
+        if isinstance(x, jax.Array) and jnp.issubdtype(x.dtype, jnp.floating):
+            return fake_quant(x, cfg, is_weight=True)
+        return x
+
+    return jax.tree_util.tree_map(q, params)

@@ -1,0 +1,70 @@
+"""Surrogate-gradient spike functions (paper §III.B: surrogate-gradient training).
+
+Forward is the exact Heaviside step H(v - v_th); backward substitutes a smooth
+pseudo-derivative so single-timestep SNNs train with plain backprop — the
+enabler for the paper's KD framework (C1).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_SURROGATES: dict[str, Callable[[Array, float], Array]] = {}
+
+
+def _register(name: str):
+    def deco(fn):
+        _SURROGATES[name] = fn
+        return fn
+    return deco
+
+
+@_register("atan")
+def _atan_grad(v: Array, alpha: float) -> Array:
+    # SpikingJelly default: d/dv [ 1/pi * atan(pi/2 * alpha * v) + 1/2 ]
+    return alpha / (2.0 * (1.0 + (math.pi / 2.0 * alpha * v) ** 2))
+
+
+@_register("sigmoid")
+def _sigmoid_grad(v: Array, alpha: float) -> Array:
+    s = jax.nn.sigmoid(alpha * v)
+    return alpha * s * (1.0 - s)
+
+
+@_register("triangle")
+def _triangle_grad(v: Array, alpha: float) -> Array:
+    # Esser et al. piecewise-linear window; support |v| < 1/alpha
+    return jnp.maximum(0.0, alpha - alpha * alpha * jnp.abs(v)) / alpha * alpha
+
+
+@_register("rect")
+def _rect_grad(v: Array, alpha: float) -> Array:
+    return jnp.where(jnp.abs(v) < 0.5 / alpha, alpha, 0.0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def spike(v_minus_vth: Array, surrogate: str = "atan", alpha: float = 2.0) -> Array:
+    """Heaviside spike with surrogate gradient. Output is {0,1} in v's dtype."""
+    return (v_minus_vth >= 0).astype(v_minus_vth.dtype)
+
+
+def _spike_fwd(v, surrogate, alpha):
+    return spike(v, surrogate, alpha), v
+
+
+def _spike_bwd(surrogate, alpha, v, g):
+    grad_fn = _SURROGATES[surrogate]
+    return (g * grad_fn(v, alpha).astype(g.dtype),)
+
+
+spike.defvjp(_spike_fwd, _spike_bwd)
+
+
+def available_surrogates() -> tuple[str, ...]:
+    return tuple(_SURROGATES)

@@ -1,0 +1,120 @@
+"""W2TTFS — Window-to-Time-to-First-Spike (paper C2, Algorithm 1, Fig 6).
+
+Average pooling on binary spike maps breaks full-spike execution: its output
+is continuous (k/window^2). W2TTFS re-expresses each pooling window as a
+ONE-HOT SPIKE over ``window^2 + 1`` virtual timesteps — the window's spike
+count ``vld_cnt`` selects the firing time — and the classifier weights are
+scaled by ``t / window^2`` at time t. The classifier therefore consumes only
+binary spikes.
+
+Three implementations, proven equivalent in tests:
+  * ``w2ttfs_reference``      — Algorithm 1 verbatim (explicit time expansion),
+  * ``w2ttfs_classifier``     — NEURAL's optimized WTFC: count -> unit scale
+                                (1/window^2) with *time reuse* (repeat the unit
+                                accumulation vld_cnt times; no divider),
+  * plain ``avg_pool + FC``   — the ANN op being replaced; identical numerics
+                                on binary inputs, which is WHY accuracy is
+                                preserved (paper Fig 8 "W2TTFS" bars).
+
+Layout: NHWC (TPU-friendly). ``spike_map``: [B, H, W, C] binary.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def window_counts(spike_map: Array, window: int) -> Array:
+    """vld_cnt per pooling window (the TTFS Filter in Fig 6).
+
+    [B, H, W, C] -> [B, H//window, W//window, C] integer spike counts.
+    """
+    b, h, w, c = spike_map.shape
+    ho, wo = h // window, w // window
+    x = spike_map.reshape(b, ho, window, wo, window, c)
+    return x.sum(axis=(2, 4))
+
+
+def w2ttfs_expand(spike_map: Array, window: int) -> Array:
+    """Algorithm 1 lines 4-16: one-hot spike train over window^2+1 timesteps.
+
+    Returns [T=window^2+1, B, Ho, Wo, C] binary array where slice t has a
+    spike exactly where the window's vld_cnt == t. (Algorithm 1 sizes the
+    array ``window^2``; we use window^2+1 so a fully-active window — vld_cnt
+    == window^2 — is representable. The paper's Verilog counts to the same
+    bound; the pseudo-code elides the +1.)
+    """
+    cnt = window_counts(spike_map, window)  # [B, Ho, Wo, C]
+    t_axis = jnp.arange(window * window + 1)
+    onehot = (cnt[None, ...] == t_axis[:, None, None, None, None])
+    return onehot.astype(spike_map.dtype)
+
+
+def w2ttfs_reference(spike_map: Array, fc_w: Array, fc_b: Array,
+                     window: int) -> Array:
+    """Algorithm 1 verbatim: classifier over the expanded spike train.
+
+    Lines 17-20: at virtual timestep t the FC weights are scaled by
+    ``t / window^2``; the logits are the sum over timesteps. ``fc_w``:
+    [Ho*Wo*C, num_classes].
+    """
+    expanded = w2ttfs_expand(spike_map, window)       # [T, B, Ho, Wo, C]
+    t, b = expanded.shape[0], expanded.shape[1]
+    flat = expanded.reshape(t, b, -1)
+    scales = jnp.arange(t, dtype=fc_w.dtype) / float(window * window)
+
+    def step(acc, xs):
+        spikes_t, scale_t = xs
+        return acc + (spikes_t @ fc_w) * scale_t, None
+
+    init = jnp.zeros((b, fc_w.shape[1]), fc_w.dtype)
+    logits, _ = jax.lax.scan(step, init, (flat, scales))
+    return logits + fc_b
+
+
+def w2ttfs_classifier(spike_map: Array, fc_w: Array, fc_b: Array,
+                      window: int) -> Array:
+    """NEURAL's optimized WTFC (Fig 6): vld_cnt * unit-scale FC.
+
+    The scale no longer depends on the spike position: it is uniformly
+    1/window^2, and a count of k is realized by REUSING the unit accumulation
+    k times (paper §IV.D) — i.e. logits = (counts @ W) * (1/window^2). No
+    multiplier or divider is needed in hardware; here the algebraic identity
+    gives one small matmul.
+    """
+    cnt = window_counts(spike_map, window).astype(fc_w.dtype)  # [B,Ho,Wo,C]
+    b = cnt.shape[0]
+    unit = 1.0 / float(window * window)
+    return (cnt.reshape(b, -1) @ fc_w) * unit + fc_b
+
+
+def w2ttfs_time_reuse(spike_map: Array, fc_w: Array, fc_b: Array,
+                      window: int) -> Array:
+    """Bit-exact emulation of the time-reuse datapath: at micro-step u the FC
+    accumulates ``unit * [vld_cnt > u]`` — i.e. the unit contribution is
+    replayed vld_cnt times per window. Used by tests to show the hardware
+    trick equals the algebraic form.
+    """
+    cnt = window_counts(spike_map, window)  # [B, Ho, Wo, C]
+    b = cnt.shape[0]
+    flat_cnt = cnt.reshape(b, -1)
+    unit = 1.0 / float(window * window)
+
+    def step(acc, u):
+        active = (flat_cnt > u).astype(fc_w.dtype)   # windows still replaying
+        return acc + (active @ fc_w) * unit, None
+
+    init = jnp.zeros((b, fc_w.shape[1]), fc_w.dtype)
+    logits, _ = jax.lax.scan(step, init, jnp.arange(window * window))
+    return logits + fc_b
+
+
+def avgpool_classifier(x: Array, fc_w: Array, fc_b: Array, window: int) -> Array:
+    """The ANN head W2TTFS replaces: avg-pool then FC. On binary inputs this
+    is numerically identical to the W2TTFS head (equivalence tested)."""
+    b, h, w, c = x.shape
+    ho, wo = h // window, w // window
+    pooled = x.reshape(b, ho, window, wo, window, c).mean(axis=(2, 4))
+    return pooled.reshape(b, -1).astype(fc_w.dtype) @ fc_w + fc_b

@@ -1,0 +1,3 @@
+from .synthetic import (SyntheticTokenDataset, SyntheticImageDataset,
+                        token_batches, image_batches)
+from .loader import ShardedLoader, shard_batch

@@ -1,0 +1,59 @@
+"""Host-sharded batch loading: numpy on host -> globally-sharded jax.Array.
+
+On a real multi-host pod each process builds only ITS shard
+(``jax.make_array_from_process_local_data``); in this single-process
+container the same API degrades to a device_put with the target sharding.
+The shard-index plumbing is what the elastic runtime re-wires on failure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.sharding import dp_axes
+
+
+def shard_batch(batch: Any, mesh: Mesh) -> Any:
+    """numpy pytree -> jax.Array pytree sharded (batch dim over DP axes)."""
+    dp = dp_axes(mesh)
+
+    def put(x):
+        x = np.asarray(x)
+        spec = [None] * x.ndim
+        if x.ndim:
+            spec[0] = dp
+        sh = NamedSharding(mesh, P(*spec))
+        if jax.process_count() > 1:
+            return jax.make_array_from_process_local_data(sh, x)
+        return jax.device_put(x, sh)
+
+    return jax.tree_util.tree_map(put, batch)
+
+
+@dataclasses.dataclass
+class ShardedLoader:
+    """Deterministic per-step loader with elastic shard re-assignment.
+
+    ``shard_of_host`` maps this host to its data shard; after a pod failure
+    the elastic runtime calls ``reassign`` with the surviving host set and
+    every batch from then on is drawn from the remapped shard — the same
+    (step, shard) pairs always produce the same data (replay-safe).
+    """
+    make_np_batch: Callable[[int, int, int, int], Any]  # (step, bs, shard, n)
+    global_batch: int
+    mesh: Mesh
+    n_shards: int = 1
+    shard: int = 0
+
+    def reassign(self, shard: int, n_shards: int) -> None:
+        self.shard = shard
+        self.n_shards = n_shards
+
+    def __call__(self, step: int) -> Any:
+        np_batch = self.make_np_batch(step, self.global_batch, self.shard,
+                                      self.n_shards)
+        return shard_batch(np_batch, self.mesh)

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel lives in its own subpackage with the mandated trio:
+  <name>/<name>.py — pl.pallas_call + explicit BlockSpec VMEM tiling
+  <name>/ops.py    — jit'd public wrapper (padding, count-map plumbing,
+                     interpret=True on CPU so tests validate the kernel body)
+  <name>/ref.py    — pure-jnp oracle the tests assert against
+
+Kernels (mapped from the paper's FPGA units in DESIGN.md §6):
+  spike_matmul    — event-driven matmul: int8 spike activations, per-block
+                    vld_cnt skip (@pl.when) = PipeSDA + PE event FIFO (C3)
+  qk_attention    — fused on-the-fly QKFormer token attention in the
+                    write-back path (C4)
+  w2ttfs_pool     — window spike-count + unit-scale FC head = WTFC core (C2)
+  lif_update      — fused LIF membrane update/threshold/reset (C3 neuron)
+  flash_attention — VMEM-resident causal softmax attention (forward):
+                    built because §Perf cell F measured the jnp-level flash
+                    path spilling f32 score tiles to HBM (~20 s/step of the
+                    qwen1.5-32b prefill_32k memory term)
+"""

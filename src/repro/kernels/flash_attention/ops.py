@@ -1,0 +1,43 @@
+"""Public wrapper: [B,S,H,D] GQA-aware dispatch to the flash kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("q_block", "kv_block", "causal",
+                                             "interpret"))
+def flash_attention(q: Array, k: Array, v: Array, *, q_block: int = 512,
+                    kv_block: int = 512, causal: bool = True,
+                    interpret: bool | None = None) -> Array:
+    """q: [B,S,H,D]; k,v: [B,S,Hkv,D] (GQA: Hkv divides H). -> [B,S,H,D]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    if hkv != h:
+        k = jnp.repeat(k, h // hkv, axis=2)
+        v = jnp.repeat(v, h // hkv, axis=2)
+    scale = d ** -0.5
+    qb = min(q_block, s)
+    kb = min(kv_block, s)
+    pad = (-s) % max(qb, kb)
+    if pad:
+        # pad tail is masked out by causality (pad k_pos > every real q_pos)
+        assert causal, "non-causal flash requires block-divisible seq"
+        zq = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        q, k, v = (jnp.pad(t, zq) for t in (q, k, v))
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, q.shape[1], d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, k.shape[1], d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, v.shape[1], d)
+    out = flash_attention_pallas(qf, kf, vf, q_block=qb, kv_block=kb,
+                                 causal=causal, scale=scale,
+                                 interpret=interpret)
+    out = out.reshape(b, h, q.shape[1], d).transpose(0, 2, 1, 3)
+    return out[:, :s]

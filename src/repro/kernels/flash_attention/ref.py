@@ -1,0 +1,19 @@
+"""Oracle: naive masked softmax attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True,
+                        scale: float = 1.0) -> jax.Array:
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        n = q.shape[1]
+        mask = jnp.tril(jnp.ones((n, k.shape[1]), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

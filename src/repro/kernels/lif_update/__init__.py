@@ -1,0 +1,2 @@
+from .ops import lif_update
+from .ref import lif_update_ref

@@ -1,0 +1,41 @@
+"""Public wrapper: shape-flattening + padding for the fused LIF update."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .lif_update import lif_update_pallas
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "v_th", "soft_reset",
+                                             "block", "interpret"))
+def lif_update(current: Array, v_prev: Array, s_prev: Array, *,
+               tau: float = 0.5, v_th: float = 1.0, soft_reset: bool = False,
+               block: int = 256, interpret: bool | None = None
+               ) -> tuple[Array, Array]:
+    """Fused LIF step over arbitrarily-shaped tensors.
+
+    Returns (spikes int8, v_next f32) with the input shape.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    shape = current.shape
+    d = shape[-1]
+    x = current.reshape(-1, d)
+    v = v_prev.reshape(-1, d)
+    s = s_prev.reshape(-1, d)
+    m = x.shape[0]
+    bb = min(block, m)
+    pad = (-m) % bb
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, pad), (0, 0)))
+        s = jnp.pad(s, ((0, pad), (0, 0)))
+    spk, vn = lif_update_pallas(x, v, s, tau=tau, v_th=v_th,
+                                soft_reset=soft_reset, block=bb,
+                                interpret=interpret)
+    return spk[:m].reshape(shape), vn[:m].reshape(shape)

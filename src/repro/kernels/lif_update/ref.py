@@ -1,0 +1,18 @@
+"""Oracle: the discrete LIF step from core.lif (inference form)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lif_update_ref(current: jax.Array, v_prev: jax.Array, s_prev: jax.Array,
+                   tau: float = 0.5, v_th: float = 1.0,
+                   soft_reset: bool = False) -> tuple[jax.Array, jax.Array]:
+    v = tau * v_prev.astype(jnp.float32) * (1.0 - s_prev.astype(jnp.float32)) \
+        + current.astype(jnp.float32)
+    spk = (v >= v_th)
+    if soft_reset:
+        v_next = v - v_th * spk.astype(jnp.float32)
+    else:
+        v_next = v * (1.0 - spk.astype(jnp.float32))
+    return spk.astype(jnp.int8), v_next

@@ -1,0 +1,2 @@
+from .ops import qk_attention_fused
+from .ref import qk_attention_ref

@@ -1,0 +1,34 @@
+"""Public wrapper for the fused QKFormer write-back attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .qk_attention import qk_attention_pallas
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "threshold",
+                                             "interpret"))
+def qk_attention_fused(q: Array, k: Array, *, block_n: int = 256,
+                       threshold: float = 1.0,
+                       interpret: bool | None = None) -> Array:
+    """Batched fused QKTA. q,k: [..., N, D] spikes -> masked K [..., N, D]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    shape = q.shape
+    n, d = shape[-2], shape[-1]
+    bn = min(block_n, n)
+    pad = (-n) % bn
+    q2 = q.reshape(-1, n, d)
+    k2 = k.reshape(-1, n, d)
+    if pad:
+        q2 = jnp.pad(q2, ((0, 0), (0, pad), (0, 0)))
+        k2 = jnp.pad(k2, ((0, 0), (0, pad), (0, 0)))
+    fn = functools.partial(qk_attention_pallas, block_n=bn,
+                           threshold=threshold, interpret=interpret)
+    out = jax.vmap(fn)(q2, k2)[:, :n, :]
+    return out.reshape(shape).astype(k.dtype)

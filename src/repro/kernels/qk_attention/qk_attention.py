@@ -1,0 +1,60 @@
+"""Fused on-the-fly QKFormer token attention (paper C4, Fig 5).
+
+NEURAL folds the QK token attention into the PE->Spiking-Buffer write-back
+path: as K spikes are produced, the attention register (built from Q's row
+sums) gates them — no score matrix, no dedicated attention unit. The TPU
+analogue is ONE kernel that, per (token-block, channel-block):
+
+  1. reduces the Q spike block along channels (Row Summation, Fig 5 (2)) —
+     accumulated across channel blocks in a VMEM scratch accumulator,
+  2. thresholds it into the token mask (atten_reg),
+  3. applies the mask to the K block as it is written back (Fig 5 (4)).
+
+One HBM pass over Q and K, O(N*D) work, fp32 score accumulation in VMEM.
+Grid: (tokens/bn) outer x (channels/bd) inner; the channel axis must be the
+inner (fastest) axis so the row-sum accumulator for a token block is
+complete before the mask is applied on the LAST channel step — the mask is
+therefore applied in the same kernel invocation sweep (write-back fusion),
+with K blocks revisited in the second sweep of the d-grid.
+
+To keep a single pass (the hardware really does one), we instead compute the
+FULL row sum per token block by reading Q[block, :] with a wide BlockSpec
+(tokens x D fits VMEM for D <= 8192 at bn=256) — matching the atten_reg,
+which also sees all channels of a token before K write-back.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _kernel(q_ref, k_ref, o_ref, *, threshold: float):
+    q = q_ref[...].astype(jnp.float32)            # [bn, D] spike block
+    rowsum = q.sum(axis=1, keepdims=True)         # Row Summation (Fig 5 (2))
+    mask = (rowsum >= threshold).astype(jnp.float32)   # atten_reg
+    o_ref[...] = (mask * k_ref[...].astype(jnp.float32)
+                  ).astype(o_ref.dtype)           # QK token mask (Fig 5 (4))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "threshold",
+                                             "interpret"))
+def qk_attention_pallas(q: Array, k: Array, *, block_n: int = 256,
+                        threshold: float = 1.0,
+                        interpret: bool = False) -> Array:
+    """q, k: [N, D] binary spikes -> masked K [N, D] (k's dtype)."""
+    n, d = q.shape
+    assert k.shape == (n, d) and n % block_n == 0
+    return pl.pallas_call(
+        functools.partial(_kernel, threshold=threshold),
+        grid=(n // block_n,),
+        in_specs=[pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+                  pl.BlockSpec((block_n, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), k.dtype),
+        interpret=interpret,
+    )(q, k)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle: QKFormer token attention (inference form, no surrogate)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qk_attention_ref(q: jax.Array, k: jax.Array,
+                     threshold: float = 1.0) -> jax.Array:
+    rowsum = q.astype(jnp.float32).sum(axis=-1, keepdims=True)
+    mask = (rowsum >= threshold).astype(k.dtype)
+    return mask * k

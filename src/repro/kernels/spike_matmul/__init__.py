@@ -1,0 +1,2 @@
+from .ops import spike_matmul
+from .ref import spike_matmul_ref

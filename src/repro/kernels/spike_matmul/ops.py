@@ -1,0 +1,47 @@
+"""Public wrapper: padding + vld_cnt (PipeSDA analogue) + kernel dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.events import block_count_map_2d, pad_to_blocks
+from .spike_matmul import spike_matmul_pallas
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def spike_matmul(x: Array, w: Array, *, block_m: int = 128,
+                 block_n: int = 128, block_k: int = 128,
+                 interpret: bool | None = None) -> Array:
+    """Event-driven spike matmul. x: [M,K] {0,1} (any dtype); w: [K,N].
+
+    Pads to block multiples, computes the per-block event-count map (the
+    PipeSDA routing metadata), and invokes the Pallas kernel. On CPU the
+    kernel body runs in interpret mode (used by the allclose tests).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    m0, k0 = x.shape
+    n0 = w.shape[1]
+    xi = pad_to_blocks(x.astype(jnp.int8), block_m, block_k)
+    wp = pad_to_blocks(w, block_k, block_n)
+    vld = block_count_map_2d(xi, block_m, block_k)
+    out = spike_matmul_pallas(xi, wp, vld, block_m=block_m, block_n=block_n,
+                              block_k=block_k, interpret=interpret)
+    return out[:m0, :n0]
+
+
+def block_sparsity(x: Array, block_m: int = 128, block_k: int = 128) -> Array:
+    """Fraction of SKIPPED (all-silent) blocks — the FLOPs saved by the
+    event path on this input (reported by Table II/III benchmarks)."""
+    xi = pad_to_blocks(x.astype(jnp.int8), block_m, block_k)
+    vld = block_count_map_2d(xi, block_m, block_k)
+    return jnp.mean((vld == 0).astype(jnp.float32))

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the event-driven spike matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spike_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Dense reference: exact f32 matmul of binary spikes x weights.
+
+    The event-skip in the kernel is EXACT (skipped blocks are all-zero, and
+    0 @ w == 0), so the kernel must match this dense product bit-for-bit in
+    f32 accumulation."""
+    return x.astype(jnp.float32) @ w.astype(jnp.float32)

@@ -1,0 +1,74 @@
+"""Event-driven spike matmul kernel (paper C3 adapted to the MXU).
+
+The FPGA design gates single MACs on spike events; a systolic MXU cannot —
+the granularity that pays on TPU is the VMEM BLOCK. PipeSDA's event lists
+become a per-(m,k)-tile spike-count map ``vld_cnt`` (computed once, scalar-
+prefetched into SMEM); ``@pl.when(vld_cnt > 0)`` then skips the whole
+block: no VMEM->MXU issue, no FLOPs, for silent tiles. The elastic-FIFO
+data-driven outer level is the Pallas grid itself (blocks stream through
+VMEM as operands become resident).
+
+  x  : [M, K] int8  spikes (0/1)           — activations
+  w  : [K, N] bf16/f32 weights
+  out: [M, N] f32 = x @ w, accumulated over the K grid axis
+
+Block shapes default to MXU-aligned (128, 128, 128); the count map has one
+scalar per (M-block, K-block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _kernel(vld_ref, x_ref, w_ref, o_ref):
+    i = pl.program_id(0)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    cnt = vld_ref[i, k]
+
+    @pl.when(cnt > 0)                    # event skip: silent block -> no MXU
+    def _accum():
+        x = x_ref[...].astype(jnp.float32)
+        w = w_ref[...].astype(jnp.float32)
+        o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_n", "block_k",
+                                    "interpret"))
+def spike_matmul_pallas(x: Array, w: Array, vld_cnt: Array, *,
+                        block_m: int = 128, block_n: int = 128,
+                        block_k: int = 128, interpret: bool = False) -> Array:
+    """x: [M,K] int8; w: [K,N]; vld_cnt: [M/bm, K/bk] int32 block counts."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and m % block_m == 0 and k % block_k == 0 and n % block_n == 0
+
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                # index maps receive the prefetched scalar ref as a trailing arg
+                pl.BlockSpec((block_m, block_k), lambda i, j, kk, vld: (i, kk)),
+                pl.BlockSpec((block_k, block_n), lambda i, j, kk, vld: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((block_m, block_n),
+                                   lambda i, j, kk, vld: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(vld_cnt, x, w)

@@ -1,0 +1,2 @@
+from .ops import w2ttfs_pool_fc
+from .ref import w2ttfs_pool_fc_ref

@@ -1,0 +1,26 @@
+"""Public wrapper for the fused W2TTFS pooling + FC head."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .w2ttfs_pool import w2ttfs_pool_pallas
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_b", "interpret"))
+def w2ttfs_pool_fc(spikes: Array, fc_w: Array, fc_b: Array, *, window: int,
+                   block_b: int = 8, interpret: bool | None = None) -> Array:
+    """spikes: [B,H,W,C]; fc_w: [Ho*Wo*C, classes]. Returns [B, classes]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b = spikes.shape[0]
+    bb = min(block_b, b)
+    pad = (-b) % bb
+    x = jnp.pad(spikes, ((0, pad), (0, 0), (0, 0), (0, 0))) if pad else spikes
+    out = w2ttfs_pool_pallas(x, fc_w, fc_b, window=window, block_b=bb,
+                             interpret=interpret)
+    return out[:b]

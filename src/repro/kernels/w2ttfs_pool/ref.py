@@ -1,0 +1,11 @@
+"""Oracle: the W2TTFS classifier head (core.w2ttfs optimized form)."""
+from __future__ import annotations
+
+import jax
+
+from ...core.w2ttfs import w2ttfs_classifier
+
+
+def w2ttfs_pool_fc_ref(spikes: jax.Array, fc_w: jax.Array, fc_b: jax.Array,
+                       window: int) -> jax.Array:
+    return w2ttfs_classifier(spikes, fc_w, fc_b, window)

@@ -1,0 +1,58 @@
+"""Fused WTFC core (paper C2, Fig 6): TTFS Filter + FC in one kernel.
+
+The TTFS Filter counts valid spikes per pooling window (vld_cnt); NEURAL's
+fine-grained optimization replaces the position-dependent t/window^2 scale by
+the UNIT scale 1/window^2 applied vld_cnt times (time reuse) — algebraically
+``logits = (counts @ W) / window^2``. The fusion win on TPU: the spike map is
+read from HBM exactly once; counting, scaling and the FC matmul all happen
+in VMEM (three HBM round-trips in the naive pipeline -> one).
+
+  spikes: [B, H, W, C] binary  (H = W = window * Ho grid)
+  fc_w  : [Ho*Wo*C, classes], fc_b: [classes]
+  out   : [B, classes] f32
+
+Grid: one program per batch block; the whole per-image window-count tensor
+(Ho*Wo*C) and the FC weight block stay resident in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, window: int):
+    x = x_ref[...].astype(jnp.float32)               # [bb, H, W, C]
+    bb, h, w, c = x.shape
+    ho, wo = h // window, w // window
+    # TTFS Filter: spike count per pooling window
+    cnt = x.reshape(bb, ho, window, wo, window, c).sum(axis=(2, 4))
+    flat = cnt.reshape(bb, ho * wo * c)
+    unit = 1.0 / float(window * window)              # unit scale (time reuse)
+    logits = jnp.dot(flat, w_ref[...].astype(jnp.float32),
+                     preferred_element_type=jnp.float32) * unit
+    o_ref[...] = logits + b_ref[...].astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_b", "interpret"))
+def w2ttfs_pool_pallas(spikes: Array, fc_w: Array, fc_b: Array, *,
+                       window: int, block_b: int = 8,
+                       interpret: bool = False) -> Array:
+    b, h, w, c = spikes.shape
+    ho, wo = h // window, w // window
+    n_cls = fc_w.shape[1]
+    assert fc_w.shape[0] == ho * wo * c and b % block_b == 0
+    return pl.pallas_call(
+        functools.partial(_kernel, window=window),
+        grid=(b // block_b,),
+        in_specs=[pl.BlockSpec((block_b, h, w, c), lambda i: (i, 0, 0, 0)),
+                  pl.BlockSpec((ho * wo * c, n_cls), lambda i: (0, 0)),
+                  pl.BlockSpec((n_cls,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_b, n_cls), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_cls), jnp.float32),
+        interpret=interpret,
+    )(spikes, fc_w, fc_b)

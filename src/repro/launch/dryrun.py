@@ -1,0 +1,295 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is how the distribution config is proven coherent without hardware:
+``jit(step).lower(**ShapeDtypeStructs).compile()`` against the production
+mesh forces GSPMD to resolve every sharding, insert every collective, and
+plan per-device buffers. Failures here (sharding mismatch, OOM at compile,
+unsupported collective) are bugs in the system.
+
+Per cell we record to JSON:
+  * compiled.memory_analysis()  — per-device bytes (proves it fits)
+  * compiled.cost_analysis()    — XLA's flops/bytes (while bodies counted 1x)
+  * hlo_analysis.analyze()      — trip-count-aware flops / bytes / collective
+                                  wire-bytes parsed from compiled.as_text()
+  * analytic MODEL_FLOPS (6*N_active*D train / 2*N_active*D inference)
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--outdir experiments/dryrun]
+``--all`` runs each cell in a FRESH subprocess (compile-state isolation) and
+skips cells whose JSON already exists.
+"""
+import argparse
+import dataclasses
+import json
+import math
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+DEFAULT_OUTDIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _cells(mesh_modes: list[str]):
+    from ..configs import ARCHS, cells_for
+    out = []
+    for name, cfg in ARCHS.items():
+        for shape in cells_for(cfg):
+            for mesh in mesh_modes:
+                out.append((name, shape, mesh))
+    return out
+
+
+# --------------------------------------------------------------- single cell
+def run_cell(arch: str, shape_name: str, mesh_mode: str, outdir: Path,
+             overrides: dict | None = None, tag: str = "",
+             microbatch: int = 0) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from ..configs import SHAPES, get_config, build_model
+    from ..models import sharding as shd
+    from ..optim import adamw_init, adamw_update, clip_by_global_norm
+    from . import hlo_analysis
+    from .mesh import make_production_mesh
+
+    t0 = time.time()
+    cfg = get_config(arch, **(overrides or {}))
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=(mesh_mode == "multi"))
+    shd.set_global_mesh(mesh)
+    shd.set_dp_includes_model(cfg.dp_over_model)
+    NS = lambda spec_tree: jax.tree_util.tree_map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))
+
+    specs = model.input_specs(shape)
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_shard = NS(shd.param_specs(params_shape, mesh))
+
+    with mesh:
+        if shape.kind == "train":
+            from ..optim.adamw import AdamWState
+            opt_shape = jax.eval_shape(adamw_init, params_shape)
+            z1 = shd.zero1_specs(params_shape, mesh)
+            o_shard = NS(AdamWState(step=jax.sharding.PartitionSpec(),
+                                    m=z1, v=z1))
+            b_shard = NS(shd.batch_specs(specs["batch"], mesh))
+
+            def train_step(params, opt_state, batch):
+                if microbatch and microbatch > 1:
+                    from ..train.trainer import _split_microbatches
+                    micro = _split_microbatches(batch, microbatch)
+                    # pin the accumulator to the PARAM sharding — otherwise
+                    # GSPMD propagates the optimizer's ZeRO-1 layout into the
+                    # loop and reshards the accumulator every microbatch
+                    pin = lambda t: jax.lax.with_sharding_constraint(t, p_shard)
+
+                    def body(acc, mb):
+                        (loss, metrics), grads = jax.value_and_grad(
+                            model.loss, has_aux=True)(params, mb)
+                        acc = jax.tree_util.tree_map(
+                            lambda a, g: a + g.astype(jnp.float32) / microbatch,
+                            acc, grads)
+                        return pin(acc), metrics
+
+                    zeros = pin(jax.tree_util.tree_map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+                    grads, metricss = jax.lax.scan(body, zeros, micro)
+                    metrics = jax.tree_util.tree_map(jnp.mean, metricss)
+                else:
+                    (loss, metrics), grads = jax.value_and_grad(
+                        model.loss, has_aux=True)(params, batch)
+                # barrier: stop XLA sinking the optimizer's f32 converts into
+                # the backward scan (f32 grad carries + f32 weight gathers)
+                grads = jax.lax.optimization_barrier(grads)
+                grads, gnorm = clip_by_global_norm(grads, 1.0)
+                new_p, new_o = adamw_update(grads, opt_state, params,
+                                            lr=3e-4, weight_decay=0.1)
+                metrics = dict(metrics, grad_norm=gnorm)
+                return new_p, new_o, metrics
+
+            met_shard = None
+            fn = jax.jit(train_step,
+                         in_shardings=(p_shard, o_shard, b_shard),
+                         out_shardings=(p_shard, o_shard, met_shard),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(params_shape, opt_shape, specs["batch"])
+        elif shape.kind == "prefill":
+            b_shard = NS(shd.batch_specs(specs["batch"], mesh))
+            fn = jax.jit(model.prefill, in_shardings=(p_shard, b_shard))
+            lowered = fn.lower(params_shape, specs["batch"])
+        else:  # decode
+            cache_shape = specs["cache"]
+            c_shard = NS(shd.cache_specs(
+                cache_shape, mesh, batch=shape.global_batch,
+                context_parallel=(shape.name == "long_500k"),
+                seq_axis=cfg.decode_cp_axis or None))
+            t_shard = NS(shd.batch_specs({"t": specs["tokens"]}, mesh))["t"]
+            fn = jax.jit(model.decode_step,
+                         in_shardings=(p_shard, t_shard, c_shard),
+                         out_shardings=(None, c_shard),
+                         donate_argnums=(2,))
+            lowered = fn.lower(params_shape, specs["tokens"], cache_shape)
+
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    if mem is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            mem_d[f] = getattr(mem, f, None)
+    ca = compiled.cost_analysis() or {}
+    ca_d = {k: v for k, v in ca.items()
+            if isinstance(v, (int, float)) and k in
+            ("flops", "bytes accessed", "transcendentals",
+             "utilization operand", "optimal_seconds")}
+
+    hlo_text = compiled.as_text()
+    hlo = hlo_analysis.analyze(hlo_text)
+    # keep the optimized HLO (gzip) so perf iterations can re-analyze
+    # without recompiling
+    import gzip
+    hlo_dir = outdir.parent / "hlo"
+    hlo_dir.mkdir(parents=True, exist_ok=True)
+    suffix0 = f"__{tag}" if tag else ""
+    (hlo_dir / f"{arch}__{shape_name}__{mesh_mode}{suffix0}.hlo.gz"
+     ).write_bytes(gzip.compress(hlo_text.encode()))
+
+    n_chips = math.prod(mesh.devices.shape)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_mode, "tag": tag,
+        "overrides": {k: str(v) for k, v in (overrides or {}).items()},
+        "n_chips": n_chips,
+        "mesh_shape": dict(zip(mesh.axis_names,
+                               mesh.devices.shape)),
+        "lower_s": round(t_lower - t0, 2),
+        "compile_s": round(t_compile - t_lower, 2),
+        "memory_analysis": mem_d,
+        "cost_analysis": ca_d,
+        "hlo": hlo,
+        "model_flops": analytic_model_flops(cfg, params_shape, shape),
+        "param_count": param_count(params_shape),
+        "active_param_count": active_param_count(cfg, params_shape),
+    }
+    outdir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = outdir / f"{arch}__{shape_name}__{mesh_mode}{suffix}.json"
+    path.write_text(json.dumps(result, indent=1))
+    print(f"[dryrun] OK {arch} {shape_name} {mesh_mode} "
+          f"lower={result['lower_s']}s compile={result['compile_s']}s "
+          f"-> {path}")
+    return result
+
+
+# ----------------------------------------------------------- analytic flops
+def param_count(params_shape) -> int:
+    import jax
+    return sum(math.prod(l.shape) for l in jax.tree_util.tree_leaves(params_shape))
+
+
+def active_param_count(cfg, params_shape) -> int:
+    """Non-embedding params, MoE experts scaled by top_k/n_experts."""
+    import jax
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shape)[0]:
+        ps = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path)
+        n = math.prod(leaf.shape)
+        if "emb" in ps:
+            continue
+        if any(w in ps for w in ("w_gate", "w_up", "w_down")):
+            n = n * cfg.top_k // max(cfg.n_experts, 1)
+        total += n
+    return total
+
+
+def analytic_model_flops(cfg, params_shape, shape) -> float:
+    """MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (inference),
+    GLOBAL (all chips). D = processed tokens."""
+    n = active_param_count(cfg, params_shape)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: 1 token per seq
+
+
+# ------------------------------------------------------------------- driver
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--outdir", type=Path, default=DEFAULT_OUTDIR)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="", help="result-file suffix (perf runs)")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg field override k=v (python literal)")
+    ap.add_argument("--microbatch", type=int, default=0)
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.list or args.all:
+        cells = _cells(meshes)
+    if args.list:
+        for c in cells:
+            print(*c)
+        return
+
+    if args.all:
+        failures = []
+        for arch, shape, mesh in cells:
+            suffix = f"__{args.tag}" if args.tag else ""
+            path = args.outdir / f"{arch}__{shape}__{mesh}{suffix}.json"
+            if path.exists() and not args.force:
+                print(f"[dryrun] skip (exists) {arch} {shape} {mesh}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh,
+                   "--outdir", str(args.outdir)]
+            if args.tag:
+                cmd += ["--tag", args.tag]
+            for ov in args.override:
+                cmd += ["--override", ov]
+            r = subprocess.run(cmd)
+            if r.returncode != 0:
+                failures.append((arch, shape, mesh))
+                print(f"[dryrun] FAIL {arch} {shape} {mesh}")
+        print(f"[dryrun] done; {len(failures)} failures: {failures}")
+        sys.exit(1 if failures else 0)
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        import ast
+        try:
+            overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            overrides[k] = v
+
+    try:
+        run_cell(args.arch, args.shape, args.mesh, args.outdir,
+                 overrides or None, args.tag, microbatch=args.microbatch)
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,416 @@
+"""Static analysis of optimized (post-SPMD) HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+but our models scan over layers — a 64-layer model's per-step FLOPs would be
+undercounted 64x. This module parses ``compiled.as_text()``, recovers the
+computation call graph (while bodies x trip count, fusion bodies x1), and
+produces trip-count-aware totals:
+
+  * flops             — 2*M*N*K summed over every dot (+conv approx)
+  * bytes             — HBM-traffic proxy: sum of (operands + result) sizes
+                        over materializing top-level ops (fusion internals
+                        excluded — they live in registers/VMEM)
+  * collectives       — per-op kind / wire-bytes / group size, using ring
+                        cost models (all-reduce moves 2(n-1)/n bytes, etc.)
+
+All shapes in a post-SPMD module are PER-DEVICE, so every number reported
+here is per-device per-step; the roofline layer divides by per-chip peak
+rates directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "s4": 1, "u4": 1, "f8e3m4": 1,
+    "f4e2m1fn": 1, "f8e8m0fnu": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^)]*\)|[\w\[\]\{\},]+)\s+"
+    r"([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_TRIP_RE = re.compile(r'known_trip_count[\\\"]*:\s*\{[\\\"]*n[\\\"]*:\s*[\\\"]*(\d+)')
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_ZERO_COST = {"parameter", "constant", "tuple", "get-tuple-element",
+              "bitcast", "after-all", "opt-barrier", "partition-id",
+              "replica-id", "iota", "while", "conditional", "reshape",
+              "transpose"}
+# ops that READ only a slice / write in place — counting their full operands
+# would overcount HBM traffic by the stacked-layer factor
+_SLICING_OPS = {"dynamic-slice", "gather", "slice"}
+_INPLACE_OPS = {"dynamic-update-slice", "scatter"}
+# unary elementwise ops chased through when resolving slice/DUS chains
+_UNARY_PASS = {"convert", "bitcast", "copy", "reshape", "transpose",
+               "negate"}
+
+
+def shape_dims(type_str: str) -> list[tuple[str, tuple[int, ...]]]:
+    """All (dtype, dims) arrays inside a (possibly tuple) type string."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def type_bytes(type_str: str) -> int:
+    return sum(_DTYPE_BYTES[dt] * math.prod(s) for dt, s in shape_dims(type_str))
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: list
+    sig_types: dict                 # param name -> type string
+    param_overrides: dict = dataclasses.field(default_factory=dict)
+    root_override: Optional[float] = None
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line or line.startswith(("HloModule", "//", "#")):
+            continue
+        if line == "}":
+            cur = None
+            continue
+        if "= " not in line.split("(")[0] and line.endswith("{"):
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                sig = {}
+                for part in m.group(3).split(","):
+                    if ":" in part:
+                        pname, ptype = part.split(":", 1)
+                        sig[pname.strip().lstrip("%")] = ptype.strip()
+                cur = Computation(m.group(2), bool(m.group(1)), [], sig)
+                comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            cur.instrs.append(Instr(m.group(1), m.group(2), m.group(3),
+                                    m.group(4),
+                                    is_root=line.startswith("ROOT ")))
+    return comps
+
+
+def _callee(rest: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w\.\-]+)", rest)
+    return m.group(1) if m else None
+
+
+def _trip_count(instr: Instr, comps: dict) -> int:
+    m = _TRIP_RE.search(instr.rest)
+    if m:
+        return int(m.group(1))
+    cond = _callee(instr.rest, "condition")
+    if cond and cond in comps:
+        consts = []
+        for i in comps[cond].instrs:
+            if i.opcode == "constant":
+                m = re.match(r"(\d+)\)", i.rest)
+                if m:
+                    consts.append(int(m.group(1)))
+        if consts:
+            return max(consts)
+    return 1
+
+
+def _multiplicities(comps: dict) -> tuple[dict, set]:
+    """Times each computation executes per step + the set of 'fused'
+    computations (fusion/to_apply bodies — no HBM traffic of their own)."""
+    mult: dict[str, float] = defaultdict(float)
+    fused: set[str] = set()
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return {}, set()
+    mult[entry.name] = 1.0
+    # topological-ish worklist
+    work = [entry.name]
+    seen_edges = set()
+    while work:
+        cname = work.pop()
+        comp = comps[cname]
+        base = mult[cname]
+        for ins in comp.instrs:
+            callees = []
+            if ins.opcode == "while":
+                body = _callee(ins.rest, "body")
+                cond = _callee(ins.rest, "condition")
+                t = _trip_count(ins, comps)
+                if body:
+                    callees.append((body, t, False))
+                if cond:
+                    callees.append((cond, t + 1, True))
+            else:
+                for key in ("calls", "to_apply"):
+                    cal = _callee(ins.rest, key)
+                    if cal:
+                        callees.append((cal, 1, True))
+            for cal, k, is_fused in callees:
+                if cal not in comps:
+                    continue
+                edge = (cname, cal, ins.name)
+                if edge in seen_edges:
+                    continue
+                seen_edges.add(edge)
+                mult[cal] += base * k
+                if is_fused and ins.opcode != "while":
+                    fused.add(cal)
+                work.append(cal)
+    return dict(mult), fused
+
+
+def _dot_flops(ins: Instr, name2type: dict) -> float:
+    out_elems = sum(math.prod(s) for _, s in shape_dims(ins.type_str))
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    ops = re.findall(r"%([\w\.\-]+)", ins.rest.split(")", 1)[0])
+    k = 1
+    if m and ops:
+        lhs_type = name2type.get(ops[0])
+        if lhs_type:
+            dims = shape_dims(lhs_type)
+            if dims:
+                shape = dims[0][1]
+                for d in (int(x) for x in m.group(1).split(",") if x):
+                    if d < len(shape):
+                        k *= shape[d]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(ins: Instr, name2type: dict) -> float:
+    out_elems = sum(math.prod(s) for _, s in shape_dims(ins.type_str))
+    ops = re.findall(r"%([\w\.\-]+)", ins.rest.split(")", 1)[0])
+    k = 1
+    if len(ops) >= 2:
+        rhs = name2type.get(ops[1])
+        if rhs:
+            dims = shape_dims(rhs)
+            if dims:
+                shape = dims[0][1]
+                # kernel = [..spatial.., Cin, Cout]-ish; divide out Cout≈last
+                k = max(1, math.prod(shape) // max(shape[-1], 1))
+    return 2.0 * out_elems * k
+
+
+def _collective_wire_bytes(kind: str, out_bytes: int, n: int) -> float:
+    """Per-device wire bytes under ring algorithms."""
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n * out_bytes
+    if kind == "all-gather":
+        return (n - 1) / n * out_bytes          # out is the gathered size
+    if kind == "reduce-scatter":
+        return (n - 1) * out_bytes              # out is the shard
+    if kind == "all-to-all":
+        return (n - 1) / n * out_bytes
+    return float(out_bytes)                     # collective-permute
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _operands(ins: Instr) -> list[str]:
+    return re.findall(r"%([\w\.\-]+)", ins.rest.split(")", 1)[0])
+
+
+def _param_read_overrides(comp: Computation) -> dict[int, float]:
+    """For a fusion body: parameters whose ONLY uses are slicing ops read
+    just the slices (not the full tensor); parameters consumed only as the
+    in-place target of dynamic-update-slice are aliased (0 read bytes).
+    Returns {param_index: bytes}."""
+    pidx: dict[str, int] = {}
+    uses: dict[str, list[Instr]] = defaultdict(list)
+    for ins in comp.instrs:
+        if ins.opcode == "parameter":
+            # rest is everything after "parameter(" — the index leads it
+            m = re.match(r"(\d+)\)", ins.rest)
+            if m:
+                pidx[ins.name] = int(m.group(1))
+        else:
+            for o in _operands(ins):
+                uses[o].append(ins)
+
+    def terminal_uses(name, depth=0):
+        """Chase through unary elementwise ops to the real consumers,
+        keeping track of which name reaches each consumer."""
+        outs = []
+        for u in uses.get(name, []):
+            if u.opcode in _UNARY_PASS and depth < 6:
+                outs.extend(terminal_uses(u.name, depth + 1))
+            else:
+                outs.append((u, name))
+        return outs
+
+    out: dict[int, float] = {}
+    for name, idx in pidx.items():
+        tus = terminal_uses(name)
+        if not tus:
+            continue
+        if all(u.opcode in _SLICING_OPS for u, _ in tus):
+            out[idx] = float(sum(type_bytes(u.type_str) for u, _ in tus))
+        elif all(u.opcode == "dynamic-update-slice"
+                 and _operands(u) and _operands(u)[0] == via
+                 for u, via in tus):
+            out[idx] = 0.0                    # aliased in-place target
+    return out
+
+
+def _root_write_override(comp: Computation) -> Optional[float]:
+    """If a fusion's root is (a unary-elementwise chain over) a
+    dynamic-update-slice, the write traffic is the UPDATE size, not the
+    whole (aliased) output buffer."""
+    local_types = dict(comp.sig_types)
+    defs: dict[str, Instr] = {}
+    root: Optional[Instr] = None
+    for ins in comp.instrs:
+        local_types[ins.name] = ins.type_str
+        defs[ins.name] = ins
+        if ins.is_root:
+            root = ins
+    if root is None:
+        return None
+    r = root
+    hops = 0
+    while r.opcode in _UNARY_PASS and hops < 6:
+        ops = _operands(r)
+        if not ops or ops[0] not in defs:
+            return None
+        r = defs[ops[0]]
+        hops += 1
+    if r.opcode == "dynamic-update-slice":
+        ops = _operands(r)
+        if len(ops) >= 2 and ops[1] in local_types:
+            return float(type_bytes(local_types[ops[1]]))
+        return 0.0
+    return None
+
+
+def _instr_bytes(ins: Instr, name2type: dict, comps: dict) -> float:
+    """HBM-traffic estimate for one top-level instruction."""
+    op = ins.opcode
+    out_b = type_bytes(ins.type_str)
+    if op in _SLICING_OPS:
+        return 2.0 * out_b                   # read slice + write result
+    if op in _INPLACE_OPS:
+        ops = _operands(ins)
+        upd = ops[-1] if ops else None       # updates = last operand
+        ub = type_bytes(name2type.get(upd, "")) if upd else out_b
+        return 2.0 * ub                      # read update + write in place
+    if op == "broadcast":
+        return float(out_b)
+    b = float(out_b)
+    overrides: dict[int, float] = {}
+    if op == "fusion":
+        cal = _callee(ins.rest, "calls")
+        if cal and cal in comps:
+            overrides = comps[cal].param_overrides
+            if comps[cal].root_override is not None:
+                b = comps[cal].root_override     # DUS root: write update only
+    for i, opnd in enumerate(_operands(ins)):
+        if i in overrides:
+            b += overrides[i]
+        else:
+            t = name2type.get(opnd)
+            if t:
+                b += type_bytes(t)
+    return b
+
+
+def analyze(text: str, *, default_group: int = 1) -> dict:
+    """Full analysis -> dict with flops/bytes/collective totals + breakdown."""
+    comps = parse_hlo(text)
+    mult, fused = _multiplicities(comps)
+    for comp in comps.values():              # precompute slice-read overrides
+        comp.param_overrides = _param_read_overrides(comp)
+        comp.root_override = _root_write_override(comp)
+    flops = 0.0
+    bytes_accessed = 0.0
+    coll_raw = 0.0
+    coll_wire = 0.0
+    per_coll: dict[str, dict] = defaultdict(
+        lambda: {"count": 0.0, "bytes": 0.0, "wire_bytes": 0.0})
+    per_comp_flops: dict[str, float] = defaultdict(float)
+
+    for cname, comp in comps.items():
+        k = mult.get(cname, 0.0)
+        if k == 0.0:
+            continue
+        name2type = dict(comp.sig_types)
+        for ins in comp.instrs:
+            name2type[ins.name] = ins.type_str
+        count_bytes = cname not in fused
+        for ins in comp.instrs:
+            op = ins.opcode
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES:
+                out_b = type_bytes(ins.type_str)
+                if op.endswith("-start"):
+                    out_b //= 2                 # start result carries (in, out)
+                n = _group_size(ins.rest, default_group)
+                wire = _collective_wire_bytes(base, out_b, n)
+                coll_raw += k * out_b
+                coll_wire += k * wire
+                d = per_coll[base]
+                d["count"] += k
+                d["bytes"] += k * out_b
+                d["wire_bytes"] += k * wire
+            if op == "dot":
+                f = _dot_flops(ins, name2type)
+                flops += k * f
+                per_comp_flops[cname] += k * f
+            elif op == "convolution":
+                f = _conv_flops(ins, name2type)
+                flops += k * f
+                per_comp_flops[cname] += k * f
+            if count_bytes and op not in _ZERO_COST \
+                    and not op.endswith("-done"):
+                bytes_accessed += k * _instr_bytes(ins, name2type, comps)
+
+    return {
+        "flops": flops,
+        "bytes": bytes_accessed,
+        "collective_bytes": coll_raw,
+        "collective_wire_bytes": coll_wire,
+        "collectives": {k: dict(v) for k, v in per_coll.items()},
+        "top_flop_computations": dict(sorted(
+            per_comp_flops.items(), key=lambda kv: -kv[1])[:8]),
+    }

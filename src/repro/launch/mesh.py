@@ -1,0 +1,59 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first init.
+
+Production topology (TPU v5e numbers):
+  single pod : (data=16, model=16)            = 256 chips
+  multi-pod  : (pod=2, data=16, model=16)     = 512 chips
+The 'pod' axis only ever carries data parallelism + cross-pod gradient
+reduction — model/expert sharding stays intra-pod (ICI), which is what makes
+the 2-pod extension DCN-feasible.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def _auto(axes):
+    return (jax.sharding.AxisType.Auto,) * len(axes)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(devices)} — "
+            "run under launch/dryrun.py (which forces 512 host devices) or "
+            "on real hardware")
+    return jax.make_mesh(shape, axes, devices=devices[:need],
+                         axis_types=_auto(axes))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
+    """Small mesh over host devices for unit tests (requires the test to
+    set --xla_force_host_platform_device_count)."""
+    need = math.prod(shape)
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:need],
+                         axis_types=_auto(axes))
+
+
+def make_elastic_mesh(n_pods_alive: int, *, pod_shape=(16, 16)) -> Mesh:
+    """Degraded multi-pod mesh after pod failures (elastic re-mesh): same
+    (data, model) inner shape, 'pod' axis shrunk to the surviving pods."""
+    shape = (n_pods_alive, *pod_shape)
+    axes = ("pod", "data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(f"need {need} devices for elastic mesh {shape}")
+    return jax.make_mesh(shape, axes, devices=devices[:need],
+                         axis_types=_auto(axes))

@@ -1,0 +1,53 @@
+"""Serving driver: batched requests through the continuous-batching engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
+      --requests 16 [--qk-attention]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--spiking", action="store_true")
+    ap.add_argument("--qk-attention", action="store_true")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    from ..configs import get_config, reduced as reduce_cfg, build_model
+    from ..serve import Engine, EngineConfig
+
+    overrides = {}
+    if args.spiking:
+        overrides["spiking"] = True
+    if args.qk_attention:
+        overrides["attention_kind"] = "qk_spiking"
+    cfg = get_config(args.arch, **overrides)
+    if args.reduced:
+        cfg = reduce_cfg(cfg, **overrides)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    eng = Engine(model, params,
+                 EngineConfig(max_slots=args.slots, max_len=args.max_len))
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 24))
+        eng.submit(rng.integers(0, cfg.vocab_size, plen),
+                   max_new=args.max_new, temperature=args.temperature)
+    eng.run_until_drained()
+    print("[serve]", eng.stats())
+
+
+if __name__ == "__main__":
+    main()

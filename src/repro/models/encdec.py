@@ -1,0 +1,274 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2 cell).
+
+The modality frontend is a STUB per the brief: ``input_specs`` supplies
+precomputed audio-frame embeddings [B, S_src, d_src]; the model owns the
+``src_proj`` into d_model, the bidirectional encoder stack, and a causal
+decoder with per-layer cross-attention onto the encoder output.
+
+W2TTFS hook (paper C2): the encoder front applies a window-``w`` frame
+downsampling stage; in spiking mode the frames are LIF-spiked and pooled by
+spike COUNT x unit-scale (the WTFC datapath), in ANN mode mean-pooled —
+mirroring how the paper replaces average pooling.
+
+Decode: self-attn KV cache (decoder) + cross-attn KV computed once from the
+encoder output at prefill and reused every step.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..core.w2ttfs import window_counts
+from .attention import attn_apply, attn_decode, attn_init, attn_prefill
+from .ffn import mlp_apply, mlp_init
+from .layers import (dense_apply, dense_init, embedding_init,
+                     embedding_lookup, maybe_spike, rmsnorm_apply,
+                     rmsnorm_init)
+from .sharding import shard_act
+
+Array = jax.Array
+
+
+def enc_block_init(rng: Array, cfg: ModelConfig) -> dict:
+    r1, r2 = jax.random.split(rng)
+    return {"ln1": rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "attn": attn_init(r1, cfg),
+            "ln2": rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "mlp": mlp_init(r2, cfg)}
+
+
+def dec_block_init(rng: Array, cfg: ModelConfig) -> dict:
+    r1, r2, r3 = jax.random.split(rng, 3)
+    return {"ln1": rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "attn": attn_init(r1, cfg),
+            "ln_cross": rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "cross": attn_init(r2, cfg),
+            "ln2": rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "mlp": mlp_init(r3, cfg)}
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng: Array) -> dict:
+        cfg = self.cfg
+        r_emb, r_enc, r_dec, r_src, r_head = jax.random.split(rng, 5)
+        n_enc = cfg.n_enc_layers or cfg.n_layers
+        return {
+            "embed": embedding_init(r_emb, cfg.vocab_size, cfg.d_model,
+                                    cfg.param_dtype),
+            "src_proj": dense_init(r_src, cfg.d_src or cfg.d_model,
+                                   cfg.d_model, dtype=cfg.param_dtype),
+            "enc_blocks": jax.vmap(lambda r: enc_block_init(r, cfg))(
+                jax.random.split(r_enc, n_enc)),
+            "enc_norm": rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "dec_blocks": jax.vmap(lambda r: dec_block_init(r, cfg))(
+                jax.random.split(r_dec, cfg.n_layers)),
+            "final_norm": rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "head": dense_init(r_head, cfg.d_model, cfg.vocab_size,
+                               dtype=cfg.param_dtype),
+        }
+
+    # --------------------------------------------------------------- encoder
+    def _frontend(self, params: dict, src: Array) -> Array:
+        """Frame downsampling (W2TTFS in spiking mode) + projection."""
+        cfg = self.cfg
+        x = src.astype(cfg.dtype)
+        w = cfg.vision_pool_window          # reused as the frame-pool window
+        if w > 1:
+            b, s, d = x.shape
+            if cfg.spiking:
+                spikes = maybe_spike(x.reshape(b, s // w, w, d), True, cfg.lif)
+                x = (spikes.sum(axis=2) / float(w)).astype(x.dtype)
+            else:
+                x = x.reshape(b, s // w, w, d).mean(axis=2)
+        return dense_apply(params["src_proj"], x)
+
+    def encode(self, params: dict, src_embeds: Array) -> Array:
+        cfg = self.cfg
+        x = self._frontend(params, src_embeds)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        def body(carry, p_l):
+            x = shard_act(carry, "dp", None, None)
+            h = attn_apply(p_l["attn"], cfg,
+                           rmsnorm_apply(p_l["ln1"], x, cfg.rms_eps),
+                           positions, causal=False)
+            x = x + h
+            x = x + mlp_apply(p_l["mlp"], cfg,
+                              rmsnorm_apply(p_l["ln2"], x, cfg.rms_eps))
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+        return rmsnorm_apply(params["enc_norm"], x, cfg.rms_eps)
+
+    # --------------------------------------------------------------- decoder
+    def _dec_block(self, p_l, x, positions, enc_out, enc_positions):
+        cfg = self.cfg
+        x = shard_act(x, "dp", None, None)
+        h = attn_apply(p_l["attn"], cfg,
+                       rmsnorm_apply(p_l["ln1"], x, cfg.rms_eps),
+                       positions, causal=True)
+        x = x + h
+        # cross-attn: project encoder K/V on the fly
+        hkv = cfg.n_kv_heads or cfg.n_heads
+        dh = cfg.resolved_head_dim
+        b, sk, _ = enc_out.shape
+        k = dense_apply(p_l["cross"]["wk"], enc_out).reshape(b, sk, hkv, dh)
+        v = dense_apply(p_l["cross"]["wv"], enc_out).reshape(b, sk, hkv, dh)
+        c = attn_apply(p_l["cross"], cfg,
+                       rmsnorm_apply(p_l["ln_cross"], x, cfg.rms_eps),
+                       positions, causal=False, kv_override=(k, v))
+        x = x + c
+        return x + mlp_apply(p_l["mlp"], cfg,
+                             rmsnorm_apply(p_l["ln2"], x, cfg.rms_eps))
+
+    def decode_train(self, params: dict, tgt_tokens: Array, enc_out: Array) -> Array:
+        cfg = self.cfg
+        x = embedding_lookup(params["embed"], tgt_tokens, cfg.dtype)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        enc_positions = jnp.broadcast_to(
+            jnp.arange(enc_out.shape[1])[None], (b, enc_out.shape[1]))
+
+        def body(carry, p_l):
+            return self._dec_block(p_l, carry, positions, enc_out,
+                                   enc_positions), None
+
+        body = self._maybe_remat(body)
+        x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+        return rmsnorm_apply(params["final_norm"], x, cfg.rms_eps)
+
+    def _maybe_remat(self, fn):
+        if self.cfg.remat == "full":
+            return jax.checkpoint(fn,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        if self.cfg.remat == "dots":
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        return fn
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params: dict, batch: dict) -> tuple[Array, dict]:
+        enc_out = self.encode(params, batch["src_embeds"])
+        x = self.decode_train(params, batch["tgt_tokens"][:, :-1], enc_out)
+        logits = dense_apply(params["head"], x.astype(jnp.float32))
+        logits = shard_act(logits, "dp", None, "model")
+        targets = batch["tgt_tokens"][:, 1:]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        loss = jnp.mean(nll)
+        return loss, {"loss": loss, "nll": loss}
+
+    # --------------------------------------------------------------- serving
+    def prefill(self, params: dict, batch: dict,
+                return_all_logits: bool = False,
+                max_len: int = 0) -> tuple[Array, dict]:
+        """Encode source + run decoder prefill on tgt prefix -> cache with
+        (self KV, cross KV) per decoder layer. ``max_len`` pads the SELF
+        cache with decode headroom (cross cache length is fixed)."""
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["src_embeds"])
+        hkv = cfg.n_kv_heads or cfg.n_heads
+        dh = cfg.resolved_head_dim
+        b, sk, _ = enc_out.shape
+
+        tgt = batch["tgt_tokens"]
+        x = embedding_lookup(params["embed"], tgt, cfg.dtype)
+        s = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        enc_positions = jnp.broadcast_to(jnp.arange(sk)[None], (b, sk))
+
+        def body(carry, p_l):
+            x = carry
+            h, kv = attn_prefill(p_l["attn"], cfg,
+                                 rmsnorm_apply(p_l["ln1"], x, cfg.rms_eps),
+                                 positions)
+            x = x + h
+            ck = dense_apply(p_l["cross"]["wk"], enc_out).reshape(b, sk, hkv, dh)
+            cv = dense_apply(p_l["cross"]["wv"], enc_out).reshape(b, sk, hkv, dh)
+            c = attn_apply(p_l["cross"], cfg,
+                           rmsnorm_apply(p_l["ln_cross"], x, cfg.rms_eps),
+                           positions, causal=False, kv_override=(ck, cv))
+            x = x + c
+            x = x + mlp_apply(p_l["mlp"], cfg,
+                              rmsnorm_apply(p_l["ln2"], x, cfg.rms_eps))
+            return x, {"self": kv, "cross": (ck, cv)}
+
+        x, layers = jax.lax.scan(body, x, params["dec_blocks"])
+        x = rmsnorm_apply(params["final_norm"], x, cfg.rms_eps)
+        if return_all_logits:
+            logits = dense_apply(params["head"], x.astype(jnp.float32))
+        else:
+            logits = dense_apply(params["head"],
+                                 x[:, -1:, :].astype(jnp.float32))[:, 0, :]
+        if max_len and max_len > s:
+            k, v = layers["self"]
+            width = [(0, 0)] * k.ndim
+            width[-3] = (0, max_len - s)
+            layers = dict(layers, self=(jnp.pad(k, width), jnp.pad(v, width)))
+        return logits, {"layers": layers, "len": jnp.array(s, jnp.int32)}
+
+    def decode_step(self, params: dict, tokens: Array, cache: dict
+                    ) -> tuple[Array, dict]:
+        cfg = self.cfg
+        cache_len = cache["len"]
+        x = embedding_lookup(params["embed"], tokens, cfg.dtype)
+        b = x.shape[0]
+
+        def body(carry, inp):
+            x = carry
+            p_l, c_l = inp
+            h, (k, v) = attn_decode(p_l["attn"], cfg,
+                                    rmsnorm_apply(p_l["ln1"], x, cfg.rms_eps),
+                                    cache_len, c_l["self"][0], c_l["self"][1],
+                                    cache_len)
+            x = x + h
+            ck, cv = c_l["cross"]
+            positions = jnp.broadcast_to(cache_len[None, None], (b, 1))
+            c = attn_apply(p_l["cross"], cfg,
+                           rmsnorm_apply(p_l["ln_cross"], x, cfg.rms_eps),
+                           positions, causal=False, kv_override=(ck, cv))
+            x = x + c
+            x = x + mlp_apply(p_l["mlp"], cfg,
+                              rmsnorm_apply(p_l["ln2"], x, cfg.rms_eps))
+            return x, {"self": (k, v), "cross": (ck, cv)}
+
+        x, layers = jax.lax.scan(body, x, (params["dec_blocks"],
+                                           cache["layers"]))
+        x = rmsnorm_apply(params["final_norm"], x, cfg.rms_eps)
+        logits = dense_apply(params["head"], x.astype(jnp.float32))[:, 0, :]
+        return logits, {"layers": layers, "len": cache_len + 1}
+
+    # ----------------------------------------------------------- cache/specs
+    def init_cache(self, batch_size: int, max_len: int, src_len: int) -> dict:
+        cfg = self.cfg
+        hkv = cfg.n_kv_heads or cfg.n_heads
+        dh = cfg.resolved_head_dim
+        l = cfg.n_layers
+        kv = lambda s: (jnp.zeros((l, batch_size, s, hkv, dh), cfg.dtype),
+                        jnp.zeros((l, batch_size, s, hkv, dh), cfg.dtype))
+        return {"layers": {"self": kv(max_len), "cross": kv(src_len)},
+                "len": jnp.array(max(max_len - 1, 0), jnp.int32)}
+
+    def input_specs(self, shape: ShapeSpec) -> dict:
+        cfg = self.cfg
+        b = shape.global_batch
+        s = shape.seq_len
+        sds = jax.ShapeDtypeStruct
+        d_src = cfg.d_src or cfg.d_model
+        if shape.kind == "train":
+            return {"batch": {"src_embeds": sds((b, s, d_src), jnp.bfloat16),
+                              "tgt_tokens": sds((b, s), jnp.int32)}}
+        if shape.kind == "prefill":
+            return {"batch": {"src_embeds": sds((b, s, d_src), jnp.bfloat16),
+                              "tgt_tokens": sds((b, s), jnp.int32)}}
+        src_len = s // cfg.vision_pool_window if cfg.vision_pool_window > 1 else s
+        cache = jax.eval_shape(lambda: self.init_cache(b, s, src_len))
+        return {"tokens": sds((b, 1), jnp.int32), "cache": cache}

@@ -1,0 +1,124 @@
+"""Shared transformer layer primitives for the LM model zoo.
+
+Pure-functional (init returns pytrees, apply is pure), NHWC-free — LM tensors
+are [batch, seq, d]. All matmul-bearing params are 2-D+ with a deterministic
+TP-sharding rule (see ``shardings.py``): *column*-parallel weights put
+'model' on the LAST dim, *row*-parallel weights put 'model' on the FIRST dim.
+
+The paper's spiking mode (C1/C3) plugs in here: ``maybe_spike`` converts a
+pre-activation ("membrane current") into a binary spike train with a
+surrogate gradient — the LM analogue of the LIF unit in NEURAL's PEs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.lif import LIFConfig, lif_forward
+
+Array = jax.Array
+
+
+# ------------------------------------------------------------------- helpers
+def truncated_normal(rng: Array, shape: tuple[int, ...], std: float,
+                     dtype=jnp.float32) -> Array:
+    return jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32).astype(dtype) * std
+
+
+def dense_init(rng: Array, din: int, dout: int, *, bias: bool = False,
+               std: Optional[float] = None, dtype=jnp.float32) -> dict:
+    std = std if std is not None else 1.0 / math.sqrt(din)
+    p = {"w": truncated_normal(rng, (din, dout), std, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((dout,), dtype)
+    return p
+
+
+def dense_apply(p: dict, x: Array) -> Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ------------------------------------------------------------------- rmsnorm
+def rmsnorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(p: dict, x: Array, eps: float = 1e-6) -> Array:
+    # norm statistics in f32 for stability regardless of activation dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_gated_apply(p: dict, x: Array, z: Array, eps: float = 1e-6) -> Array:
+    """Mamba2 output norm: RMSNorm(x * silu(z)) (normformer-style gate)."""
+    g = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(g * g, axis=-1, keepdims=True)
+    y = g * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- embeddings
+def embedding_init(rng: Array, vocab: int, d: int, dtype=jnp.float32) -> dict:
+    # scaled init: keeps tied-readout logits O(1) at init
+    return {"emb": truncated_normal(rng, (vocab, d), d ** -0.5, dtype)}
+
+
+def embedding_lookup(p: dict, tokens: Array, compute_dtype=jnp.bfloat16) -> Array:
+    return jnp.take(p["emb"], tokens, axis=0).astype(compute_dtype)
+
+
+def embedding_logits(p: dict, x: Array) -> Array:
+    """Tied read-out: x @ emb^T -> [.., vocab] in f32 (loss-stable)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      p["emb"].astype(jnp.float32))
+
+
+# --------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [B, S, H, Dh]; positions: [B, S] (or [S]) int32.
+
+    Angles/cos/sin are computed in f32 (position precision), but the
+    rotation itself runs in x's dtype — so no full-size f32 q/k tensor ever
+    exists (GSPMD would otherwise gather the f32 version at TP boundaries:
+    2x the wire for nothing; see EXPERIMENTS §Perf A7)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B,S,Dh/2]
+    cos = jnp.cos(angles)[..., None, :].astype(x.dtype)  # [B,S,1,Dh/2]
+    sin = jnp.sin(angles)[..., None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1)
+
+
+# ------------------------------------------------------------- spiking hook
+def maybe_spike(x: Array, spiking: bool, lif: LIFConfig) -> Array:
+    """The paper's LIF activation as an LM drop-in (C3): binary spikes with a
+    surrogate gradient when ``spiking``; identity otherwise."""
+    if not spiking:
+        return x
+    return lif_forward(x, lif)
+
+
+# ------------------------------------------------------------- misc numerics
+def soft_cap(x: Array, cap: float) -> Array:
+    return cap * jnp.tanh(x / cap)
+
+
+def causal_mask(sq: int, sk: int, q_offset: int = 0, dtype=jnp.float32) -> Array:
+    """[sq, sk] additive mask; query i attends to keys <= i + q_offset."""
+    qi = jnp.arange(sq)[:, None] + q_offset
+    ki = jnp.arange(sk)[None, :]
+    return jnp.where(ki <= qi, 0.0, -1e30).astype(dtype)

@@ -1,0 +1,97 @@
+"""Minimal functional NN layer library (no flax): init fns return param/state
+pytrees, apply fns are pure. NHWC / HWIO layouts (TPU-native).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------- init utils
+def kaiming(rng: Array, shape: tuple[int, ...], fan_in: int,
+            dtype=jnp.float32) -> Array:
+    std = math.sqrt(2.0 / fan_in)
+    return jax.random.normal(rng, shape, dtype) * std
+
+
+def xavier(rng: Array, shape: tuple[int, ...], fan_in: int, fan_out: int,
+           dtype=jnp.float32) -> Array:
+    lim = math.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(rng, shape, dtype, -lim, lim)
+
+
+# -------------------------------------------------------------------- conv2d
+def conv_init(rng: Array, kh: int, kw: int, cin: int, cout: int,
+              bias: bool = False, dtype=jnp.float32) -> dict:
+    p = {"w": kaiming(rng, (kh, kw, cin, cout), kh * kw * cin, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((cout,), dtype)
+    return p
+
+
+def conv_apply(p: dict, x: Array, stride: int = 1, padding: str = "SAME") -> Array:
+    y = jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------- batch norm
+def bn_init(c: int, dtype=jnp.float32) -> tuple[dict, dict]:
+    params = {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+    state = {"mean": jnp.zeros((c,), dtype), "var": jnp.ones((c,), dtype)}
+    return params, state
+
+
+def bn_apply(p: dict, s: dict, x: Array, train: bool, momentum: float = 0.9,
+             eps: float = 1e-5) -> tuple[Array, dict]:
+    if train:
+        axes = tuple(range(x.ndim - 1))
+        mean = jnp.mean(x, axes)
+        var = jnp.var(x, axes)
+        new_s = {"mean": momentum * s["mean"] + (1 - momentum) * mean,
+                 "var": momentum * s["var"] + (1 - momentum) * var}
+    else:
+        mean, var = s["mean"], s["var"]
+        new_s = s
+    inv = jax.lax.rsqrt(var + eps) * p["scale"]
+    return (x - mean) * inv + p["bias"], new_s
+
+
+# -------------------------------------------------------------------- linear
+def linear_init(rng: Array, din: int, dout: int, bias: bool = True,
+                dtype=jnp.float32) -> dict:
+    p = {"w": xavier(rng, (din, dout), din, dout, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((dout,), dtype)
+    return p
+
+
+def linear_apply(p: dict, x: Array) -> Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ------------------------------------------------------------------- pooling
+def max_pool(x: Array, window: int = 2, stride: Optional[int] = None) -> Array:
+    stride = stride or window
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max,
+        (1, window, window, 1), (1, stride, stride, 1), "VALID")
+
+
+def avg_pool(x: Array, window: int = 2, stride: Optional[int] = None) -> Array:
+    stride = stride or window
+    summed = jax.lax.reduce_window(
+        x, 0.0, jax.lax.add,
+        (1, window, window, 1), (1, stride, stride, 1), "VALID")
+    return summed / (window * window)

@@ -1,0 +1,249 @@
+"""Sharding rules for the model zoo (GSPMD / pjit).
+
+Layout policy (single source of truth):
+  * batch dims            -> ('pod', 'data')   (DP; 'pod' only on multi-pod)
+  * column-parallel W     -> last dim 'model'  (wq/wk/wv/gate/up/in_proj)
+  * row-parallel W        -> first dim 'model' (wo/down/out_proj)
+  * MoE expert stacks     -> expert dim 'model' (EP == TP axis)
+  * vocab embedding       -> vocab dim 'model'
+  * norms / scalar vectors -> replicated
+  * KV caches             -> batch on DP, kv-heads on 'model' when divisible;
+                             long-context batch=1 shards SEQUENCE on 'data'
+                             (context-parallel decode).
+
+Activations are constrained at block boundaries through ``shard_act`` which
+reads the process-global mesh installed by the launcher (``set_global_mesh``)
+— model code stays mesh-agnostic and tests run unsharded with no mesh set.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_GLOBAL_MESH: Optional[Mesh] = None
+_DP_INCLUDES_MODEL: bool = False
+
+
+def set_global_mesh(mesh: Optional[Mesh]) -> None:
+    global _GLOBAL_MESH
+    _GLOBAL_MESH = mesh
+
+
+def get_global_mesh() -> Optional[Mesh]:
+    return _GLOBAL_MESH
+
+
+def set_dp_includes_model(flag: bool) -> None:
+    """Pure-DP/FSDP regime (cfg.dp_over_model): batch shards over 'model'
+    too; model-sharded params act as ZeRO-3 shards gathered on use."""
+    global _DP_INCLUDES_MODEL
+    _DP_INCLUDES_MODEL = flag
+
+
+def dp_axes(mesh: Optional[Mesh] = None):
+    """The data-parallel axis bundle: ('pod','data') on multi-pod meshes."""
+    m = mesh or _GLOBAL_MESH
+    if m is None:
+        return ("data",)
+    axes = tuple(a for a in ("pod", "data") if a in m.axis_names)
+    if _DP_INCLUDES_MODEL and "model" in m.axis_names:
+        axes = axes + ("model",)
+    return axes
+
+
+def shard_act(x: jax.Array, *spec) -> jax.Array:
+    """Constrain an activation if a global mesh is installed; no-op otherwise.
+
+    ``spec`` entries: 'dp' expands to the DP bundle; None / axis names pass
+    through. Axis sizes that do not divide are dropped (replicated) — this is
+    how e.g. 40 heads on a 16-way 'model' axis degrades gracefully.
+    """
+    m = _GLOBAL_MESH
+    if m is None:
+        return x
+    resolved = []
+    for dim, s in zip(x.shape, spec):
+        if s == "dp":
+            s = dp_axes(m)
+        s = _fit_axis(m, dim, s)
+        resolved.append(s)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(m, P(*resolved)))
+
+
+def _axis_size(mesh: Mesh, s) -> int:
+    if s is None:
+        return 1
+    if isinstance(s, (tuple, list)):
+        out = 1
+        for a in s:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[s]
+
+
+def _fit_axis(mesh: Mesh, dim: int, s):
+    """Drop a sharding that does not evenly divide ``dim``."""
+    if s is None:
+        return None
+    if isinstance(s, (tuple, list)):
+        s = tuple(a for a in s if a in mesh.axis_names)
+        if not s:
+            return None
+    elif s not in mesh.axis_names:
+        return None
+    return s if dim % _axis_size(mesh, s) == 0 else None
+
+
+# ------------------------------------------------------------ param specs
+# (regex over the param tree path, base spec WITHOUT the stacked-layer dim)
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"emb",                          ("model", None)),      # [V, D]
+    (r"(wq|wk|wv|gate|up|in_proj)/w", (None, "model")),
+    (r"(wq|wk|wv|gate|up|in_proj)/b", ("model",)),
+    (r"(wo|down|out_proj)/w",         ("model", None)),
+    (r"(wo|down|out_proj)/b",         (None,)),
+    (r"router/w",                     (None, None)),
+    (r"w_gate|w_up",                  ("model", None, None)),  # [E, D, F]
+    (r"w_down",                       ("model", None, None)),  # [E, F, D]
+    (r"conv_w",                       (None, "model")),
+    (r"conv_b",                       ("model",)),
+    (r"(A_log|dt_bias|D$|/D)",        (None,)),
+    (r"(norm|scale|q_norm|k_norm)",   (None,)),
+    (r"head/w",                       (None, "model")),      # lm head [D, V]
+    (r"head/b",                       ("model",)),
+    (r"(proj|vision_proj|src_proj)/w", (None, "model")),
+    (r"(proj|vision_proj|src_proj)/b", ("model",)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def spec_for_leaf(path: str, ndim: int, mesh: Optional[Mesh] = None,
+                  shape: Optional[tuple[int, ...]] = None) -> P:
+    """Resolve the PartitionSpec for one param leaf. Leading stacked-layer
+    dims (scan over layers) are padded with None on the left."""
+    for pat, base in _PARAM_RULES:
+        if re.search(pat, path):
+            spec = list(base)
+            while len(spec) < ndim:
+                spec.insert(0, None)
+            spec = spec[:ndim] if ndim else []
+            if mesh is not None and shape is not None:
+                spec = [_fit_axis(mesh, d, s) for d, s in zip(shape, spec)]
+            return P(*spec)
+    return P()  # replicate by default (norm scales, biases, scalars)
+
+
+def param_specs(params_shape: Any, mesh: Optional[Mesh] = None) -> Any:
+    """Map a param pytree (arrays OR ShapeDtypeStructs) to PartitionSpecs."""
+
+    def one(path, leaf):
+        return spec_for_leaf(_path_str(path), leaf.ndim, mesh,
+                             tuple(leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def param_shardings(params_shape: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(params_shape, mesh))
+
+
+def cache_specs(cache_shape: Any, mesh: Mesh, *, batch: int,
+                context_parallel: bool = False,
+                seq_axis: Optional[str] = None) -> Any:
+    """PartitionSpecs for a decode cache pytree (LM or EncDecLM layout).
+
+    * KV leaves  [.., B, S, Hkv, Dh] — B on DP, Hkv on 'model' (if divisible).
+      With ``context_parallel`` (long-context batch=1) the SEQUENCE dim
+      shards over 'data' instead: GSPMD then lowers the decode softmax into
+      the flash-decoding partial-combine across 'data'.
+    * mamba 'ssm' leaves [.., B, H, P, N] — B on DP, H on 'model'.
+    * mamba 'conv' leaves [.., B, K, C] — B on DP, C on 'model'.
+    * 'len' scalar — replicated.
+    """
+    dp = dp_axes(mesh)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        nd = leaf.ndim
+        if nd == 0 or "len" in ps:
+            return P()
+        spec = [None] * nd
+        if "ssm" in ps:                    # [.., B, H, P, N]
+            b_dim = nd - 4
+            spec[b_dim] = _fit_axis(mesh, leaf.shape[b_dim], dp)
+            spec[nd - 3] = _fit_axis(mesh, leaf.shape[nd - 3], "model")
+        elif "conv" in ps:                 # [.., B, K, C]
+            b_dim = nd - 3
+            spec[b_dim] = _fit_axis(mesh, leaf.shape[b_dim], dp)
+            spec[nd - 1] = _fit_axis(mesh, leaf.shape[nd - 1], "model")
+        else:                              # KV: [.., B, S, Hkv, Dh]
+            b_dim = nd - 4
+            if context_parallel and batch == 1:
+                spec[nd - 3] = _fit_axis(mesh, leaf.shape[nd - 3], "data")
+            elif seq_axis:
+                # context-parallel cache on a chosen axis (e.g. 'model' when
+                # kv-heads don't divide TP): flash-decode combine over it
+                spec[b_dim] = _fit_axis(
+                    mesh, leaf.shape[b_dim],
+                    tuple(a for a in dp if a != seq_axis))
+                spec[nd - 3] = _fit_axis(mesh, leaf.shape[nd - 3], seq_axis)
+            else:
+                spec[b_dim] = _fit_axis(mesh, leaf.shape[b_dim], dp)
+                spec[nd - 2] = _fit_axis(mesh, leaf.shape[nd - 2], "model")
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def batch_specs(batch_shape: Any, mesh: Mesh) -> Any:
+    """Input batch: leading dim on DP, the rest replicated."""
+    dp = dp_axes(mesh)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return P()
+        spec = [None] * leaf.ndim
+        spec[0] = _fit_axis(mesh, leaf.shape[0], dp)
+        return P(*spec)
+
+    return jax.tree_util.tree_map(one, batch_shape)
+
+
+def zero1_specs(params_shape: Any, mesh: Optional[Mesh] = None) -> Any:
+    """Optimizer-state sharding (ZeRO-1): additionally shard the FIRST
+    already-unsharded dim over 'data' where divisible. GSPMD then emits
+    reduce-scatter(grads) + all-gather(updates) around the optimizer."""
+
+    def one(path, leaf):
+        spec = list(spec_for_leaf(_path_str(path), leaf.ndim, mesh,
+                                  tuple(leaf.shape)))
+        if mesh is None or "data" not in mesh.axis_names:
+            return P(*spec)
+        dsize = mesh.shape["data"]
+        for i, (dim, s) in enumerate(zip(leaf.shape, spec)):
+            if s is None and dim % dsize == 0 and dim >= 4 * dsize:
+                spec[i] = "data"
+                break
+            if s == "model" and dim % (dsize * mesh.shape["model"]) == 0:
+                spec[i] = ("model", "data")
+                break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)

@@ -1,0 +1,375 @@
+"""The paper's deployed SNN models: VGG-11, ResNet-11, QKFResNet-11 (Fig 2a).
+
+Execution contract (matches the NEURAL pipeline):
+  * multi-timestep tensors are [T, B, H, W, C]; the paper's deployed mode is
+    T=1 (single-timestep, C1) and T>1 is the baseline it beats;
+  * every activation between layers is a BINARY SPIKE map (LIF outputs);
+  * the classifier head is W2TTFS (C2) — ``head="avgpool"`` gives the
+    non-spiking ANN-style head used by the F&Q ablation;
+  * QKFResNet-11 = ResNet-11 + spiking QKFormer block(s) (C4) on the final
+    feature map tokens;
+  * ``fuse_model`` folds BN into conv and applies fixed-point quantization —
+    the paper's F&Q stage producing the hardware deployment artifact.
+
+Models are list-of-layer-descriptor driven so init / apply / fuse walk the
+same structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.lif import LIFConfig, lif_multistep
+from ..core.quant import QuantConfig, fake_quant, fuse_bn_into_conv, fuse_bn_into_linear, quantize_fixed
+from ..core.qk_attention import qk_token_mask, qk_channel_mask
+from ..core.w2ttfs import w2ttfs_classifier, avgpool_classifier
+from . import nn
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNCNNConfig:
+    arch: str = "vgg11"             # vgg11 | resnet11 | qkfresnet11
+    num_classes: int = 10
+    in_channels: int = 3
+    image_size: int = 32
+    width_mult: float = 1.0
+    timesteps: int = 1              # T=1 is the paper's deployed mode
+    lif: LIFConfig = LIFConfig()
+    quant: QuantConfig = QuantConfig()
+    head: str = "w2ttfs"            # w2ttfs | avgpool
+    qk_blocks: int = 1
+    qk_mask_mode: str = "threshold"  # threshold | or  (Fig 5 atten_reg = "or")
+    dtype: Any = jnp.float32
+    # route binary-activation matmuls through the event-driven Pallas
+    # kernel (C3): deployed-inference path only (apply_fused)
+    use_event_kernels: bool = False
+
+
+# --------------------------------------------------------------- arch tables
+_VGG11 = [64, "M", 128, "M", 256, 256, "M", 512, 512, "M", 512, 512]
+_RESNET11_STAGES = [(64, 1), (128, 2), (256, 2), (512, 2)]
+
+
+def _c(ch: int, cfg: SNNCNNConfig) -> int:
+    return max(8, int(ch * cfg.width_mult))
+
+
+def build_layers(cfg: SNNCNNConfig) -> list[tuple]:
+    """Layer descriptor list: (kind, meta...)."""
+    layers: list[tuple] = []
+    cin = cfg.in_channels
+    size = cfg.image_size
+    if cfg.arch == "vgg11":
+        for item in _VGG11:
+            if item == "M":
+                layers.append(("maxpool",))
+                size //= 2
+            else:
+                cout = _c(item, cfg)
+                layers.append(("conv_bn_lif", cin, cout, 1))
+                cin = cout
+    elif cfg.arch in ("resnet11", "qkfresnet11"):
+        stem = _c(64, cfg)
+        layers.append(("conv_bn_lif", cin, stem, 1))
+        cin = stem
+        for ch, stride in _RESNET11_STAGES:
+            cout = _c(ch, cfg)
+            layers.append(("resblock", cin, cout, stride))
+            cin = cout
+            size //= stride
+        if cfg.arch == "qkfresnet11":
+            for _ in range(cfg.qk_blocks):
+                layers.append(("qkformer", cin))
+    else:
+        raise ValueError(f"unknown snn-cnn arch {cfg.arch!r}")
+    layers.append(("head", cin, size))
+    return layers
+
+
+# ----------------------------------------------------------------------- init
+def init(rng: Array, cfg: SNNCNNConfig) -> dict:
+    params: list = []
+    state: list = []
+    layers = build_layers(cfg)
+    rngs = jax.random.split(rng, len(layers) + 1)
+    for r, layer in zip(rngs, layers):
+        kind = layer[0]
+        if kind == "conv_bn_lif":
+            _, cin, cout, stride = layer
+            bn_p, bn_s = nn.bn_init(cout, cfg.dtype)
+            params.append({"conv": nn.conv_init(r, 3, 3, cin, cout, dtype=cfg.dtype),
+                           "bn": bn_p})
+            state.append({"bn": bn_s})
+        elif kind == "maxpool":
+            params.append({})
+            state.append({})
+        elif kind == "resblock":
+            _, cin, cout, stride = layer
+            r1, r2, r3 = jax.random.split(r, 3)
+            bn1p, bn1s = nn.bn_init(cout, cfg.dtype)
+            bn2p, bn2s = nn.bn_init(cout, cfg.dtype)
+            p = {"conv1": nn.conv_init(r1, 3, 3, cin, cout, dtype=cfg.dtype), "bn1": bn1p,
+                 "conv2": nn.conv_init(r2, 3, 3, cout, cout, dtype=cfg.dtype), "bn2": bn2p}
+            s = {"bn1": bn1s, "bn2": bn2s}
+            if stride != 1 or cin != cout:
+                bnsp, bnss = nn.bn_init(cout, cfg.dtype)
+                p["conv_sc"] = nn.conv_init(r3, 1, 1, cin, cout, dtype=cfg.dtype)
+                p["bn_sc"] = bnsp
+                s["bn_sc"] = bnss
+            params.append(p)
+            state.append(s)
+        elif kind == "qkformer":
+            _, d = layer
+            rq, rk, rp, rm1, rm2 = jax.random.split(r, 5)
+            bnq_p, bnq_s = nn.bn_init(d, cfg.dtype)
+            bnk_p, bnk_s = nn.bn_init(d, cfg.dtype)
+            bnp_p, bnp_s = nn.bn_init(d, cfg.dtype)
+            bnm1_p, bnm1_s = nn.bn_init(d, cfg.dtype)
+            bnm2_p, bnm2_s = nn.bn_init(d, cfg.dtype)
+            params.append({"q": nn.linear_init(rq, d, d, bias=False, dtype=cfg.dtype), "bn_q": bnq_p,
+                           "k": nn.linear_init(rk, d, d, bias=False, dtype=cfg.dtype), "bn_k": bnk_p,
+                           "proj": nn.linear_init(rp, d, d, bias=False, dtype=cfg.dtype), "bn_proj": bnp_p,
+                           "mlp1": nn.linear_init(rm1, d, d, bias=False, dtype=cfg.dtype), "bn_mlp1": bnm1_p,
+                           "mlp2": nn.linear_init(rm2, d, d, bias=False, dtype=cfg.dtype), "bn_mlp2": bnm2_p})
+            state.append({"bn_q": bnq_s, "bn_k": bnk_s, "bn_proj": bnp_s,
+                          "bn_mlp1": bnm1_s, "bn_mlp2": bnm2_s})
+        elif kind == "head":
+            _, cin, size = layer
+            # W2TTFS head pools the full (size x size) map -> FC input dim = C
+            params.append({"fc": nn.linear_init(r, cin, cfg.num_classes, dtype=cfg.dtype)})
+            state.append({})
+    return {"params": params, "state": state}
+
+
+# -------------------------------------------------------------- apply helpers
+def _per_step(fn, x: Array) -> Array:
+    """Apply a per-image fn over [T, B, ...] by folding T into batch."""
+    t, b = x.shape[0], x.shape[1]
+    y = fn(x.reshape(t * b, *x.shape[2:]))
+    return y.reshape(t, b, *y.shape[1:])
+
+
+def _qw(w: Array, cfg: SNNCNNConfig) -> Array:
+    return fake_quant(w, cfg.quant, is_weight=True)
+
+
+def _conv_bn(p, s, x, cfg, train, stride=1):
+    """conv + BN over [T,B,H,W,C] (BN stats pooled over T*B), returns current."""
+    conv_p = {"w": _qw(p["conv"]["w"], cfg)}
+    cur = _per_step(lambda z: nn.conv_apply(conv_p, z, stride), x)
+    t, b = cur.shape[0], cur.shape[1]
+    flat = cur.reshape(t * b, *cur.shape[2:])
+    y, new_bn = nn.bn_apply(p["bn"] if "bn" in p else p, s, flat, train)
+    return y.reshape(t, b, *cur.shape[2:]), new_bn
+
+
+def apply(variables: dict, images: Array, cfg: SNNCNNConfig,
+          train: bool = False) -> tuple[Array, dict, dict]:
+    """Forward pass. images: [B, H, W, C] analog input (direct encoding:
+    repeated across T; the first conv+LIF converts it to spikes).
+
+    Returns (logits [B, classes], new_state, aux) where aux carries per-layer
+    spike counts (Total Spikes, paper Table II) and spike rates.
+    """
+    params, state = variables["params"], variables["state"]
+    layers = build_layers(cfg)
+    t = cfg.timesteps
+    x = jnp.broadcast_to(images[None], (t, *images.shape)).astype(cfg.dtype)
+    new_state: list = []
+    aux = {"spikes": {}, "rates": {}}
+    li = 0
+
+    for p, s, layer in zip(params, state, layers):
+        kind = layer[0]
+        if kind == "conv_bn_lif":
+            stride = layer[3]
+            cur, bn_s = _conv_bn({"conv": p["conv"], "bn": p["bn"]}, s["bn"], x, cfg, train, stride)
+            x = lif_multistep(cur, cfg.lif)
+            new_state.append({"bn": bn_s})
+        elif kind == "maxpool":
+            x = _per_step(nn.max_pool, x)
+            new_state.append({})
+        elif kind == "resblock":
+            _, cin, cout, stride = layer
+            cur1, bn1_s = _conv_bn({"conv": p["conv1"], "bn": p["bn1"]}, s["bn1"], x, cfg, train, stride)
+            s1 = lif_multistep(cur1, cfg.lif)
+            cur2, bn2_s = _conv_bn({"conv": p["conv2"], "bn": p["bn2"]}, s["bn2"], s1, cfg, train, 1)
+            ns = {"bn1": bn1_s, "bn2": bn2_s}
+            if "conv_sc" in p:
+                sc, bnsc_s = _conv_bn({"conv": p["conv_sc"], "bn": p["bn_sc"]}, s["bn_sc"], x, cfg, train, stride)
+                ns["bn_sc"] = bnsc_s
+            else:
+                sc = x
+            # MS-ResNet shortcut: add membrane currents, then fire
+            x = lif_multistep(cur2 + sc, cfg.lif)
+            aux["spikes"][f"res{li}_s1"] = s1.sum()
+            new_state.append(ns)
+        elif kind == "qkformer":
+            d = layer[1]
+            tb = x.shape[:2]
+            hw = x.shape[2] * x.shape[3]
+            tok = x.reshape(*tb, hw, d)
+
+            def _lin_bn(name, inp, st):
+                w = _qw(p[name]["w"], cfg)
+                cur = inp @ w
+                flat = cur.reshape(tb[0] * tb[1], hw, d)
+                y, bns = nn.bn_apply(p[f"bn_{name}"], st[f"bn_{name}"],
+                                     flat.reshape(-1, d), train)
+                return y.reshape(*tb, hw, d), bns
+
+            qc, bnq_s = _lin_bn("q", tok, s)
+            q = lif_multistep(qc, cfg.lif)
+            kc, bnk_s = _lin_bn("k", tok, s)
+            k = lif_multistep(kc, cfg.lif)
+            mask = qk_token_mask(q, cfg.qk_mask_mode, surrogate=cfg.lif.surrogate,
+                                 alpha=cfg.lif.alpha)
+            attn = mask * k                                 # QKTA (Fig 5 (4))
+            pc, bnp_s = _lin_bn("proj", attn, s)
+            y = lif_multistep(pc + tok, cfg.lif)            # membrane shortcut
+            m1c, bnm1_s = _lin_bn("mlp1", y, s)
+            m1 = lif_multistep(m1c, cfg.lif)
+            m2c, bnm2_s = _lin_bn("mlp2", m1, s)
+            y2 = lif_multistep(m2c + y, cfg.lif)
+            x = y2.reshape(*tb, x.shape[2], x.shape[3], d)
+            aux["spikes"][f"qkf{li}_q"] = q.sum()
+            aux["spikes"][f"qkf{li}_mask_on"] = mask.sum()
+            new_state.append({"bn_q": bnq_s, "bn_k": bnk_s, "bn_proj": bnp_s,
+                              "bn_mlp1": bnm1_s, "bn_mlp2": bnm2_s})
+        elif kind == "head":
+            _, cin, size = layer
+            fc_w = _qw(p["fc"]["w"], cfg)
+            fc_b = p["fc"]["b"]
+            window = size
+            # spatial-mean over channels: FC input dim == channels (global pool)
+            def head_one(spikes_t):
+                if cfg.head == "w2ttfs":
+                    return w2ttfs_classifier(spikes_t, fc_w, fc_b, window)
+                return avgpool_classifier(spikes_t, fc_w, fc_b, window)
+            logits = jnp.mean(jax.vmap(head_one)(x), axis=0)  # rate-decode over T
+            new_state.append({})
+        aux["spikes"][f"layer{li}"] = x.sum() if kind != "head" else aux["spikes"].get(f"layer{li}", jnp.array(0.0))
+        if kind != "head":
+            aux["rates"][f"layer{li}"] = x.mean()
+        li += 1
+
+    aux["total_spikes"] = sum(v for k, v in aux["spikes"].items() if k.startswith("layer"))
+    return logits, new_state, aux
+
+
+# ----------------------------------------------------------------- F&Q fusion
+def fuse_model(variables: dict, cfg: SNNCNNConfig) -> list:
+    """Paper F&Q stage: fold BN into conv/linear, fixed-point-quantize weights.
+
+    Returns fused param list usable by ``apply_fused`` (inference only).
+    """
+    params, state = variables["params"], variables["state"]
+    layers = build_layers(cfg)
+    fused: list = []
+    bits = cfg.quant.bits if cfg.quant.enabled else None
+
+    def q(w):
+        return quantize_fixed(w, bits, axis=None) if bits else w
+
+    for p, s, layer in zip(params, state, layers):
+        kind = layer[0]
+        if kind == "conv_bn_lif":
+            w, b = fuse_bn_into_conv(p["conv"]["w"], None, p["bn"]["scale"],
+                                     p["bn"]["bias"], s["bn"]["mean"], s["bn"]["var"])
+            fused.append({"conv": {"w": q(w), "b": b}})
+        elif kind == "resblock":
+            f = {}
+            for c, bn in (("conv1", "bn1"), ("conv2", "bn2")):
+                w, b = fuse_bn_into_conv(p[c]["w"], None, p[bn]["scale"],
+                                         p[bn]["bias"], s[bn]["mean"], s[bn]["var"])
+                f[c] = {"w": q(w), "b": b}
+            if "conv_sc" in p:
+                w, b = fuse_bn_into_conv(p["conv_sc"]["w"], None, p["bn_sc"]["scale"],
+                                         p["bn_sc"]["bias"], s["bn_sc"]["mean"], s["bn_sc"]["var"])
+                f["conv_sc"] = {"w": q(w), "b": b}
+            fused.append(f)
+        elif kind == "qkformer":
+            f = {}
+            for name in ("q", "k", "proj", "mlp1", "mlp2"):
+                w, b = fuse_bn_into_linear(p[name]["w"], None, p[f"bn_{name}"]["scale"],
+                                           p[f"bn_{name}"]["bias"], s[f"bn_{name}"]["mean"],
+                                           s[f"bn_{name}"]["var"])
+                f[name] = {"w": q(w), "b": b}
+            fused.append(f)
+        elif kind == "head":
+            fused.append({"fc": {"w": q(p["fc"]["w"]), "b": p["fc"]["b"]}})
+        else:
+            fused.append({})
+    return fused
+
+
+def apply_fused(fused_params: list, images: Array, cfg: SNNCNNConfig) -> tuple[Array, dict]:
+    """Inference with the fused+quantized (deployment) model — conv+bias+LIF,
+    no BN. This is the computation NEURAL's EPA executes."""
+    layers = build_layers(cfg)
+    t = cfg.timesteps
+    x = jnp.broadcast_to(images[None], (t, *images.shape)).astype(cfg.dtype)
+    aux = {"spikes": {}}
+    li = 0
+    for p, layer in zip(fused_params, layers):
+        kind = layer[0]
+        if kind == "conv_bn_lif":
+            stride = layer[3]
+            cur = _per_step(lambda z: nn.conv_apply(p["conv"], z, stride), x)
+            x = lif_multistep(cur, cfg.lif)
+        elif kind == "maxpool":
+            x = _per_step(nn.max_pool, x)
+        elif kind == "resblock":
+            stride = layer[3]
+            cur1 = _per_step(lambda z: nn.conv_apply(p["conv1"], z, stride), x)
+            s1 = lif_multistep(cur1, cfg.lif)
+            cur2 = _per_step(lambda z: nn.conv_apply(p["conv2"], z, 1), s1)
+            sc = _per_step(lambda z: nn.conv_apply(p["conv_sc"], z, stride), x) if "conv_sc" in p else x
+            x = lif_multistep(cur2 + sc, cfg.lif)
+        elif kind == "qkformer":
+            d = layer[1]
+            tb = x.shape[:2]
+            hw = x.shape[2] * x.shape[3]
+            tok = x.reshape(*tb, hw, d)
+
+            if cfg.use_event_kernels:
+                # event-driven path (C3): binary token maps hit the Pallas
+                # spike_matmul — silent 128x128 blocks are skipped on the
+                # vld_cnt metadata (PipeSDA analogue)
+                from ..kernels.spike_matmul import spike_matmul
+
+                def smm(spk, w):                 # [T,B,N,D] x [D,F]
+                    flat = spk.reshape(-1, spk.shape[-1])
+                    out = spike_matmul(flat, w)
+                    return out.reshape(*spk.shape[:-1], w.shape[1]
+                                       ).astype(cfg.dtype)
+            else:
+                def smm(spk, w):
+                    return spk @ w
+
+            q = lif_multistep(smm(tok, p["q"]["w"]) + p["q"]["b"], cfg.lif)
+            k = lif_multistep(smm(tok, p["k"]["w"]) + p["k"]["b"], cfg.lif)
+            mask = qk_token_mask(q, "or")        # hardware atten_reg mode
+            attn = mask * k                      # still binary (mask x spikes)
+            y = lif_multistep(smm(attn, p["proj"]["w"]) + p["proj"]["b"] + tok,
+                              cfg.lif)
+            m1 = lif_multistep(smm(y, p["mlp1"]["w"]) + p["mlp1"]["b"], cfg.lif)
+            y2 = lif_multistep(smm(m1, p["mlp2"]["w"]) + p["mlp2"]["b"] + y,
+                               cfg.lif)
+            x = y2.reshape(*tb, x.shape[2], x.shape[3], d)
+        elif kind == "head":
+            _, cin, size = layer
+            logits = jnp.mean(jax.vmap(
+                lambda st: w2ttfs_classifier(st, p["fc"]["w"], p["fc"]["b"], size)
+                if cfg.head == "w2ttfs" else
+                avgpool_classifier(st, p["fc"]["w"], p["fc"]["b"], size))(x), axis=0)
+        if kind != "head":
+            aux["spikes"][f"layer{li}"] = x.sum()
+        li += 1
+    aux["total_spikes"] = sum(aux["spikes"].values())
+    return logits, aux

@@ -1,0 +1,6 @@
+from .adamw import adamw_init, adamw_update
+from .sgd import sgd_init, sgd_update
+from .schedules import constant_lr, cosine_lr, linear_warmup_cosine
+from .compression import (compress_int8, decompress_int8,
+                          compressed_psum_grads, error_feedback_init)
+from .clip import global_norm, clip_by_global_norm

@@ -1,0 +1,25 @@
+"""LR schedules as pure fns of the step counter (jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_lr(base_lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return base_lr * (final_frac + (1.0 - final_frac) * cos)
+    return fn
+
+
+def linear_warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cosine = cosine_lr(base_lr, max(total_steps - warmup_steps, 1), final_frac)
+    def fn(step):
+        warm = base_lr * (step.astype(jnp.float32) + 1.0) / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cosine(step - warmup_steps))
+    return fn

@@ -1,0 +1,39 @@
+"""SGD with momentum — the optimizer the paper trains with (§V.A: SGD,
+momentum 0.9, for the KD CNN pipeline)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: Any
+
+
+def sgd_init(params: Any) -> SGDState:
+    return SGDState(step=jnp.zeros((), jnp.int32),
+                    momentum=jax.tree_util.tree_map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def sgd_update(grads: Any, state: SGDState, params: Any, *,
+               lr: float | jax.Array = 0.1, momentum: float = 0.9,
+               weight_decay: float = 0.0, nesterov: bool = False
+               ) -> tuple[Any, SGDState]:
+    def upd(p, g, buf):
+        g = g.astype(jnp.float32)
+        if weight_decay:
+            g = g + weight_decay * p.astype(jnp.float32)
+        buf_new = momentum * buf + g
+        step_dir = g + momentum * buf_new if nesterov else buf_new
+        return (p.astype(jnp.float32) - lr * step_dir).astype(p.dtype), buf_new
+
+    pairs = jax.tree_util.tree_map(upd, params, grads, state.momentum)
+    new_p = jax.tree_util.tree_map(lambda t: t[0], pairs,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_b = jax.tree_util.tree_map(lambda t: t[1], pairs,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, SGDState(step=state.step + 1, momentum=new_b)

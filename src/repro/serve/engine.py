@@ -1,0 +1,205 @@
+"""Batched serving engine: continuous batching over a fixed slot pool.
+
+Design (vLLM-style, TPU-static-shapes edition):
+  * ``max_slots`` concurrent sequences share one preallocated KV cache of
+    shape [L, max_slots, max_len, Hkv, Dh] — slots are rows of the batch dim.
+  * prefill runs per-request (padded to ``prefill_pad`` buckets so a handful
+    of compiled shapes serve all prompt lengths) and WRITES the produced
+    cache into the slot row.
+  * decode is ONE jitted step over the whole pool every tick regardless of
+    how many slots are live (static shape — idle slots compute garbage that
+    is masked out; this is the standard TPU trade).
+  * completion (EOS or max_new) frees the slot; queued requests are admitted
+    on the next tick — continuous batching.
+  * spiking/QKFormer models (attention_kind='qk_spiking') have an EMPTY
+    attention cache (token-local masks), so the same engine serves them with
+    per-slot state of size 0 — the paper's O(1)-decode claim in practice.
+
+Sampling: greedy or temperature (per request).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                  # [S] int32
+    max_new: int = 32
+    temperature: float = 0.0            # 0 = greedy
+    eos_id: Optional[int] = None
+    # -- filled by the engine --
+    out: list = dataclasses.field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+    enqueued_t: float = 0.0
+    first_token_t: float = 0.0
+    finished_t: float = 0.0
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_slots: int = 8
+    max_len: int = 512
+    prefill_pad: int = 64               # prompt length bucket size
+
+
+class Engine:
+    def __init__(self, model, params, cfg: EngineConfig, rng_seed: int = 0):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.queue: deque[Request] = deque()
+        self.active: dict[int, Request] = {}
+        self.finished: list[Request] = []
+        self._rng = jax.random.PRNGKey(rng_seed)
+        self._uid = itertools.count()
+
+        # slot-pool cache; per-slot valid lengths tracked host-side
+        self.cache = model.init_cache(cfg.max_slots, cfg.max_len)
+        self.cache["len"] = jnp.zeros((), jnp.int32)  # engine manages length
+        self.slot_len = np.zeros(cfg.max_slots, np.int64)
+        self.free_slots = list(range(cfg.max_slots))
+
+        self._decode = jax.jit(self._decode_fn)
+        self._prefill = jax.jit(self._prefill_fn,
+                                static_argnames=("pad_len",))
+
+    # ----------------------------------------------------------- jitted fns
+    def _prefill_fn(self, params, tokens, pad_len):
+        # all-position logits: prompts are right-padded, the engine reads
+        # the logits at each prompt's true last position
+        logits, cache = self.model.prefill(params, {"tokens": tokens},
+                                           return_all_logits=True)
+        return logits, cache
+
+    def _decode_fn(self, params, tokens, cache):
+        """One pool-wide decode tick; cache['len'] is the per-slot [B]
+        length vector, so every slot attends exactly its own prefix."""
+        return self.model.decode_step(params, tokens, cache)
+
+    # ------------------------------------------------------------ lifecycle
+    def submit(self, prompt: np.ndarray, max_new: int = 32,
+               temperature: float = 0.0, eos_id: Optional[int] = None) -> int:
+        req = Request(uid=next(self._uid), prompt=np.asarray(prompt, np.int32),
+                      max_new=max_new, temperature=temperature, eos_id=eos_id)
+        req.enqueued_t = time.time()
+        self.queue.append(req)
+        return req.uid
+
+    def _admit(self) -> None:
+        while self.queue and self.free_slots:
+            req = self.queue.popleft()
+            slot = self.free_slots.pop()
+            req.slot = slot
+            s = len(req.prompt)
+            if self.model.cfg.family in ("ssm", "hybrid"):
+                # SSM recurrences integrate pad positions into the state —
+                # prefill at TRUE length (attention pads are causal-inert,
+                # SSM pads are not)
+                pad_len = s
+            else:
+                pad_len = min(
+                    self.cfg.max_len,
+                    -(-s // self.cfg.prefill_pad) * self.cfg.prefill_pad)
+            toks = np.zeros((1, pad_len), np.int32)
+            toks[0, :s] = req.prompt        # right-pad (causal: pads inert)
+            logits, cache = self._prefill(self.params, jnp.asarray(toks),
+                                          pad_len=pad_len)
+            self._write_slot(slot, cache)
+            self.slot_len[slot] = s         # only the REAL prompt is valid
+            tok = self._sample(logits[0, s - 1], req)
+            req.out.append(int(tok))
+            req.first_token_t = time.time()
+            self.active[slot] = req
+
+    def _write_slot(self, slot: int, prefill_cache: dict) -> None:
+        """Copy one request's prefill cache into its slot row."""
+
+        def write(path, pool, new):
+            ps = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                          for k in path)
+            nd = pool.ndim
+            idx = [slice(None)] * nd
+            if "ssm" in ps:                 # [.., slots, H, P, N]
+                idx[nd - 4] = slice(slot, slot + 1)
+            elif "conv" in ps:              # [.., slots, K-1, C]
+                idx[nd - 3] = slice(slot, slot + 1)
+            else:                           # KV [.., slots, max_len, H, D]
+                if new.shape[nd - 3] == 0:  # qk_spiking: stateless
+                    return pool
+                idx[nd - 4] = slice(slot, slot + 1)
+                idx[nd - 3] = slice(0, new.shape[nd - 3])
+            return pool.at[tuple(idx)].set(new.astype(pool.dtype))
+
+        self.cache["layers"] = jax.tree_util.tree_map_with_path(
+            write, self.cache["layers"], prefill_cache["layers"])
+
+    def _sample(self, logits: Array, req: Request) -> int:
+        if req.temperature <= 0.0:
+            return int(jnp.argmax(logits))
+        self._rng, k = jax.random.split(self._rng)
+        return int(jax.random.categorical(k, logits / req.temperature))
+
+    def step(self) -> int:
+        """One engine tick: admit + one decode for all live slots.
+        Returns number of live sequences."""
+        self._admit()
+        if not self.active:
+            return 0
+        toks = np.zeros((self.cfg.max_slots, 1), np.int32)
+        for slot, req in self.active.items():
+            toks[slot, 0] = req.out[-1]
+        # per-slot length vector: every slot attends exactly its own prefix
+        self.cache["len"] = jnp.asarray(self.slot_len, jnp.int32)
+        logits, self.cache = self._decode(self.params, jnp.asarray(toks),
+                                          self.cache)
+        done_slots = []
+        for slot, req in list(self.active.items()):
+            tok = self._sample(logits[slot], req)
+            req.out.append(tok)
+            self.slot_len[slot] += 1
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            if hit_eos or len(req.out) >= req.max_new \
+                    or self.slot_len[slot] >= self.cfg.max_len - 1:
+                req.done = True
+                req.finished_t = time.time()
+                self.finished.append(req)
+                done_slots.append(slot)
+        for slot in done_slots:
+            del self.active[slot]
+            self.slot_len[slot] = 0
+            self.free_slots.append(slot)
+        return len(self.active)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> list[Request]:
+        for _ in range(max_ticks):
+            live = self.step()
+            if not live and not self.queue:
+                break
+        return self.finished
+
+    def stats(self) -> dict:
+        if not self.finished:
+            return {}
+        ttft = [r.first_token_t - r.enqueued_t for r in self.finished]
+        lat = [r.finished_t - r.enqueued_t for r in self.finished]
+        toks = sum(len(r.out) for r in self.finished)
+        span = max(r.finished_t for r in self.finished) - \
+            min(r.enqueued_t for r in self.finished)
+        return {"n": len(self.finished),
+                "ttft_mean_s": float(np.mean(ttft)),
+                "latency_mean_s": float(np.mean(lat)),
+                "tokens": toks,
+                "tok_per_s": toks / max(span, 1e-9)}

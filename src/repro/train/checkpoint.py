@@ -1,0 +1,126 @@
+"""Checkpointing: per-leaf .npy shards + JSON manifest, async save, and
+restore-with-resharding (the elastic re-mesh path).
+
+Layout:
+  <dir>/step_000042/
+    manifest.json        {tree: flattened key paths, shapes, dtypes, step}
+    0000.npy ... NNNN.npy  one file per leaf (host-gathered)
+
+On a real cluster each host writes only its process-local shards; here the
+single process gathers everything (jax.device_get densifies the global
+array). Restore takes a TARGET sharding tree — restoring onto a DIFFERENT
+mesh (e.g. after losing a pod) is just device_put with the new shardings,
+which is exactly what ElasticRunner does.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    paths = [jax.tree_util.keystr(p) for p, _ in
+             jax.tree_util.tree_flatten_with_path(tree)[0]]
+    return leaves, paths, treedef
+
+
+def save_checkpoint(ckpt_dir: str | Path, step: int, tree: Any,
+                    metadata: Optional[dict] = None) -> Path:
+    """Blocking save. Returns the checkpoint path."""
+    ckpt_dir = Path(ckpt_dir)
+    path = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    leaves, paths, _ = _flatten(tree)
+    host = [np.asarray(jax.device_get(l)) for l in leaves]
+    manifest = {
+        "step": step,
+        "paths": paths,
+        "shapes": [list(h.shape) for h in host],
+        "dtypes": [str(h.dtype) for h in host],
+        "metadata": metadata or {},
+        "time": time.time(),
+    }
+    for i, h in enumerate(host):
+        np.save(tmp / f"{i:04d}.npy", h)
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if path.exists():
+        shutil.rmtree(path)
+    tmp.rename(path)                    # atomic publish
+    return path
+
+
+def latest_checkpoint(ckpt_dir: str | Path) -> Optional[Path]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = sorted(p for p in ckpt_dir.iterdir()
+                   if p.is_dir() and p.name.startswith("step_"))
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(path: str | Path, like: Any,
+                       shardings: Optional[Any] = None) -> tuple[Any, int]:
+    """Restore into the structure of ``like``; ``shardings`` (same tree)
+    places each leaf — pass shardings built on the NEW mesh to reshard."""
+    path = Path(path)
+    manifest = json.loads((path / "manifest.json").read_text())
+    leaves, paths, treedef = _flatten(like)
+    assert len(leaves) == len(manifest["paths"]), \
+        f"tree mismatch: {len(leaves)} leaves vs {len(manifest['paths'])}"
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(leaves))
+    out = []
+    for i, (leaf, sh) in enumerate(zip(leaves, shard_leaves)):
+        arr = np.load(path / f"{i:04d}.npy")
+        arr = arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.device_put(arr))
+    return treedef.unflatten(out), manifest["step"]
+
+
+def prune_checkpoints(ckpt_dir: str | Path, keep: int = 3) -> None:
+    ckpt_dir = Path(ckpt_dir)
+    steps = sorted(p for p in ckpt_dir.iterdir()
+                   if p.is_dir() and p.name.startswith("step_"))
+    for p in steps[:-keep]:
+        shutil.rmtree(p)
+
+
+class AsyncCheckpointer:
+    """Non-blocking save: device->host copy happens on the caller thread
+    (cheap, avoids racing live donated buffers), disk IO on a worker."""
+
+    def __init__(self, ckpt_dir: str | Path, keep: int = 3):
+        self.ckpt_dir = Path(ckpt_dir)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_path: Optional[Path] = None
+
+    def save(self, step: int, tree: Any, metadata: Optional[dict] = None):
+        self.wait()
+        host_tree = jax.tree_util.tree_map(
+            lambda l: np.asarray(jax.device_get(l)), tree)
+
+        def work():
+            self.last_path = save_checkpoint(self.ckpt_dir, step, host_tree,
+                                             metadata)
+            prune_checkpoints(self.ckpt_dir, self.keep)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

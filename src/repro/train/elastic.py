@@ -1,0 +1,144 @@
+"""Elastic training runtime: checkpoint/restart + pod-loss re-meshing.
+
+Failure model (what actually happens at 1000-node scale): a pod (or host)
+drops; the job must (1) notice, (2) rebuild a smaller mesh from surviving
+devices, (3) reshard params/optimizer from the last checkpoint onto the new
+mesh, (4) re-assign data shards, (5) continue — without a human in the loop.
+
+``ElasticRunner`` implements that loop. Failures are injected by tests /
+examples through ``inject_failure`` (we cannot kill real pods in this
+container); everything downstream of the detection — re-mesh, reshard,
+shard re-assignment, step-function rebuild — is the real mechanism, running
+on however many host devices exist.
+
+The runner is mesh-shape-agnostic: it takes an ordered list of candidate
+mesh builders (largest first) and falls back down the list as device sets
+shrink — 2 pods -> 1 pod -> half-pod ... (elastic scaling DOWN and UP: on
+``restore_capacity`` it climbs back to the biggest buildable mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+
+from ..models import sharding as shd
+from .checkpoint import (AsyncCheckpointer, latest_checkpoint,
+                         restore_checkpoint)
+from .straggler import StragglerMonitor
+from .trainer import TrainState
+
+
+@dataclasses.dataclass
+class ElasticConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    straggler_threshold: float = 1.5
+
+
+class ElasticRunner:
+    """Drives (step_fn, state, loader) through failures.
+
+    Parameters
+    ----------
+    mesh_builders : list of () -> Mesh, ordered largest-first. On failure the
+        runner drops to the next buildable mesh.
+    make_step : (mesh) -> jitted step(state, batch) -> (state, metrics);
+        rebuilt per mesh because shardings differ.
+    make_state : (mesh) -> fresh TrainState with the mesh's shardings
+        (used only when no checkpoint exists).
+    state_shardings : (state_shape, mesh) -> sharding pytree for restore.
+    """
+
+    def __init__(self, mesh_builders: list, make_step, make_state,
+                 state_shardings, loader, cfg: ElasticConfig):
+        self.mesh_builders = mesh_builders
+        self.make_step = make_step
+        self.make_state = make_state
+        self.state_shardings = state_shardings
+        self.loader = loader
+        self.cfg = cfg
+        self.level = 0                       # index into mesh_builders
+        self._failed_at: Optional[int] = None
+        self.events: list[dict] = []
+        self.ckpt = AsyncCheckpointer(cfg.ckpt_dir, cfg.keep)
+        self._build()
+
+    # ------------------------------------------------------------- plumbing
+    def _build(self) -> None:
+        while True:
+            try:
+                self.mesh = self.mesh_builders[self.level]()
+                break
+            except Exception as e:          # not enough devices -> degrade
+                self.events.append({"kind": "mesh_unavailable",
+                                    "level": self.level, "err": str(e)})
+                self.level += 1
+                if self.level >= len(self.mesh_builders):
+                    raise RuntimeError("no buildable mesh left") from e
+        shd.set_global_mesh(self.mesh)
+        self.step_fn = self.make_step(self.mesh)
+        self.monitor = StragglerMonitor(
+            n_workers=max(1, self.mesh.devices.size // 16),
+            threshold=self.cfg.straggler_threshold)
+
+    def _restore_or_init(self) -> TrainState:
+        path = latest_checkpoint(self.cfg.ckpt_dir)
+        if path is None:
+            return self.make_state(self.mesh)
+        fresh = self.make_state(self.mesh)   # structure + shardings template
+        shape = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), fresh)
+        sh = self.state_shardings(shape, self.mesh)
+        state, step = restore_checkpoint(path, shape, sh)
+        self.events.append({"kind": "restore", "step": step,
+                            "path": str(path)})
+        return state
+
+    # ------------------------------------------------------------- failures
+    def inject_failure(self, at_step: int) -> None:
+        """Simulate losing enough devices that the current mesh dies."""
+        self._failed_at = at_step
+
+    def restore_capacity(self) -> None:
+        """Devices came back: climb to the largest buildable mesh."""
+        if self.level > 0:
+            self.level = 0
+            self.events.append({"kind": "capacity_restored"})
+
+    # ------------------------------------------------------------------ run
+    def run(self, n_steps: int) -> tuple[TrainState, list[dict]]:
+        state = self._restore_or_init()
+        metrics = None
+        while int(state.step) < n_steps:
+            step = int(state.step)
+            if self._failed_at is not None and step >= self._failed_at:
+                # ---- failure path: degrade mesh, reshard from checkpoint
+                self.ckpt.wait()
+                self.events.append({"kind": "failure", "step": step})
+                self._failed_at = None
+                self.level = min(self.level + 1, len(self.mesh_builders) - 1)
+                self._build()
+                if hasattr(self.loader, "reassign"):
+                    self.loader.reassign(0, max(1, self.mesh.devices.size // 16))
+                if hasattr(self.loader, "mesh"):
+                    self.loader.mesh = self.mesh
+                state = self._restore_or_init()
+                self.events.append({"kind": "remesh",
+                                    "mesh": dict(zip(self.mesh.axis_names,
+                                                     self.mesh.devices.shape)),
+                                    "resume_step": int(state.step)})
+                continue
+            t0 = time.time()
+            batch = self.loader(step)
+            state, metrics = self.step_fn(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            self.monitor.record(0, time.time() - t0)
+            if step > 0 and step % self.cfg.ckpt_every == 0:
+                self.ckpt.save(step, state)
+                self.events.append({"kind": "checkpoint", "step": step})
+        self.ckpt.wait()
+        return state, self.events

@@ -1,0 +1,67 @@
+"""Straggler detection + deterministic work re-assignment.
+
+At pod scale, one slow host throttles every synchronous step. The monitor
+keeps an EWMA of step times per worker; a worker whose EWMA exceeds
+``threshold`` x the fleet median is flagged and the data-shard permutation
+is rotated so its shard moves to a healthy host (deterministically — every
+host computes the same permutation from the same flags, no coordinator).
+
+The paper connection is the ELASTIC part of NEURAL: the elastic FIFO absorbs
+producer/consumer rate mismatch at PE granularity; at cluster granularity
+the same role is played by re-assigning stream shards away from slow nodes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    n_workers: int
+    ewma_alpha: float = 0.3
+    threshold: float = 1.5          # x median EWMA
+    warmup_steps: int = 5
+
+    def __post_init__(self):
+        self._ewma = np.zeros(self.n_workers)
+        self._count = np.zeros(self.n_workers, np.int64)
+
+    def record(self, worker: int, step_time_s: float) -> None:
+        if self._count[worker] == 0:
+            self._ewma[worker] = step_time_s
+        else:
+            a = self.ewma_alpha
+            self._ewma[worker] = a * step_time_s + (1 - a) * self._ewma[worker]
+        self._count[worker] += 1
+
+    def stragglers(self) -> list[int]:
+        if (self._count < self.warmup_steps).any():
+            return []
+        med = float(np.median(self._ewma))
+        if med <= 0:
+            return []
+        return [int(i) for i in range(self.n_workers)
+                if self._ewma[i] > self.threshold * med]
+
+    def shard_assignment(self) -> list[int]:
+        """worker -> shard permutation that parks flagged workers' shards on
+        the fastest workers. Deterministic given the flag set + EWMAs."""
+        order = np.argsort(self._ewma)          # fastest first
+        bad = set(self.stragglers())
+        shards = list(range(self.n_workers))
+        if not bad:
+            return shards
+        # fastest healthy workers absorb the heaviest (straggler) shards:
+        # swap each straggler's shard with the fastest non-straggler's.
+        healthy = [int(w) for w in order if int(w) not in bad]
+        for s, h in zip(sorted(bad), healthy):
+            shards[s], shards[h] = shards[h], shards[s]
+        return shards
+
+    def summary(self) -> dict:
+        return {"ewma": self._ewma.tolist(),
+                "stragglers": self.stragglers()}

@@ -1,0 +1,21 @@
+"""Shared fixtures. NOTE: no global XLA_FLAGS here — smoke tests and benches
+must see 1 device; sharded tests spawn subprocesses that set
+--xla_force_host_platform_device_count themselves."""
+import os
+
+import numpy as np
+import pytest
+
+# keep hypothesis deterministic + fast on the 1-core container
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "ci", max_examples=25, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow,
+                           HealthCheck.data_too_large])
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,82 @@
+"""Elastic re-mesh with the PRODUCTION mesh topology (pod, data, model),
+scaled to 32 virtual devices so collectives can actually EXECUTE on one CPU
+core (512-thread rendezvous deadlocks a 1-core host; the full-size meshes
+are exercised compile-only by the dry-run): compile+run a train step on the
+2-pod mesh, lose a pod, rebuild the 1-pod mesh via make_elastic_mesh,
+reshard the checkpoint onto it, recompile, and take a step.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def test_pod_loss_remesh_at_512():
+    code = """
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_config, reduced, build_model
+        from repro.launch.mesh import make_production_mesh, make_elastic_mesh
+        from repro.models import sharding as shd
+        from repro.optim.schedules import constant_lr
+        from repro.train import (make_train_step, train_state_init,
+                                 save_checkpoint, restore_checkpoint,
+                                 latest_checkpoint)
+        import tempfile
+
+        cfg = reduced(get_config('qwen3-1.7b'))
+        model = build_model(cfg)
+        step = make_train_step(model, schedule=constant_lr(1e-3))
+        ckdir = tempfile.mkdtemp()
+
+        def run_on(mesh, state=None):
+            shd.set_global_mesh(mesh)
+            NS = lambda t: jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), t,
+                is_leaf=lambda s: isinstance(s, P))
+            if state is None:
+                params = model.init(jax.random.PRNGKey(0))
+                params = jax.device_put(params, NS(shd.param_specs(params, mesh)))
+                state = train_state_init(params)
+            batch = {'tokens': jax.device_put(
+                jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                   cfg.vocab_size),
+                NS(shd.batch_specs({'t': jax.ShapeDtypeStruct((8, 32),
+                                                              jnp.int32)},
+                                   mesh))['t'])}
+            with mesh:
+                state, m = jax.jit(step)(state, batch)
+            return state, float(m['loss'])
+
+        # 2 pods of (data=4, model=4) = 32 chips (production topology)
+        mesh2 = jax.make_mesh((2, 4, 4), ('pod', 'data', 'model'),
+                              devices=jax.devices()[:32])
+        state, loss2 = run_on(mesh2)
+        save_checkpoint(ckdir, int(state.step), state)
+
+        # pod failure -> elastic 1-pod mesh (16 chips), reshard, resume
+        mesh1 = make_elastic_mesh(1, pod_shape=(4, 4))
+        shd.set_global_mesh(mesh1)
+        shape = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        NS1 = lambda t: jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh1, s), t,
+            is_leaf=lambda s: isinstance(s, P))
+        from repro.optim.adamw import AdamWState
+        sh = jax.tree_util.tree_map(lambda _: NamedSharding(mesh1, P()),
+                                    shape)
+        restored, stp = restore_checkpoint(latest_checkpoint(ckdir), shape, sh)
+        state3, loss1 = run_on(mesh1, restored)
+        print('OK steps', stp, int(state3.step), 'losses', loss2, loss1)
+        assert int(state3.step) == stp + 1
+    """
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=32",
+               PYTHONPATH=str(ROOT / "src"), JAX_PLATFORMS="cpu")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, timeout=540)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK steps" in r.stdout

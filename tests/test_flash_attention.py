@@ -1,0 +1,67 @@
+"""Pallas flash attention vs naive softmax oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+
+
+def _ref_bshd(q, k, v, causal=True):
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    ke = jnp.repeat(k, h // hkv, 2)
+    ve = jnp.repeat(v, h // hkv, 2)
+    out = flash_attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(b * h, s, d),
+        ke.transpose(0, 2, 1, 3).reshape(b * h, s, d),
+        ve.transpose(0, 2, 1, 3).reshape(b * h, s, d),
+        causal=causal, scale=d ** -0.5)
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("s,h,hkv,d,qb", [(256, 4, 4, 64, 128),
+                                          (300, 4, 2, 32, 128),
+                                          (128, 2, 1, 16, 64),
+                                          (512, 2, 2, 128, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_oracle(s, h, hkv, d, qb, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(s + d), 3)
+    q = jax.random.normal(ks[0], (2, s, h, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (2, s, hkv, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (2, s, hkv, d)).astype(dtype)
+    out = flash_attention(q, k, v, q_block=qb, kv_block=qb)
+    ref = _ref_bshd(q.astype(jnp.float32), k.astype(jnp.float32),
+                    v.astype(jnp.float32))
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+@given(st.integers(0, 200), st.sampled_from([64, 128]))
+@settings(max_examples=6)
+def test_flash_property(seed, qb):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 32))
+    k = jax.random.normal(ks[1], (1, 128, 2, 32))
+    v = jax.random.normal(ks[2], (1, 128, 2, 32))
+    out = flash_attention(q, k, v, q_block=qb, kv_block=qb)
+    ref = _ref_bshd(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_causality():
+    """Future tokens must not influence earlier outputs."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 32))
+    k = jax.random.normal(ks[1], (1, 128, 2, 32))
+    v = jax.random.normal(ks[2], (1, 128, 2, 32))
+    out1 = flash_attention(q, k, v, q_block=64, kv_block=64)
+    k2 = k.at[:, 100:].set(99.0)          # perturb the tail
+    v2 = v.at[:, 100:].set(-99.0)
+    out2 = flash_attention(q, k2, v2, q_block=64, kv_block=64)
+    np.testing.assert_allclose(np.asarray(out1[:, :100]),
+                               np.asarray(out2[:, :100]), rtol=1e-5)
+    assert float(jnp.abs(out1[:, 100:] - out2[:, 100:]).max()) > 1.0

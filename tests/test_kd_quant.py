@@ -1,0 +1,111 @@
+"""KD loss (C1) + quantization/fusion (F&Q stage)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kd import KDConfig, kd_loss, kl_divergence, sequence_kd_loss
+from repro.core.quant import (QuantConfig, fake_quant, fuse_bn_into_conv,
+                              fuse_bn_into_linear, quantize_fixed,
+                              quantize_fp8)
+from repro.models import nn
+
+
+def test_kl_zero_when_identical():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (8, 10))
+    assert float(kl_divergence(logits, logits, 4.0)) < 1e-5
+
+
+def test_kl_positive_and_temperature_scaled():
+    s = jax.random.normal(jax.random.PRNGKey(1), (8, 10))
+    t = jax.random.normal(jax.random.PRNGKey(2), (8, 10))
+    assert float(kl_divergence(s, t, 1.0)) > 0
+
+
+def test_kd_loss_mixes_ce_and_kl():
+    s = jax.random.normal(jax.random.PRNGKey(1), (8, 10))
+    t = jax.random.normal(jax.random.PRNGKey(2), (8, 10))
+    y = jnp.zeros((8,), jnp.int32)
+    loss_kd, m = kd_loss(s, t, y, KDConfig(alpha=0.7))
+    np.testing.assert_allclose(float(loss_kd),
+                               0.3 * float(m["ce"]) + 0.7 * float(m["kl"]),
+                               rtol=1e-5)
+
+
+def test_kd_gradient_pulls_student_to_teacher():
+    t = jnp.array([[4.0, 0.0, 0.0]])
+    y = jnp.array([0])
+    f = lambda s: kd_loss(s, t, y, KDConfig(alpha=1.0, temperature=1.0))[0]
+    s = jnp.zeros((1, 3))
+    g = jax.grad(f)(s)
+    assert float(g[0, 0]) < 0           # raise the teacher-preferred logit
+
+
+def test_sequence_kd_masks():
+    s = jax.random.normal(jax.random.PRNGKey(3), (2, 4, 8))
+    t = jax.random.normal(jax.random.PRNGKey(4), (2, 4, 8))
+    toks = jnp.zeros((2, 4), jnp.int32)
+    mask = jnp.ones((2, 4))
+    l1, _ = sequence_kd_loss(s, t, toks, mask=mask)
+    l2, _ = sequence_kd_loss(s, t, toks)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+# ------------------------------------------------------------------- quant
+@given(st.integers(2, 8), st.integers(0, 100))
+@settings(max_examples=20)
+def test_fixed_point_error_bound(bits, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,))
+    xq = quantize_fixed(x, bits)
+    scale = float(jnp.max(jnp.abs(x))) / (2 ** (bits - 1) - 1)
+    assert float(jnp.abs(xq - x).max()) <= scale / 2 + 1e-6
+
+
+def test_fp8_roundtrip_binary_exact():
+    x = jnp.array([0.0, 1.0, -1.0, 0.5])   # exactly representable in e4m3
+    np.testing.assert_array_equal(np.asarray(quantize_fp8(x)), np.asarray(x))
+
+
+def test_ste_gradient_is_identity():
+    g = jax.grad(lambda x: quantize_fixed(x, 4).sum())(jnp.linspace(-1, 1, 16))
+    np.testing.assert_allclose(np.asarray(g), np.ones(16), rtol=1e-6)
+
+
+def test_bn_conv_fusion_exact():
+    """F&Q operator fusion: conv+BN(eval) == fused conv. The deployment
+    transform the paper runs before generating FPGA memory files."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 8, 8, 3))
+    conv_p = nn.conv_init(key, 3, 3, 3, 16)
+    bn_p, bn_s = nn.bn_init(16)
+    bn_p = {"scale": jax.random.uniform(key, (16,), minval=0.5, maxval=2.0),
+            "bias": jax.random.normal(key, (16,))}
+    bn_s = {"mean": jax.random.normal(key, (16,)) * 0.1,
+            "var": jax.random.uniform(key, (16,), minval=0.5, maxval=1.5)}
+    y_ref, _ = nn.bn_apply(bn_p, bn_s, nn.conv_apply(conv_p, x), train=False)
+    w_f, b_f = fuse_bn_into_conv(conv_p["w"], None, bn_p["scale"],
+                                 bn_p["bias"], bn_s["mean"], bn_s["var"])
+    y_fused = nn.conv_apply({"w": w_f, "b": b_f}, x)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_fused),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_bn_linear_fusion_exact():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (4, 32))
+    w = jax.random.normal(key, (32, 16)) * 0.1
+    gamma = jax.random.uniform(key, (16,), minval=0.5, maxval=2.0)
+    beta = jax.random.normal(key, (16,))
+    mean = jax.random.normal(key, (16,)) * 0.1
+    var = jax.random.uniform(key, (16,), minval=0.5, maxval=1.5)
+    y_ref = (x @ w - mean) / jnp.sqrt(var + 1e-5) * gamma + beta
+    w_f, b_f = fuse_bn_into_linear(w, None, gamma, beta, mean, var)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(x @ w_f + b_f),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fake_quant_disabled_is_identity():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 8))
+    np.testing.assert_array_equal(
+        np.asarray(fake_quant(x, QuantConfig(enabled=False))), np.asarray(x))

@@ -1,0 +1,130 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode executes the kernel
+body on CPU). Shape/dtype sweeps per the brief."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.lif_update import lif_update, lif_update_ref
+from repro.kernels.qk_attention import qk_attention_fused, qk_attention_ref
+from repro.kernels.spike_matmul import spike_matmul, spike_matmul_ref
+from repro.kernels.spike_matmul.ops import block_sparsity
+from repro.kernels.w2ttfs_pool import w2ttfs_pool_fc, w2ttfs_pool_fc_ref
+
+
+# ------------------------------------------------------------- spike_matmul
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 128),
+                                   (100, 200, 60), (130, 129, 257)])
+@pytest.mark.parametrize("wdtype", [jnp.float32, jnp.bfloat16])
+def test_spike_matmul_shapes_dtypes(m, k, n, wdtype):
+    x = (jax.random.uniform(jax.random.PRNGKey(m + n), (m, k)) < 0.15
+         ).astype(jnp.int8)
+    w = (jax.random.normal(jax.random.PRNGKey(k), (k, n)) * 0.1).astype(wdtype)
+    out = spike_matmul(x, w)
+    ref = spike_matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-2 if wdtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-2 if wdtype == jnp.bfloat16 else 1e-5)
+
+
+def test_spike_matmul_all_silent_blocks_exact_zero():
+    """Event skip correctness at the extreme: zero input -> zero output,
+    every block skipped."""
+    x = jnp.zeros((256, 256), jnp.int8)
+    w = jax.random.normal(jax.random.PRNGKey(0), (256, 128))
+    out = spike_matmul(x, w)
+    assert float(jnp.abs(out).max()) == 0.0
+    assert float(block_sparsity(x)) == 1.0
+
+
+@given(st.integers(0, 1000), st.floats(0.0, 0.5))
+@settings(max_examples=10)
+def test_spike_matmul_property(seed, rate):
+    """Property: event-driven result == dense oracle for any sparsity."""
+    x = (jax.random.uniform(jax.random.PRNGKey(seed), (128, 256)) < rate
+         ).astype(jnp.int8)
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (256, 128)) * 0.1
+    np.testing.assert_allclose(np.asarray(spike_matmul(x, w)),
+                               np.asarray(spike_matmul_ref(x, w)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_spike_matmul_structured_sparsity_skips():
+    """Silent row-blocks are skipped yet dense rows stay exact."""
+    x = jnp.zeros((256, 256), jnp.int8).at[:128].set(1)
+    w = jax.random.normal(jax.random.PRNGKey(2), (256, 128)) * 0.1
+    assert float(block_sparsity(x)) == 0.5
+    np.testing.assert_allclose(np.asarray(spike_matmul(x, w)),
+                               np.asarray(spike_matmul_ref(x, w)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------- qk_attention
+@pytest.mark.parametrize("n,d", [(64, 32), (100, 64), (256, 128), (33, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+def test_qk_attention_shapes_dtypes(n, d, dtype):
+    q = (jax.random.uniform(jax.random.PRNGKey(n), (2, n, d)) < 0.1
+         ).astype(dtype)
+    k = (jax.random.uniform(jax.random.PRNGKey(d), (2, n, d)) < 0.3
+         ).astype(dtype)
+    out = qk_attention_fused(q, k)
+    ref = qk_attention_ref(q, k)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@given(st.integers(0, 500), st.floats(0.0, 1.0))
+@settings(max_examples=10)
+def test_qk_attention_property(seed, rate):
+    q = (jax.random.uniform(jax.random.PRNGKey(seed), (3, 64, 32)) < rate
+         ).astype(jnp.float32)
+    k = (jax.random.uniform(jax.random.PRNGKey(seed + 1), (3, 64, 32)) < 0.5
+         ).astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(qk_attention_fused(q, k)),
+                                  np.asarray(qk_attention_ref(q, k)))
+
+
+# -------------------------------------------------------------- w2ttfs_pool
+@pytest.mark.parametrize("window,b,hw,c,cls", [(2, 4, 8, 8, 10),
+                                               (4, 3, 8, 16, 100),
+                                               (8, 8, 8, 4, 10)])
+def test_w2ttfs_pool_fused_vs_oracle(window, b, hw, c, cls):
+    s = (jax.random.uniform(jax.random.PRNGKey(b), (b, hw, hw, c)) < 0.3
+         ).astype(jnp.float32)
+    ho = hw // window
+    w = jax.random.normal(jax.random.PRNGKey(1), (ho * ho * c, cls)) * 0.1
+    bias = jax.random.normal(jax.random.PRNGKey(2), (cls,))
+    out = w2ttfs_pool_fc(s, w, bias, window=window)
+    ref = w2ttfs_pool_fc_ref(s, w, bias, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------- lif_update
+@pytest.mark.parametrize("shape", [(4, 128), (3, 7, 64), (2, 5, 5, 16)])
+@pytest.mark.parametrize("soft", [False, True])
+def test_lif_update_fused_vs_oracle(shape, soft):
+    cur = jax.random.normal(jax.random.PRNGKey(0), shape)
+    v = jax.random.normal(jax.random.PRNGKey(1), shape)
+    s = (jax.random.uniform(jax.random.PRNGKey(2), shape) < 0.5
+         ).astype(jnp.float32)
+    spk, vn = lif_update(cur, v, s, soft_reset=soft)
+    spk_r, vn_r = lif_update_ref(cur, v, s, soft_reset=soft)
+    np.testing.assert_array_equal(np.asarray(spk), np.asarray(spk_r))
+    np.testing.assert_allclose(np.asarray(vn), np.asarray(vn_r), rtol=1e-6)
+
+
+@given(st.integers(0, 300), st.floats(0.1, 0.9), st.floats(0.5, 2.0))
+@settings(max_examples=10)
+def test_lif_update_property(seed, tau, vth):
+    cur = jax.random.normal(jax.random.PRNGKey(seed), (8, 64)) * 2
+    v = jax.random.normal(jax.random.PRNGKey(seed + 1), (8, 64))
+    s = (jax.random.uniform(jax.random.PRNGKey(seed + 2), (8, 64)) < 0.5
+         ).astype(jnp.float32)
+    spk, vn = lif_update(cur, v, s, tau=tau, v_th=vth)
+    spk_r, vn_r = lif_update_ref(cur, v, s, tau=tau, v_th=vth)
+    np.testing.assert_array_equal(np.asarray(spk), np.asarray(spk_r))
+    np.testing.assert_allclose(np.asarray(vn), np.asarray(vn_r),
+                               rtol=1e-5, atol=1e-6)
+    # fired neurons hard-reset to exactly 0
+    assert np.all(np.asarray(vn)[np.asarray(spk) == 1] == 0.0)

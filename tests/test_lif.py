@@ -1,0 +1,50 @@
+"""LIF neuron dynamics (paper Fig 1: MP update + threshold + hard reset)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core.lif import (LIFConfig, lif_forward, lif_multistep,
+                            lif_single_step, spike_rate, total_spikes)
+
+
+def test_single_timestep_degenerates_to_threshold():
+    """Paper's T=1 mode: s = H(I - v_th), no temporal state."""
+    cur = jnp.array([0.5, 1.0, 1.5])
+    s = lif_forward(cur, LIFConfig(v_th=1.0))
+    np.testing.assert_array_equal(np.asarray(s), [0, 1, 1])
+
+
+def test_hard_reset_zeroes_fired_neurons():
+    s, v = lif_single_step(jnp.array([2.0, 0.5]), LIFConfig(v_th=1.0))
+    np.testing.assert_array_equal(np.asarray(s), [1, 0])
+    np.testing.assert_allclose(np.asarray(v), [0.0, 0.5])
+
+
+def test_multistep_membrane_accumulation():
+    """Sub-threshold inputs accumulate over timesteps until firing."""
+    cfg = LIFConfig(tau=1.0, v_th=1.0)           # no leak for exact math
+    currents = jnp.full((4, 1), 0.4)
+    spikes = lif_multistep(currents, cfg)
+    # v: 0.4, 0.8, 1.2 -> fire at t=2, reset, 0.4
+    np.testing.assert_array_equal(np.asarray(spikes)[:, 0], [0, 0, 1, 0])
+
+
+def test_decay():
+    cfg = LIFConfig(tau=0.5, v_th=10.0)
+    currents = jnp.ones((3, 1))
+    # v: 1, 1.5, 1.75 (geometric, no firing)
+    v = 0.0
+    for _ in range(3):
+        v = 0.5 * v + 1.0
+    spikes = lif_multistep(currents, cfg)
+    assert int(total_spikes(spikes)) == 0
+
+
+@given(st.integers(1, 8), st.floats(0.1, 2.0))
+def test_rate_bounds(t, vth):
+    cur = jax.random.normal(jax.random.PRNGKey(0), (t, 16))
+    s = lif_multistep(cur, LIFConfig(v_th=vth))
+    r = float(spike_rate(s))
+    assert 0.0 <= r <= 1.0
+    assert set(np.unique(np.asarray(s))) <= {0.0, 1.0}

@@ -1,0 +1,119 @@
+"""Optimizers, schedules, compression, microbatching equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import build_model, get_config, reduced
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         compress_int8, constant_lr, cosine_lr,
+                         decompress_int8, error_feedback_init, global_norm,
+                         linear_warmup_cosine, sgd_init, sgd_update)
+from repro.train import TrainState, make_train_step, train_state_init
+
+
+def test_adamw_first_step_is_signed_lr():
+    """With bias correction, step 1 moves params by ~lr * sign(grad)."""
+    params = {"w": jnp.array([1.0, -1.0])}
+    grads = {"w": jnp.array([0.5, -0.25])}
+    state = adamw_init(params)
+    new_p, _ = adamw_update(grads, state, params, lr=0.1, eps=1e-12)
+    np.testing.assert_allclose(np.asarray(new_p["w"]),
+                               [1.0 - 0.1, -1.0 + 0.1], rtol=1e-4)
+
+
+def test_adamw_weight_decay_decoupled():
+    params = {"w": jnp.array([2.0])}
+    grads = {"w": jnp.array([0.0])}
+    new_p, _ = adamw_update(grads, adamw_init(params), params, lr=0.1,
+                            weight_decay=0.5)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), [2.0 - 0.1 * 0.5 * 2.0])
+
+
+def test_sgd_momentum_accumulates():
+    params = {"w": jnp.zeros(1)}
+    grads = {"w": jnp.ones(1)}
+    st = sgd_init(params)
+    p1, st = sgd_update(grads, st, params, lr=1.0, momentum=0.9)
+    p2, st = sgd_update(grads, st, p1, lr=1.0, momentum=0.9)
+    # steps: 1, then 1 + 0.9
+    np.testing.assert_allclose(np.asarray(p2["w"]), [-(1.0 + 1.9)], rtol=1e-6)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(norm), 10.0, rtol=1e-6)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+
+
+def test_schedules():
+    s = linear_warmup_cosine(1.0, 10, 100)
+    assert float(s(jnp.int32(0))) < 0.2
+    np.testing.assert_allclose(float(s(jnp.int32(10))), 1.0, rtol=1e-2)
+    assert float(s(jnp.int32(99))) < 0.2
+    c = cosine_lr(1.0, 100, final_frac=0.1)
+    np.testing.assert_allclose(float(c(jnp.int32(100))), 0.1, rtol=1e-5)
+    assert float(constant_lr(0.3)(jnp.int32(7))) == pytest.approx(0.3)
+
+
+# --------------------------------------------------------------- compression
+def test_int8_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (128,))
+    q, scale = compress_int8(x)
+    err = jnp.abs(decompress_int8(q, scale) - x)
+    assert float(err.max()) <= float(scale) / 2 + 1e-6
+
+
+def test_error_feedback_accumulates_truth():
+    """EF property: sum of dequantized transmissions converges to the sum of
+    true gradients (bias correction over steps)."""
+    rng = np.random.default_rng(0)
+    true_sum = np.zeros(32)
+    sent_sum = np.zeros(32)
+    err = jnp.zeros(32)
+    for step in range(50):
+        g = jnp.asarray(rng.normal(size=32) * 0.01, jnp.float32)
+        true_sum += np.asarray(g)
+        q, scale = compress_int8(g + err)
+        deq = decompress_int8(q, scale)
+        err = (g + err) - deq
+        sent_sum += np.asarray(deq)
+    # residual bounded by one quantization step, not growing with steps
+    np.testing.assert_allclose(sent_sum, true_sum, atol=2e-3)
+
+
+# ------------------------------------------------------------- microbatching
+def test_microbatch_grads_equal_full_batch():
+    """KEY equivalence: n_micro gradient accumulation == full-batch step."""
+    cfg = reduced(get_config("qwen3-1.7b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                          cfg.vocab_size)}
+    sched = constant_lr(1e-2)
+    full = make_train_step(model, schedule=sched, microbatch=0)
+    micro = make_train_step(model, schedule=sched, microbatch=4)
+    s0 = train_state_init(params)
+    s_full, m_full = full(s0, batch)
+    s1 = train_state_init(params)
+    s_micro, m_micro = micro(s1, batch)
+    for a, b in zip(jax.tree_util.tree_leaves(s_full.params),
+                    jax.tree_util.tree_leaves(s_micro.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-3, atol=5e-5)
+
+
+def test_train_step_reduces_loss():
+    cfg = reduced(get_config("qwen3-1.7b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, schedule=constant_lr(5e-3)))
+    state = train_state_init(params)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                                          cfg.vocab_size)}
+    losses = []
+    for _ in range(8):              # same batch -> loss must fall
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses

@@ -1,0 +1,99 @@
+"""Perf-pass features (EXPERIMENTS §Perf) must preserve semantics:
+sequence parallelism, frozen-context CP decode, FP8 KV, FSDP regime."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import build_model, get_config, reduced
+
+
+def _toks(cfg, b=2, s=17, key=1):
+    return jax.random.randint(jax.random.PRNGKey(key), (b, s), 0,
+                              cfg.vocab_size)
+
+
+def test_seq_shard_is_numerically_transparent():
+    """seq_shard only adds sharding constraints — on one device the loss
+    must be IDENTICAL to the unsharded model."""
+    cfg = reduced(get_config("qwen3-1.7b"))
+    cfg_sp = dataclasses.replace(cfg, seq_shard=True)
+    m, msp = build_model(cfg), build_model(cfg_sp)
+    p = m.init(jax.random.PRNGKey(0))
+    batch = {"tokens": _toks(cfg, s=32)}
+    l1, _ = m.loss(p, batch)
+    l2, _ = msp.loss(p, batch)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+@pytest.mark.parametrize("arch,kv", [("qwen3-1.7b", None),
+                                     ("qwen2.5-3b", None)])
+def test_frozen_cp_decode_exact(arch, kv):
+    """decode_cp_axis path (grouped-GQA flash-decode, no cache write) must
+    equal the full-prefill continuation bit-for-bit (within bf16 tol)."""
+    cfg = reduced(get_config(arch))
+    cfg_cp = dataclasses.replace(cfg, decode_cp_axis="model")
+    m, mcp = build_model(cfg), build_model(cfg_cp)
+    p = m.init(jax.random.PRNGKey(0))
+    toks = _toks(cfg)
+    full, _ = m.prefill(p, {"tokens": toks})
+    _, cache = m.prefill(p, {"tokens": toks[:, :-1]}, max_len=17)
+    dec, cache2 = mcp.decode_step(p, toks[:, -1:], cache)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+    # frozen context: the cache must be returned UNCHANGED
+    k_in, _ = cache["layers"]
+    k_out, _ = cache2["layers"]
+    np.testing.assert_array_equal(np.asarray(k_in), np.asarray(k_out))
+
+
+def test_frozen_cp_decode_vector_lens():
+    """Per-slot length vectors (serving engine) work through the CP path."""
+    cfg = reduced(get_config("qwen3-1.7b"), decode_cp_axis="model")
+    m = build_model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    cache = m.init_cache(3, 24)
+    cache["len"] = jnp.asarray([5, 9, 3], jnp.int32)
+    logits, c2 = m.decode_step(p, jnp.ones((3, 1), jnp.int32), cache)
+    assert logits.shape == (3, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_fp8_kv_cache():
+    """FP8 KV cache: dtype honored, decode runs, logits track bf16 closely
+    (context values are O(1) activations — e4m3 keeps ~2 decimal digits)."""
+    cfg8 = reduced(get_config("qwen3-1.7b"), kv_dtype="f8_e4m3")
+    cfg = reduced(get_config("qwen3-1.7b"))
+    m8, m = build_model(cfg8), build_model(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    c8 = m8.init_cache(2, 16)
+    assert c8["layers"][0].dtype == jnp.float8_e4m3fn
+    c = m.init_cache(2, 16)
+    # fill both caches from the same prefill (cast into fp8 for c8)
+    toks = _toks(cfg, s=15)
+    _, pc = m.prefill(p, {"tokens": toks}, max_len=16)
+    k, v = pc["layers"]
+    c8["layers"] = (k.astype(jnp.float8_e4m3fn), v.astype(jnp.float8_e4m3fn))
+    c["layers"] = (k, v)
+    c8["len"] = c["len"] = pc["len"]
+    nxt = jnp.ones((2, 1), jnp.int32)
+    l8, _ = m8.decode_step(p, nxt, c8)
+    lbf, _ = m.decode_step(p, nxt, c)
+    # same argmax, close logits
+    assert (np.argmax(np.asarray(l8), -1) == np.argmax(np.asarray(lbf), -1)).all()
+    np.testing.assert_allclose(np.asarray(l8), np.asarray(lbf),
+                               rtol=0.2, atol=0.2)
+
+
+def test_dp_over_model_flag_runs():
+    """FSDP regime flag (worst-cell fix, §Perf D) is semantics-preserving."""
+    cfg = reduced(get_config("mamba2-130m"), dp_over_model=True)
+    cfg0 = reduced(get_config("mamba2-130m"))
+    m, m0 = build_model(cfg), build_model(cfg0)
+    p = m0.init(jax.random.PRNGKey(0))
+    batch = {"tokens": _toks(cfg0, s=32)}
+    l1, _ = m.loss(p, batch)
+    l0, _ = m0.loss(p, batch)
+    np.testing.assert_allclose(float(l1), float(l0), rtol=1e-6)

@@ -1,0 +1,86 @@
+"""Spiking QKFormer attention (paper C4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.qk_attention import (qk_channel_attention, qk_token_mask,
+                                     qk_token_attention,
+                                     spiking_self_attention)
+
+
+def _spk(key, shape, rate=0.2):
+    return (jax.random.uniform(jax.random.PRNGKey(key), shape)
+            < rate).astype(jnp.float32)
+
+
+def test_or_mode_equals_any_spike():
+    q = _spk(0, (2, 16, 32))
+    m = qk_token_mask(q, mode="or")
+    np.testing.assert_array_equal(
+        np.asarray(m[..., 0]), np.asarray((q.sum(-1) > 0)).astype(np.float32))
+
+
+def test_token_mask_is_rowwise_local():
+    """Row i's mask depends only on row i of Q — the property that allows
+    NEURAL's on-the-fly write-back fusion (Fig 5) and O(1) decode."""
+    q = _spk(1, (8, 16))
+    m1 = qk_token_mask(q, mode="or")
+    q2 = q.at[3].set(1.0 - q[3])        # perturb one row
+    m2 = qk_token_mask(q2, mode="or")
+    changed = np.nonzero(np.asarray(m1 != m2).any(-1))[0]
+    assert set(changed) <= {3}
+
+
+def test_threshold_mode_binary_and_monotone():
+    q = _spk(2, (4, 64, 32), rate=0.5)
+    m1 = qk_token_mask(q, mode="threshold", threshold=1.0)
+    m8 = qk_token_mask(q, mode="threshold", threshold=8.0)
+    assert set(np.unique(np.asarray(m1))) <= {0.0, 1.0}
+    assert float(m8.sum()) <= float(m1.sum())   # higher bar, fewer tokens
+
+
+def test_masked_output_zeroes_inactive_tokens():
+    q = _spk(3, (16, 32))
+    k = _spk(4, (16, 32), rate=0.5)
+    out = qk_token_attention(q, k, mode="or")
+    inactive = np.asarray(q.sum(-1) == 0)
+    assert np.all(np.asarray(out)[inactive] == 0)
+    active = ~inactive
+    np.testing.assert_array_equal(np.asarray(out)[active],
+                                  np.asarray(k)[active])
+
+
+@given(st.integers(0, 1000), st.sampled_from([17, 64, 130]))
+@settings(max_examples=10)
+def test_causal_ssa_matches_naive(seed, n):
+    """Chunked causal Q(K^T V) == naive masked (QK^T)V on binary spikes."""
+    q = _spk(seed, (2, n, 16))
+    k = _spk(seed + 1, (2, n, 16))
+    v = _spk(seed + 2, (2, n, 16))
+    fast = spiking_self_attention(q, k, v, scale=1.0, causal=True)
+    scores = jnp.einsum("bnd,bmd->bnm", q, k)
+    mask = jnp.tril(jnp.ones((n, n)))
+    naive = jnp.einsum("bnm,bme->bne", scores * mask, v)
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(naive),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_noncausal_ssa_linear_identity():
+    """Q(K^T V) == (QK^T)V — the linear-attention identity binary spikes buy."""
+    q = _spk(5, (2, 32, 16))
+    k = _spk(6, (2, 32, 16))
+    v = _spk(7, (2, 32, 16))
+    fast = spiking_self_attention(q, k, v, scale=0.5, causal=False)
+    naive = jnp.einsum("bnm,bme->bne", jnp.einsum("bnd,bmd->bnm", q, k),
+                       v) * 0.5
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(naive),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_channel_attention_shapes():
+    q = _spk(8, (2, 4, 16, 32))
+    k = _spk(9, (2, 4, 16, 32))
+    out = qk_channel_attention(q, k, mode="or")
+    assert out.shape == k.shape

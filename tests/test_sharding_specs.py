@@ -1,0 +1,118 @@
+"""Sharding rule unit tests (no multi-device needed) + the analyzer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import build_model, get_config, reduced
+from repro.launch.hlo_analysis import (analyze, parse_hlo, shape_dims,
+                                       type_bytes)
+from repro.models.sharding import param_specs, spec_for_leaf
+
+
+def test_spec_rules():
+    assert spec_for_leaf("blocks/attn/wq/w", 3) == P(None, None, "model")
+    assert spec_for_leaf("blocks/attn/wo/w", 3) == P(None, "model", None)
+    assert spec_for_leaf("blocks/mlp/gate/w", 3) == P(None, None, "model")
+    assert spec_for_leaf("blocks/mlp/down/w", 3) == P(None, "model", None)
+    assert spec_for_leaf("embed/emb", 2) == P("model", None)
+    assert spec_for_leaf("blocks/moe/w_gate", 4) == P(None, "model", None, None)
+    assert spec_for_leaf("blocks/moe/router/w", 3) == P(None, None, None)
+    assert spec_for_leaf("final_norm/scale", 1) in (P(), P(None))
+    assert spec_for_leaf("blocks/mamba/in_proj/w", 3) == P(None, None, "model")
+    assert spec_for_leaf("blocks/mamba/out_proj/w", 3) == P(None, "model", None)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "olmoe-1b-7b", "mamba2-130m",
+                                  "zamba2-7b", "seamless-m4t-large-v2"])
+def test_param_specs_cover_tree(arch):
+    """Every leaf gets a spec with matching rank; big matmul weights are
+    never left fully replicated."""
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = param_specs(shape)
+    flat_s, _ = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    flat_l = jax.tree_util.tree_leaves(shape)
+    assert len(flat_s) == len(flat_l)
+    for leaf, spec in zip(flat_l, flat_s):
+        assert len(spec) <= leaf.ndim
+    # matmul params (>= 2 dims, big) must be sharded somewhere
+    for (path, leaf), spec in zip(
+            jax.tree_util.tree_flatten_with_path(shape)[0], flat_s):
+        ps = jax.tree_util.keystr(path)
+        if leaf.ndim >= 2 and "norm" not in ps and "router" not in ps \
+                and min(leaf.shape[-2:]) >= 64:
+            assert any(s is not None for s in spec), (ps, spec)
+
+
+# ------------------------------------------------------------- hlo analyzer
+_FAKE_HLO = """
+HloModule test, is_scheduled=true
+
+%body (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = (s32[], f32[8,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,128]{1,0} get-tuple-element(%p), index=1
+  %w = f32[128,128]{1,0} constant({...})
+  %dot = f32[8,128]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,128]{1,0} all-reduce(%dot), replica_groups=[2,4]<=[8], to_apply=%add
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,128]) tuple(%ip, %ar)
+}
+
+%cond (p2: (s32[], f32[8,128])) -> pred[] {
+  %p2 = (s32[], f32[8,128]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i2, %n), direction=LT
+}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (x0: f32[8,128]) -> f32[8,128] {
+  %x0 = f32[8,128]{1,0} parameter(0)
+  %c0 = s32[] constant(0)
+  %tup = (s32[], f32[8,128]) tuple(%c0, %x0)
+  %wh = (s32[], f32[8,128]) while(%tup), condition=%cond, body=%body
+  ROOT %out = f32[8,128]{1,0} get-tuple-element(%wh), index=1
+}
+"""
+
+
+def test_analyzer_trip_count_scaling():
+    r = analyze(_FAKE_HLO)
+    # dot: 2*8*128*128 flops, x12 iterations
+    assert r["flops"] == pytest.approx(12 * 2 * 8 * 128 * 128)
+    ar = r["collectives"]["all-reduce"]
+    assert ar["count"] == 12
+    # ring all-reduce wire bytes: 2*(n-1)/n * bytes, n=4 (iota groups [2,4])
+    per = 8 * 128 * 4
+    assert ar["wire_bytes"] == pytest.approx(12 * 2 * 3 / 4 * per)
+
+
+def test_shape_parsing():
+    assert type_bytes("f32[8,128]{1,0}") == 8 * 128 * 4
+    assert type_bytes("(bf16[4,4], s32[])") == 4 * 4 * 2 + 4
+    assert shape_dims("pred[7]") == [("pred", (7,))]
+
+
+def test_analyzer_on_real_scan():
+    """End-to-end on a real compiled module (single device)."""
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((5, 64, 64), jnp.float32)
+    c = jax.jit(f).lower(x, ws).compile()
+    r = analyze(c.as_text())
+    assert r["flops"] == pytest.approx(5 * 2 * 64 * 64 * 64, rel=0.01)

@@ -1,0 +1,125 @@
+"""The paper's deployed models (VGG-11 / ResNet-11 / QKFResNet-11):
+full-spike execution, F&Q fusion equivalence, W2TTFS head, T>1 baseline."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quant import QuantConfig
+from repro.models import snn_cnn
+from repro.models.snn_cnn import SNNCNNConfig
+
+
+def _cfg(arch, **kw):
+    return SNNCNNConfig(arch=arch, num_classes=10, image_size=32,
+                        width_mult=0.125, **kw)
+
+
+def _imgs(b=2, key=0):
+    return jax.random.normal(jax.random.PRNGKey(key), (b, 32, 32, 3))
+
+
+@pytest.mark.parametrize("arch", ["vgg11", "resnet11", "qkfresnet11"])
+def test_forward_shapes_and_finite(arch):
+    cfg = _cfg(arch)
+    var = snn_cnn.init(jax.random.PRNGKey(0), cfg)
+    logits, _, aux = snn_cnn.apply(var, _imgs(), cfg, train=False)
+    assert logits.shape == (2, 10)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert float(aux["total_spikes"]) > 0
+
+
+@pytest.mark.parametrize("arch", ["vgg11", "qkfresnet11"])
+def test_full_spike_execution(arch):
+    """Every inter-layer activation is binary — the paper's full-spike
+    claim (C2/C3): spike rates in [0,1] and integer spike counts."""
+    cfg = _cfg(arch)
+    var = snn_cnn.init(jax.random.PRNGKey(0), cfg)
+    _, _, aux = snn_cnn.apply(var, _imgs(), cfg, train=False)
+    for name, rate in aux["rates"].items():
+        r = float(rate)
+        assert 0.0 <= r <= 1.0, (name, r)
+    for name, count in aux["spikes"].items():
+        c = float(count)
+        assert abs(c - round(c)) < 1e-3, (name, c)   # whole spikes only
+
+
+def test_train_gradients_flow():
+    cfg = _cfg("resnet11")
+    var = snn_cnn.init(jax.random.PRNGKey(0), cfg)
+    imgs, labels = _imgs(4), jnp.array([0, 1, 2, 3])
+
+    def loss_fn(params):
+        logits, _, _ = snn_cnn.apply({"params": params,
+                                      "state": var["state"]}, imgs, cfg,
+                                     train=True)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, labels[:, None], 1).mean()
+
+    g = jax.grad(loss_fn)(var["params"])
+    gn = sum(float(jnp.abs(x).sum()) for x in jax.tree_util.tree_leaves(g))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ["vgg11", "resnet11", "qkfresnet11"])
+def test_fuse_model_close_to_eval(arch):
+    """F&Q stage: BN-fused inference == eval-mode unfused network (exact up
+    to float assoc). This is the deployment artifact NEURAL executes."""
+    cfg = _cfg(arch)
+    var = snn_cnn.init(jax.random.PRNGKey(0), cfg)
+    # non-trivial BN state so fusion actually does something
+    var["state"] = jax.tree_util.tree_map(
+        lambda s: s + 0.1 * jax.random.uniform(jax.random.PRNGKey(1),
+                                               s.shape), var["state"])
+    imgs = _imgs()
+    ref, _, _ = snn_cnn.apply(var, imgs, cfg, train=False)
+    fused = snn_cnn.fuse_model(var, cfg)
+    out, aux = snn_cnn.apply_fused(fused, imgs, cfg)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_event_kernel_path_bit_exact():
+    """C3 integration: routing the QKFormer matmuls through the Pallas
+    spike_matmul (block event-skip) changes NOTHING numerically."""
+    cfg = dataclasses.replace(_cfg("qkfresnet11"), image_size=16)
+    cfg_ev = dataclasses.replace(cfg, use_event_kernels=True)
+    var = snn_cnn.init(jax.random.PRNGKey(0), cfg)
+    fused = snn_cnn.fuse_model(var, cfg)
+    imgs = _imgs()[:, :16, :16, :]
+    ref, _ = snn_cnn.apply_fused(fused, imgs, cfg)
+    ev, _ = snn_cnn.apply_fused(fused, imgs, cfg_ev)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(ev),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_quantized_fused_model_runs():
+    cfg = _cfg("vgg11", quant=QuantConfig(enabled=True, bits=8))
+    var = snn_cnn.init(jax.random.PRNGKey(0), cfg)
+    fused = snn_cnn.fuse_model(var, cfg)
+    out, _ = snn_cnn.apply_fused(fused, _imgs(), cfg)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_multi_timestep_baseline():
+    """T=4 baseline (SiBrain-style) runs and spikes accumulate over T."""
+    cfg1 = _cfg("resnet11", timesteps=1)
+    cfg4 = _cfg("resnet11", timesteps=4)
+    var = snn_cnn.init(jax.random.PRNGKey(0), cfg1)
+    _, _, aux1 = snn_cnn.apply(var, _imgs(), cfg1, train=False)
+    _, _, aux4 = snn_cnn.apply(var, _imgs(), cfg4, train=False)
+    assert float(aux4["total_spikes"]) > float(aux1["total_spikes"])
+
+
+def test_w2ttfs_head_equals_avgpool_head():
+    """Swapping the AP head for W2TTFS must not change logits (paper's
+    accuracy-preservation argument, end-to-end through a real model)."""
+    cfg_w = _cfg("vgg11", head="w2ttfs")
+    cfg_a = _cfg("vgg11", head="avgpool")
+    var = snn_cnn.init(jax.random.PRNGKey(0), cfg_w)
+    lw, _, _ = snn_cnn.apply(var, _imgs(), cfg_w, train=False)
+    la, _, _ = snn_cnn.apply(var, _imgs(), cfg_a, train=False)
+    np.testing.assert_allclose(np.asarray(lw), np.asarray(la),
+                               rtol=1e-4, atol=1e-4)

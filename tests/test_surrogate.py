@@ -1,0 +1,38 @@
+"""Surrogate-gradient spike function (core enabler of C1 training)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.surrogate import available_surrogates, spike
+
+
+def test_forward_is_heaviside():
+    v = jnp.array([-2.0, -1e-6, 0.0, 1e-6, 3.0])
+    out = spike(v)
+    np.testing.assert_array_equal(np.asarray(out), [0, 0, 1, 1, 1])
+
+
+@pytest.mark.parametrize("name", available_surrogates())
+def test_gradient_matches_registered_surrogate(name):
+    v = jnp.linspace(-2, 2, 41)
+    g = jax.vmap(jax.grad(lambda x: spike(x, name, 2.0)))(v)
+    assert bool(jnp.all(jnp.isfinite(g)))
+    # surrogate gradients are nonnegative and peak at the threshold
+    assert bool(jnp.all(g >= 0))
+    assert float(g[20]) == float(jnp.max(g))    # v=0 is the peak
+
+
+@given(st.floats(-10, 10), st.sampled_from(list(available_surrogates())),
+       st.floats(0.5, 4.0))
+def test_output_is_binary(v, name, alpha):
+    out = float(spike(jnp.asarray(v, jnp.float32), name, alpha))
+    assert out in (0.0, 1.0)
+
+
+def test_gradient_flows_through_composition():
+    # d/dw of spike(w*x - th) must be nonzero near threshold (trainability)
+    f = lambda w: spike(w * 1.0 - 1.0).sum()
+    g = jax.grad(f)(jnp.float32(1.0))
+    assert float(g) > 0.0

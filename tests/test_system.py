@@ -1,0 +1,89 @@
+"""End-to-end behaviour of the paper's system: the full NEURAL pipeline
+(Fig 7 design flow) from training to deployed spiking inference, plus the
+framework glue (train -> checkpoint -> serve) on a reduced LM."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import build_model, get_config, reduced
+from repro.core.kd import KDConfig
+from repro.core.quant import QuantConfig
+from repro.data import SyntheticImageDataset, SyntheticTokenDataset
+from repro.models import snn_cnn
+from repro.optim import sgd_init
+from repro.optim.schedules import constant_lr
+from repro.serve import Engine, EngineConfig
+from repro.train import (make_kd_train_step, make_train_step,
+                         restore_checkpoint, save_checkpoint,
+                         latest_checkpoint, train_state_init)
+
+
+def test_paper_pipeline_end_to_end(tmp_path):
+    """KD-train a tiny single-timestep SNN, quantize+fuse it (F&Q), run it
+    full-spike with the W2TTFS head — the complete deployment flow."""
+    ds = SyntheticImageDataset(num_classes=4, image_size=16, seed=0,
+                               noise=0.4)
+    cfg = snn_cnn.SNNCNNConfig(arch="resnet11", num_classes=4,
+                               image_size=16, width_mult=0.125, timesteps=1,
+                               quant=QuantConfig(enabled=True, bits=8))
+    var = snn_cnn.init(jax.random.PRNGKey(0), cfg)
+
+    # teacher: the analytic class means give a perfect nearest-mean oracle
+    means = jnp.asarray(ds.means.reshape(4, -1))
+
+    def teacher_apply(_, imgs):
+        flat = imgs.reshape(imgs.shape[0], -1)
+        d = -jnp.sum((flat[:, None, :] - means[None]) ** 2, -1)
+        return d / 100.0
+
+    def student_apply(p, s, x):
+        logits, new_s, _ = snn_cnn.apply({"params": p, "state": s}, x, cfg,
+                                         train=True)
+        return logits, new_s
+
+    step = jax.jit(make_kd_train_step(
+        student_apply, teacher_apply, None, kd=KDConfig(alpha=0.5),
+        schedule=constant_lr(0.1)))
+    carry = (var["params"], sgd_init(var["params"]), var["state"])
+    for i in range(60):
+        imgs, labels = ds.batch(i, 32)
+        carry, metrics = step(carry, {"images": jnp.asarray(imgs),
+                                      "labels": jnp.asarray(labels)})
+    params, _, state = carry
+
+    # deployment: fuse BN + quantize -> full-spike inference, W2TTFS head
+    fused = snn_cnn.fuse_model({"params": params, "state": state}, cfg)
+    imgs, labels = ds.batch(9999, 64)
+    logits, aux = snn_cnn.apply_fused(fused, jnp.asarray(imgs), cfg)
+    acc = float((np.argmax(np.asarray(logits), -1) == labels).mean())
+    assert acc > 0.5, f"deployed spiking model accuracy {acc}"
+    assert float(aux["total_spikes"]) > 0
+
+
+def test_lm_train_checkpoint_serve(tmp_path):
+    """Train a reduced LM, checkpoint it, restore, serve through the
+    continuous-batching engine — the whole framework path."""
+    cfg = reduced(get_config("qwen3-1.7b"))
+    model = build_model(cfg)
+    ds = SyntheticTokenDataset(cfg.vocab_size, seq_len=33)
+    step = jax.jit(make_train_step(model, schedule=constant_lr(3e-3)))
+    state = train_state_init(model.init(jax.random.PRNGKey(0)))
+    first = last = None
+    for i in range(8):
+        state, m = step(state, {"tokens": jnp.asarray(ds.batch(i, 8))})
+        first = first if first is not None else float(m["loss"])
+        last = float(m["loss"])
+    assert last < first
+
+    save_checkpoint(tmp_path, int(state.step), state.params)
+    like = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state.params)
+    params2, step_no = restore_checkpoint(latest_checkpoint(tmp_path), like)
+    assert step_no == 8
+
+    eng = Engine(model, params2, EngineConfig(max_slots=2, max_len=48,
+                                              prefill_pad=8))
+    eng.submit(np.arange(6), max_new=4)
+    eng.submit(np.arange(9), max_new=4)
+    done = eng.run_until_drained()
+    assert len(done) == 2 and all(len(r.out) == 4 for r in done)

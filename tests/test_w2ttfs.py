@@ -1,0 +1,74 @@
+"""W2TTFS (paper C2, Algorithm 1): the four-way equivalence that justifies
+the mechanism — Algorithm-1 reference == NEURAL's optimized WTFC (unit scale
++ time reuse) == the algebraic classifier == plain avgpool+FC on binary
+spikes. This equivalence IS the paper's accuracy-preservation claim."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.w2ttfs import (avgpool_classifier, w2ttfs_classifier,
+                               w2ttfs_expand, w2ttfs_reference,
+                               w2ttfs_time_reuse, window_counts)
+
+
+def _spikes(key, b, h, w, c, rate=0.3):
+    return (jax.random.uniform(jax.random.PRNGKey(key), (b, h, w, c))
+            < rate).astype(jnp.float32)
+
+
+@pytest.mark.parametrize("window,b,hw,c,cls", [
+    (2, 3, 8, 16, 10), (4, 2, 8, 8, 100), (8, 1, 8, 4, 10), (4, 5, 16, 3, 7)])
+def test_four_way_equivalence(window, b, hw, c, cls):
+    spikes = _spikes(42, b, hw, hw, c)
+    ho = hw // window
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    fc_w = jax.random.normal(k1, (ho * ho * c, cls), jnp.float32) * 0.1
+    fc_b = jax.random.normal(k2, (cls,), jnp.float32)
+
+    ref = w2ttfs_reference(spikes, fc_w, fc_b, window)      # Algorithm 1
+    opt = w2ttfs_classifier(spikes, fc_w, fc_b, window)     # WTFC algebraic
+    reuse = w2ttfs_time_reuse(spikes, fc_w, fc_b, window)   # HW time reuse
+    ann = avgpool_classifier(spikes, fc_w, fc_b, window)    # replaced op
+
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(opt),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(opt), np.asarray(reuse),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(opt), np.asarray(ann),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_expand_is_onehot_over_time():
+    spikes = _spikes(0, 2, 8, 8, 4)
+    exp = w2ttfs_expand(spikes, 4)                  # [T=17, B, 2, 2, 4]
+    assert exp.shape[0] == 17
+    np.testing.assert_array_equal(
+        np.asarray(exp.sum(axis=0)), np.ones((2, 2, 2, 4)))  # exactly one t
+    # the firing time equals the window spike count
+    cnt = window_counts(spikes, 4)
+    t_idx = jnp.argmax(exp, axis=0)
+    np.testing.assert_array_equal(np.asarray(t_idx), np.asarray(cnt))
+
+
+@given(st.integers(0, 10_000), st.sampled_from([2, 4]),
+       st.floats(0.0, 1.0))
+@settings(max_examples=20)
+def test_equivalence_property(seed, window, rate):
+    """Property: for ANY binary map and window, WTFC == Algorithm 1."""
+    spikes = _spikes(seed, 2, 8, 8, 4, rate)
+    ho = 8 // window
+    fc_w = jax.random.normal(jax.random.PRNGKey(seed + 1),
+                             (ho * ho * 4, 10)) * 0.1
+    fc_b = jnp.zeros((10,))
+    ref = w2ttfs_reference(spikes, fc_w, fc_b, window)
+    opt = w2ttfs_classifier(spikes, fc_w, fc_b, window)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(opt),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_counts_range():
+    spikes = _spikes(1, 2, 16, 16, 8, rate=0.9)
+    cnt = window_counts(spikes, 4)
+    assert int(cnt.min()) >= 0 and int(cnt.max()) <= 16
