@@ -2,22 +2,85 @@
 mode measures Python-level kernel-body cost, NOT TPU perf — the TPU numbers
 are the roofline estimates derived from each kernel's flops/bytes) + the
 event-skip FLOP savings measured on structured-sparsity inputs.
+
+Emits every row both as CSV on stdout and as machine-readable JSON
+(``BENCH_kernels.json``, see ``--out``) so the perf trajectory — in
+particular the fused-PE HBM-byte reduction vs the unfused 4-kernel chain —
+is tracked across PRs.
 """
 from __future__ import annotations
+
+import argparse
+import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import RooflineEstimate, time_call
+from repro.kernels.fused_pe import fused_pe, fused_pe_ref
 from repro.kernels.lif_update import lif_update_ref
 from repro.kernels.qk_attention import qk_attention_ref
 from repro.kernels.spike_matmul import spike_matmul_ref
 from repro.kernels.spike_matmul.ops import block_sparsity
 from repro.kernels.w2ttfs_pool import w2ttfs_pool_fc_ref
 
+ROWS: list[dict] = []
 
-def main() -> None:
+
+def emit(kernel: str, case: str, flops: float, bytes_: float,
+         cpu_ref_us: float | None = None, **extra) -> None:
+    est = RooflineEstimate(flops, bytes_)
+    bound = "compute" if est.compute_s > est.memory_s else "memory"
+    row = {"kernel": kernel, "case": case, "flops": flops, "bytes": bytes_,
+           "tpu_time_us": est.time_s * 1e6, "tpu_bound": bound,
+           "cpu_ref_us": cpu_ref_us, **extra}
+    ROWS.append(row)
+    cpu = "-" if cpu_ref_us is None else f"{cpu_ref_us:.0f}"
+    print(f"{kernel},{case},{flops:.3e},{bytes_:.3e},"
+          f"{est.time_s * 1e6:.2f},{bound},{cpu}")
+
+
+def _structured(m, k, frac_silent, seed=1, rate=0.2):
+    rows_on = int(m * (1 - frac_silent))
+    x = jnp.zeros((m, k), jnp.int8)
+    if rows_on:
+        x = x.at[:rows_on].set(
+            (jax.random.uniform(jax.random.PRNGKey(seed), (rows_on, k))
+             < rate).astype(jnp.int8))
+    return x
+
+
+# ------------------------------------------------- fused PE HBM-byte model
+def fused_chain_bytes(m: int, k: int, n: int, dq: int, *,
+                      stateful: bool) -> dict:
+    """Modeled HBM bytes per layer: unfused 4-kernel chain vs one fused pass.
+
+    Unfused (what the pre-fusion code executed): spike_matmul writes the f32
+    pre-activation to HBM; lif_update reads it back (+ v_prev/s_prev) and
+    writes spikes + v_next; qk_attention re-reads Q and the spikes and
+    writes the masked map; block_count_map_2d re-reads the spikes once more.
+    Fused: x/w/Q in, spikes (+ v_next when stateful) and the next layer's
+    tiny count map out — the three intermediate full-tensor round-trips
+    (f32 pre-act, spike re-read for QK, spike re-read for vld) are gone.
+    """
+    mn = m * n
+    vld_bytes = 4 * (m // 128) * (n // 128)
+    state_rw = (4 + 1 + 4) * mn          # v_prev + s_prev in, v_next out
+    unfused = (
+        m * k * 1 + k * n * 4 + 4 * mn   # spike_matmul: x, w -> f32 pre-act
+        + 4 * mn + state_rw + 1 * mn     # lif: pre-act + state -> spikes
+        + m * dq * 1 + 1 * mn + 1 * mn   # qk: Q + spikes -> masked spikes
+        + 1 * mn + vld_bytes)            # count map: spikes -> vld
+    fused = (m * k * 1 + k * n * 4       # x, w
+             + m * dq * 1                # Q (atten_reg row sums)
+             + (state_rw if stateful else 0)
+             + 1 * mn + vld_bytes)       # spikes + on-the-fly vld out
+    return {"unfused": float(unfused), "fused": float(fused),
+            "reduction": unfused / fused}
+
+
+def main(json_path: str = "BENCH_kernels.json") -> None:
     print("# kernel roofline model (TPU v5e) + measured CPU oracle time")
     print("kernel,case,flops,bytes,tpu_time_us,tpu_bound,cpu_ref_us")
 
@@ -25,52 +88,75 @@ def main() -> None:
     m = k = n = 1024
     w = jax.random.normal(jax.random.PRNGKey(0), (k, n), jnp.float32)
     for frac_silent in (0.0, 0.5, 0.9):
-        rows_on = int(m * (1 - frac_silent))
-        x = jnp.zeros((m, k), jnp.int8).at[:rows_on].set(
-            (jax.random.uniform(jax.random.PRNGKey(1), (rows_on, k)) < 0.2
-             ).astype(jnp.int8))
+        x = _structured(m, k, frac_silent)
         skip = float(block_sparsity(x))
         flops = 2.0 * m * k * n * (1 - skip)
         bytes_ = m * k * 1 + k * n * 4 + m * n * 4
-        est = RooflineEstimate(flops, bytes_)
         t_cpu = time_call(jax.jit(spike_matmul_ref), x, w) * 1e6
-        bound = "compute" if est.compute_s > est.memory_s else "memory"
-        print(f"spike_matmul,silent={frac_silent:.0%} (skip={skip:.0%}),"
-              f"{flops:.3e},{bytes_:.3e},{est.time_s * 1e6:.2f},{bound},"
-              f"{t_cpu:.0f}")
+        emit("spike_matmul", f"silent={frac_silent:.0%} (skip={skip:.0%})",
+             flops, bytes_, t_cpu)
 
     # spike_matmul COMPUTE-BOUND case: at M=K=N=4096 the dense matmul is
     # MXU-bound, so block skipping converts directly into time (the regime
     # where the paper's event-driven skip pays on TPU)
     mC = kC = nC = 4096
     for frac_silent in (0.0, 0.5, 0.9):
-        rows_on = int(mC * (1 - frac_silent))
         skip = frac_silent          # structured: whole row-blocks silent
         flops = 2.0 * mC * kC * nC * (1 - skip)
         bytes_ = mC * kC * 1 + kC * nC * 2 + mC * nC * 4
-        est = RooflineEstimate(flops, bytes_)
-        bound = "compute" if est.compute_s > est.memory_s else "memory"
-        print(f"spike_matmul,4096^3 silent={frac_silent:.0%},{flops:.3e},"
-              f"{bytes_:.3e},{est.time_s * 1e6:.2f},{bound},-")
+        emit("spike_matmul", f"4096^3 silent={frac_silent:.0%}", flops,
+             bytes_)
+
+    # ------------------------------------------------------------- fused PE
+    # the tentpole: matmul+LIF+QK+vld in ONE pass vs the 4-kernel chain.
+    # Modeled at 1024^3 per sparsity level; FLOPs scale with the block skip,
+    # bytes do not (the skip saves MXU issue, the fusion saves HBM).
+    dq = n
+    q = _structured(m, dq, 0.0, seed=3, rate=0.05)
+    for frac_silent in (0.0, 0.5, 0.9):
+        x = _structured(m, k, frac_silent)
+        skip = float(block_sparsity(x))
+        flops = 2.0 * m * k * n * (1 - skip) + 5.0 * m * n + m * dq
+        for stateful in (False, True):
+            byt = fused_chain_bytes(m, k, n, dq, stateful=stateful)
+            tag = "stateful" if stateful else "deployed T=1"
+            emit("fused_pe", f"{tag} silent={frac_silent:.0%}", flops,
+                 byt["fused"], None, hbm_bytes_unfused=byt["unfused"],
+                 hbm_reduction=byt["reduction"])
+            emit("fused_pe", f"(unfused 4-kernel chain; {tag} "
+                 f"silent={frac_silent:.0%})", flops, byt["unfused"])
+
+    # measured: composed oracle chain (the exact computation the fused
+    # kernel performs) at a CPU-tractable size
+    ms = ks = ns = 256
+    xs = _structured(ms, ks, 0.5)
+    ws = jax.random.normal(jax.random.PRNGKey(4), (ks, ns)) * 0.1
+    qs = _structured(ms, ns, 0.0, seed=5, rate=0.05)
+
+    def composed(x_, w_, q_):
+        spk, vn, vld = fused_pe_ref(x_, w_, q=q_)
+        return spk, vld
+
+    t_chain = time_call(jax.jit(composed), xs, ws, qs) * 1e6
+    emit("fused_pe", f"composed-oracle {ms}^3 (measured)", 0.0, 0.0, t_chain)
+    out = fused_pe(xs, ws, q=qs)       # interpret-mode correctness anchor
+    spk_ref, _, _ = fused_pe_ref(xs, ws, q=qs)
+    assert np.array_equal(np.asarray(out.spikes), np.asarray(spk_ref))
 
     # qk_attention: N=4096, D=512 — one HBM pass
     nq, d = 4096, 512
-    q = (jax.random.uniform(jax.random.PRNGKey(2), (nq, d)) < 0.1
-         ).astype(jnp.float32)
+    qq = (jax.random.uniform(jax.random.PRNGKey(2), (nq, d)) < 0.1
+          ).astype(jnp.float32)
     kk = (jax.random.uniform(jax.random.PRNGKey(3), (nq, d)) < 0.3
           ).astype(jnp.float32)
     flops = nq * d * 2.0
     bytes_ = 3 * nq * d * 1                     # int8 spikes in/out
-    est = RooflineEstimate(flops, bytes_)
-    t_cpu = time_call(jax.jit(qk_attention_ref), q, kk) * 1e6
-    print(f"qk_attention,N={nq} D={d},{flops:.3e},{bytes_:.3e},"
-          f"{est.time_s * 1e6:.2f},memory,{t_cpu:.0f}")
+    t_cpu = time_call(jax.jit(qk_attention_ref), qq, kk) * 1e6
+    emit("qk_attention", f"N={nq} D={d}", flops, bytes_, t_cpu)
     # vs the O(N^2) softmax attention it replaces
     soft_flops = 2.0 * nq * nq * d * 2
     soft_bytes = nq * nq * 4 * 2
-    est_s = RooflineEstimate(soft_flops, soft_bytes)
-    print(f"qk_attention,(softmax ref same N),{soft_flops:.3e},"
-          f"{soft_bytes:.3e},{est_s.time_s * 1e6:.2f},compute,-")
+    emit("qk_attention", "(softmax ref same N)", soft_flops, soft_bytes)
 
     # w2ttfs_pool: B=128 batch head
     b, hw, c, cls, win = 128, 8, 512, 10, 8
@@ -80,11 +166,9 @@ def main() -> None:
     fb = jnp.zeros((cls,))
     flops = b * hw * hw * c + 2.0 * b * c * cls
     bytes_ = b * hw * hw * c * 1 + c * cls * 4 + b * cls * 4
-    est = RooflineEstimate(flops, bytes_)
     t_cpu = time_call(jax.jit(
         lambda s_, w_, b_: w2ttfs_pool_fc_ref(s_, w_, b_, win)), s, fw, fb) * 1e6
-    print(f"w2ttfs_pool,B={b} C={c},{flops:.3e},{bytes_:.3e},"
-          f"{est.time_s * 1e6:.2f},memory,{t_cpu:.0f}")
+    emit("w2ttfs_pool", f"B={b} C={c}", flops, bytes_, t_cpu)
 
     # lif_update: fused vs 3-pass traffic
     mm, dd = 65536, 512
@@ -95,14 +179,26 @@ def main() -> None:
     n_el = mm * dd
     fused_bytes = n_el * (4 + 4 + 1) + n_el * (1 + 4)
     unfused_bytes = fused_bytes * 3
-    est_f = RooflineEstimate(5.0 * n_el, fused_bytes)
-    est_u = RooflineEstimate(5.0 * n_el, unfused_bytes)
     t_cpu = time_call(jax.jit(lif_update_ref), cur, vp, sp) * 1e6
-    print(f"lif_update,fused {mm}x{dd},{5.0 * n_el:.3e},{fused_bytes:.3e},"
-          f"{est_f.time_s * 1e6:.2f},memory,{t_cpu:.0f}")
-    print(f"lif_update,(unfused 3-pass),{5.0 * n_el:.3e},{unfused_bytes:.3e},"
-          f"{est_u.time_s * 1e6:.2f},memory,-")
+    emit("lif_update", f"fused {mm}x{dd}", 5.0 * n_el, fused_bytes, t_cpu)
+    emit("lif_update", "(unfused 3-pass)", 5.0 * n_el, unfused_bytes)
+
+    # ----------------------------------------------------------- JSON output
+    deployed = fused_chain_bytes(1024, 1024, 1024, 1024, stateful=False)
+    summary = {
+        "fused_pe_1024_deployed": deployed,
+        "fused_pe_1024_stateful": fused_chain_bytes(1024, 1024, 1024, 1024,
+                                                    stateful=True),
+    }
+    with open(json_path, "w") as f:
+        json.dump({"rows": ROWS, "fused_pe_hbm_model": summary}, f, indent=1)
+    print(f"# wrote {json_path}: fused-PE modeled HBM reduction "
+          f"{deployed['reduction']:.2f}x (deployed, 1024^3)")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_kernels.json",
+                    help="machine-readable output path")
+    args = ap.parse_args()
+    main(args.out)

@@ -59,6 +59,11 @@ class ModelConfig:
     # --- paper technique flags ---
     spiking: bool = False            # LIF activations (C3), KD-student mode
     attention_kind: str = "softmax"  # softmax | qk_spiking (C4)
+    # use_event_kernels: deployed-inference only — route the qk_spiking
+    # path's dense->LIF projections and the binary-activation output matmul
+    # through the fused-PE / spike_matmul Pallas kernels (event-skipped, no
+    # surrogate gradient: do NOT enable for training)
+    use_event_kernels: bool = False
     lif: LIFConfig = LIFConfig()
     quant: QuantConfig = QuantConfig()
     # --- numerics / perf knobs (hillclimb surface) ---

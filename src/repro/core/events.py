@@ -28,11 +28,33 @@ def block_count_map_2d(spikes: Array, block_m: int, block_k: int) -> Array:
     Returns int32 [M//block_m, K//block_k]. M, K must be tile-aligned (pad
     first with ``pad_to_blocks``). This is the PipeSDA output: routing
     metadata for the event-driven matmul.
+
+    Counts NONZERO entries — identical to the spike count for binary maps,
+    and the right gating semantics when the operand is a dense (non-binary)
+    activation tensor fed through the same event-skipped matmul.
     """
     m, k = spikes.shape
     assert m % block_m == 0 and k % block_k == 0, (m, k, block_m, block_k)
-    x = spikes.reshape(m // block_m, block_m, k // block_k, block_k)
+    x = (spikes != 0).reshape(m // block_m, block_m, k // block_k, block_k)
     return x.astype(jnp.int32).sum(axis=(1, 3))
+
+
+def vld_or_compute(x: Array, vld_cnt: Array | None,
+                   block_m: int, block_k: int) -> Array:
+    """Metadata plumbing for the on-the-fly dataflow (paper C3 + Fig 5).
+
+    ``x`` must already be padded to the block grid. When the previous layer's
+    fused kernel emitted this tensor's ``vld_cnt`` map (fused_pe's third
+    output), pass it through and the reduction pass over HBM is skipped —
+    that is the PipeSDA metadata produced on the fly. Otherwise compute it
+    here (one pass over ``x``).
+    """
+    m, k = x.shape
+    expect = (m // block_m, k // block_k)
+    if vld_cnt is None:
+        return block_count_map_2d(x, block_m, block_k)
+    assert vld_cnt.shape == expect, (vld_cnt.shape, expect)
+    return vld_cnt.astype(jnp.int32)
 
 
 def pad_to_blocks(x: Array, block_m: int, block_k: int) -> Array:

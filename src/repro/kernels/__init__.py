@@ -7,6 +7,10 @@ Each kernel lives in its own subpackage with the mandated trio:
   <name>/ref.py    — pure-jnp oracle the tests assert against
 
 Kernels (mapped from the paper's FPGA units in DESIGN.md §6):
+  fused_pe        — the PE's WHOLE dataflow in one pass (Fig 3 + Fig 5):
+                    event-skipped spike matmul + bias/residual + LIF update
+                    + QK write-back mask + on-the-fly emission of the next
+                    layer's vld_cnt metadata (see docs/fused_pe_dataflow.md)
   spike_matmul    — event-driven matmul: int8 spike activations, per-block
                     vld_cnt skip (@pl.when) = PipeSDA + PE event FIFO (C3)
   qk_attention    — fused on-the-fly QKFormer token attention in the

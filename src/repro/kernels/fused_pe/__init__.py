@@ -1,0 +1,6 @@
+from .fused_pe import fused_pe_pallas
+from .ops import FusedPEOut, fused_pe, fused_pe_layer
+from .ref import fused_pe_ref
+
+__all__ = ["FusedPEOut", "fused_pe", "fused_pe_layer", "fused_pe_pallas",
+           "fused_pe_ref"]

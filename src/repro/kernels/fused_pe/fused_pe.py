@@ -1,0 +1,224 @@
+"""Fused PE dataflow kernel (paper Fig 3 + Fig 5 in ONE Pallas pass).
+
+NEURAL's central claim is that a PE executes the whole per-layer dataflow —
+event-gated MAC accumulation, LIF membrane update, and the QKFormer token
+attention — "on the fly ... within the baseline computing flow without
+requiring dedicated hardware units". Our previous reproduction ran that
+chain as four separate kernels with full HBM round-trips between stages:
+
+    spike_matmul -> [f32 pre-act HBM] -> lif_update -> [int8 spikes HBM]
+                 -> qk_attention      -> [spikes HBM] -> block_count_map_2d
+
+This kernel is the TPU realization of the paper's fusion: per output tile,
+
+  1. accumulate the event-skipped spike matmul over the K grid axis using
+     the scalar-prefetched ``vld_cnt`` map (PipeSDA metadata, paper C3) —
+     ``@pl.when(vld_cnt > 0)`` skips silent blocks exactly as
+     ``spike_matmul`` does (Fig 3 (2)/(3): SDU FIFO + MAC gating);
+  2. on the LAST K step, add bias / residual current and apply the LIF
+     membrane update in-register (Fig 3 (4): tau decay, threshold,
+     hard/soft reset) — the f32 pre-activation NEVER touches HBM;
+  3. optionally gate the emitted spikes with the QK token mask computed
+     from Q's row sums (Fig 5 (2) atten_reg -> (4) write-back fusion);
+  4. emit the NEXT layer's ``vld_cnt`` block-count map as a second output,
+     so layer L produces layer L+1's PipeSDA routing metadata on the fly
+     instead of a separate reduction pass re-reading the spikes from HBM.
+
+Inputs (optional operands selected by static flags):
+  x        [M, K]  int8 spikes (or dense activations; only zero-blocks skip)
+  w        [K, N]  weights
+  bias     [1, N]  f32  (with_bias)    — F&Q-folded BN bias
+  residual [M, N]  f32  (with_residual)— shortcut membrane current (MS-ResNet)
+  v_prev   [M, N]  f32  (with_state)   — membrane state for T>1
+  s_prev   [M, N]  int8 (with_state)   — previous-step spikes for hard reset
+  q        [M, Dq] int8 (apply_qk)     — Q spikes; row-sum -> token mask
+
+Outputs:
+  spikes   [M, N]        int8
+  v_next   [M, N]        f32   (with_state only — T=1 deployed mode skips
+                                the write entirely: s = H(I - v_th))
+  vld_next [M/bm, N/bn]  int32 (emit_vld) — per-tile nonzero count of the
+                                EMITTED (post-mask) spikes
+
+Grid is (M/bm, N/bn, K/bk) with K innermost; an f32 VMEM scratch tile is
+the accumulator (it persists across the sequential K sweep). ``m_valid`` /
+``n_valid`` mask padded rows/cols out of the spike map and the emitted
+count map, so padding stays inert for ANY bias/threshold values.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _make_kernel(*, tau: float, v_th: float, soft_reset: bool,
+                 qk_threshold: float, with_bias: bool, with_residual: bool,
+                 with_state: bool, apply_qk: bool, emit_vld: bool,
+                 m_valid: int, n_valid: int, block_m: int, block_n: int):
+    def kernel(vld_ref, *refs):
+        it = iter(refs)
+        x_ref = next(it)
+        w_ref = next(it)
+        b_ref = next(it) if with_bias else None
+        r_ref = next(it) if with_residual else None
+        v_ref = next(it) if with_state else None
+        s_ref = next(it) if with_state else None
+        q_ref = next(it) if apply_qk else None
+        spike_ref = next(it)
+        vout_ref = next(it) if with_state else None
+        cnt_ref = next(it) if emit_vld else None
+        acc_ref = next(it)
+
+        i = pl.program_id(0)
+        j = pl.program_id(1)
+        k = pl.program_id(2)
+
+        @pl.when(k == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        cnt = vld_ref[i, k]
+
+        @pl.when(cnt > 0)            # event skip: silent block -> no MXU
+        def _accum():
+            x = x_ref[...].astype(jnp.float32)
+            w = w_ref[...].astype(jnp.float32)
+            acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+        @pl.when(k == pl.num_programs(2) - 1)
+        def _writeback():
+            cur = acc_ref[...]
+            if with_bias:
+                cur = cur + b_ref[...].astype(jnp.float32)
+            if with_residual:
+                cur = cur + r_ref[...].astype(jnp.float32)
+            if with_state:
+                v_prev = v_ref[...].astype(jnp.float32)
+                s_prev = s_ref[...].astype(jnp.float32)
+                v = tau * v_prev * (1.0 - s_prev) + cur
+            else:                    # deployed T=1: v[0]=0 -> v = I
+                v = cur
+            spk = (v >= v_th).astype(jnp.float32)
+            if with_state:
+                if soft_reset:
+                    vout_ref[...] = v - v_th * spk
+                else:
+                    vout_ref[...] = v * (1.0 - spk)
+            if apply_qk:             # Fig 5: atten_reg gates the write-back
+                rowsum = q_ref[...].astype(jnp.float32).sum(
+                    axis=1, keepdims=True)
+                spk = spk * (rowsum >= qk_threshold).astype(jnp.float32)
+            if m_valid % block_m or n_valid % block_n:
+                rows = (jax.lax.broadcasted_iota(
+                    jnp.int32, (block_m, block_n), 0) + i * block_m)
+                cols = (jax.lax.broadcasted_iota(
+                    jnp.int32, (block_m, block_n), 1) + j * block_n)
+                spk = spk * ((rows < m_valid) & (cols < n_valid)
+                             ).astype(jnp.float32)
+            spike_ref[...] = spk.astype(spike_ref.dtype)
+            if emit_vld:             # on-the-fly next-layer PipeSDA metadata
+                cnt_ref[0, 0] = jnp.sum(spk).astype(jnp.int32)
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tau", "v_th", "soft_reset",
+                                    "qk_threshold", "block_m", "block_n",
+                                    "block_k", "emit_vld", "m_valid",
+                                    "n_valid", "interpret"))
+def fused_pe_pallas(x: Array, w: Array, vld_cnt: Array,
+                    bias: Array | None = None,
+                    residual: Array | None = None,
+                    v_prev: Array | None = None,
+                    s_prev: Array | None = None,
+                    q: Array | None = None, *,
+                    tau: float = 0.5, v_th: float = 1.0,
+                    soft_reset: bool = False, qk_threshold: float = 1.0,
+                    block_m: int = 128, block_n: int = 128,
+                    block_k: int = 128, emit_vld: bool = True,
+                    m_valid: int | None = None, n_valid: int | None = None,
+                    interpret: bool = False):
+    """Block-aligned core. All shapes must already be padded to the blocks;
+    use ``repro.kernels.fused_pe.ops.fused_pe`` for the padding wrapper.
+    ``m_valid``/``n_valid`` are the pre-padding extents: spikes and counts
+    in the padded margin are forced to zero (bias alone could otherwise
+    fire pad rows).
+
+    Returns (spikes, v_next | None, vld_next | None).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and m % block_m == 0 and k % block_k == 0 \
+        and n % block_n == 0, (x.shape, w.shape, block_m, block_n, block_k)
+    with_state = v_prev is not None
+    assert (s_prev is not None) == with_state
+    grid = (m // block_m, n // block_n, k // block_k)
+
+    kern = _make_kernel(
+        tau=tau, v_th=v_th, soft_reset=soft_reset, qk_threshold=qk_threshold,
+        with_bias=bias is not None, with_residual=residual is not None,
+        with_state=with_state, apply_qk=q is not None, emit_vld=emit_vld,
+        m_valid=m_valid or m, n_valid=n_valid or n,
+        block_m=block_m, block_n=block_n)
+
+    # index maps receive the prefetched scalar ref as a trailing arg
+    in_specs = [
+        pl.BlockSpec((block_m, block_k), lambda i, j, kk, vld: (i, kk)),
+        pl.BlockSpec((block_k, block_n), lambda i, j, kk, vld: (kk, j)),
+    ]
+    operands = [x, w]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, block_n),
+                                     lambda i, j, kk, vld: (0, j)))
+        operands.append(bias.reshape(1, n))
+    if residual is not None:
+        in_specs.append(pl.BlockSpec((block_m, block_n),
+                                     lambda i, j, kk, vld: (i, j)))
+        operands.append(residual)
+    if with_state:
+        in_specs += [pl.BlockSpec((block_m, block_n),
+                                  lambda i, j, kk, vld: (i, j))] * 2
+        operands += [v_prev, s_prev]
+    if q is not None:
+        dq = q.shape[1]
+        in_specs.append(pl.BlockSpec((block_m, dq),
+                                     lambda i, j, kk, vld: (i, 0)))
+        operands.append(q)
+
+    out_shape = [jax.ShapeDtypeStruct((m, n), jnp.int8)]
+    out_specs = [pl.BlockSpec((block_m, block_n),
+                              lambda i, j, kk, vld: (i, j))]
+    if with_state:
+        out_shape.append(jax.ShapeDtypeStruct((m, n), jnp.float32))
+        out_specs.append(pl.BlockSpec((block_m, block_n),
+                                      lambda i, j, kk, vld: (i, j)))
+    if emit_vld:
+        out_shape.append(jax.ShapeDtypeStruct(
+            (m // block_m, n // block_n), jnp.int32))
+        out_specs.append(pl.BlockSpec((1, 1), lambda i, j, kk, vld: (i, j)))
+
+    outs = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(vld_cnt, *operands)
+
+    outs = list(outs)
+    spikes = outs.pop(0)
+    v_next = outs.pop(0) if with_state else None
+    vld_next = outs.pop(0) if emit_vld else None
+    return spikes, v_next, vld_next

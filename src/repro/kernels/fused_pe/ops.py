@@ -1,0 +1,166 @@
+"""Public wrappers for the fused PE kernel: padding, metadata plumbing, and
+the multi-timestep scan used by the deployed models.
+
+``fused_pe``      — one fused layer over 2-D operands (pad + dispatch).
+``fused_pe_layer``— [T, M, K] spike trains: T=1 runs the stateless deployed
+                    form; T>1 scans the stateful kernel carrying (v, s).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...core.events import pad_to_blocks, vld_or_compute
+from .fused_pe import fused_pe_pallas
+
+Array = jax.Array
+
+
+class FusedPEOut(NamedTuple):
+    """One fused layer's outputs.
+
+    spikes   : [M, N] int8 — emitted (post-QK-mask) spike map
+    v_next   : [M, N] f32 or None — membrane state (stateful calls only)
+    vld_next : [M/bm, N/bn] int32 or None — the EMITTED spikes' block count
+               map over the PADDED grid; feed it to the next fused_pe /
+               spike_matmul call (same block sizes) as ``vld_cnt`` to skip
+               that layer's metadata pass.
+    """
+    spikes: Array
+    v_next: Optional[Array]
+    vld_next: Optional[Array]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "v_th", "soft_reset",
+                                             "qk_threshold", "block_m",
+                                             "block_n", "block_k",
+                                             "emit_vld", "interpret"))
+def fused_pe(x: Array, w: Array, *,
+             bias: Array | None = None,
+             residual: Array | None = None,
+             v_prev: Array | None = None,
+             s_prev: Array | None = None,
+             q: Array | None = None,
+             vld_cnt: Array | None = None,
+             tau: float = 0.5, v_th: float = 1.0, soft_reset: bool = False,
+             qk_threshold: float = 1.0,
+             block_m: int = 128, block_n: int = 128, block_k: int = 128,
+             emit_vld: bool = True,
+             interpret: bool | None = None) -> FusedPEOut:
+    """One fused PE layer: spikes/v_next/vld_next = PE(x, w, ...).
+
+    x: [M, K] spikes (any dtype; nonzero == event) or dense activations.
+    w: [K, N]. Optional bias [N], residual [M, N] (added to the membrane
+    current), LIF state (v_prev [M, N] f32 + s_prev [M, N]), and Q spikes
+    [M, Dq] for the QKFormer write-back mask. ``vld_cnt`` is the
+    [M/bm, K/bk] input metadata — pass a previous layer's ``vld_next`` to
+    chain the on-the-fly dataflow; leave None to compute it here.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    m0, k0 = x.shape
+    n0 = w.shape[1]
+    xi = pad_to_blocks(x.astype(jnp.int8) if x.dtype == jnp.bool_ else x,
+                       block_m, block_k)
+    wp = pad_to_blocks(w, block_k, block_n)
+    vld = vld_or_compute(xi, vld_cnt, block_m, block_k)
+
+    def pad_mn(t, dtype=None):
+        t = pad_to_blocks(t, block_m, block_n)
+        return t if dtype is None else t.astype(dtype)
+
+    bp = None
+    if bias is not None:
+        bp = jnp.pad(bias.reshape(1, n0).astype(jnp.float32),
+                     ((0, 0), (0, (-n0) % block_n)))
+    rp = pad_mn(residual, jnp.float32) if residual is not None else None
+    vp = pad_mn(v_prev, jnp.float32) if v_prev is not None else None
+    sp = pad_mn(s_prev, jnp.int8) if s_prev is not None else None
+    qp = None
+    if q is not None:
+        # pad Q rows to the M grid and channels to the lane width; zero
+        # padding never changes a row sum
+        qp = pad_to_blocks(q.astype(jnp.int8), block_m, 128)
+
+    spikes, v_next, vld_next = fused_pe_pallas(
+        xi, wp, vld, bp, rp, vp, sp, qp,
+        tau=tau, v_th=v_th, soft_reset=soft_reset, qk_threshold=qk_threshold,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        emit_vld=emit_vld, m_valid=m0, n_valid=n0, interpret=interpret)
+    spikes = spikes[:m0, :n0]
+    if v_next is not None:
+        v_next = v_next[:m0, :n0]
+    return FusedPEOut(spikes, v_next, vld_next)
+
+
+def fused_pe_layer(spk: Array, w: Array, *,
+                   bias: Array | None = None,
+                   residual: Array | None = None,
+                   q: Array | None = None,
+                   vld_cnt: Array | None = None,
+                   tau: float = 0.5, v_th: float = 1.0,
+                   soft_reset: bool = False, qk_threshold: float = 1.0,
+                   block_m: int = 128, block_n: int = 128,
+                   block_k: int = 128,
+                   interpret: bool | None = None
+                   ) -> tuple[Array, Optional[Array]]:
+    """Multi-timestep fused layer over [T, M, K] inputs.
+
+    T=1 (the paper's deployed mode) is a single stateless kernel call —
+    no membrane state read or written. T>1 scans the stateful kernel over
+    time carrying (v, s), matching ``lif_multistep``'s semantics with
+    v[0] = 0, s[0] = 0.
+
+    ``residual`` / ``q`` / ``vld_cnt`` are per-timestep ([T, ...]) or None.
+    Returns (spikes [T, M, N] int8, vld_next [T, M/bm, N/bn] int32).
+    """
+    t, m, _ = spk.shape
+    n = w.shape[1]
+    kw = dict(bias=bias, tau=tau, v_th=v_th, soft_reset=soft_reset,
+              qk_threshold=qk_threshold, block_m=block_m, block_n=block_n,
+              block_k=block_k, interpret=interpret)
+
+    if t == 1:
+        out = fused_pe(spk[0], w, residual=None if residual is None
+                       else residual[0], q=None if q is None else q[0],
+                       vld_cnt=None if vld_cnt is None else vld_cnt[0],
+                       **kw)
+        return out.spikes[None], out.vld_next[None]
+
+    def step(carry, spk_t, res_t, q_t, vld_t):
+        v, s = carry
+        # T>1 with a QK mask: the LIF state must carry the layer's OWN
+        # (pre-mask) spikes — run the stateful kernel unmasked and gate
+        # outside; vld_next is then computed on the masked map instead of
+        # in-kernel. The deployed T=1 path above keeps the full fusion.
+        out = fused_pe(spk_t, w, residual=res_t, vld_cnt=vld_t,
+                       v_prev=v, s_prev=s, emit_vld=q_t is None, **kw)
+        emitted, vld_next = out.spikes, out.vld_next
+        if q_t is not None:
+            rowsum = q_t.astype(jnp.float32).sum(axis=-1, keepdims=True)
+            emitted = emitted * (rowsum >= qk_threshold).astype(emitted.dtype)
+            vld_next = vld_or_compute(
+                pad_to_blocks(emitted, block_m, block_n), None,
+                block_m, block_n)
+        return (out.v_next, out.spikes), emitted, vld_next
+
+    # Python loop over the (small, static) T axis — optional operands may be
+    # None, which lax.scan xs cannot carry
+    spikes_ts, vld_ts = [], []
+    carry = (jnp.zeros((m, n), jnp.float32), jnp.zeros((m, n), jnp.int8))
+    for ti in range(t):
+        carry, spk_t, vld_t = step(
+            carry, spk[ti],
+            None if residual is None else residual[ti],
+            None if q is None else q[ti],
+            None if vld_cnt is None else vld_cnt[ti])
+        spikes_ts.append(spk_t)
+        vld_ts.append(vld_t)
+    return jnp.stack(spikes_ts), jnp.stack(vld_ts)

@@ -1,0 +1,52 @@
+"""Oracle for the fused PE kernel: the COMPOSED unfused reference chain.
+
+This is, by construction, the exact pipeline the fused kernel replaces:
+``spike_matmul_ref`` -> (+bias/residual) -> ``lif_update_ref`` ->
+``qk_attention_ref`` -> ``block_count_map_2d`` — each stage the oracle of
+one of the four kernels the fusion eliminates the HBM round-trips between.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...core.events import block_count_map_2d, pad_to_blocks
+from ..lif_update.ref import lif_update_ref
+from ..qk_attention.ref import qk_attention_ref
+from ..spike_matmul.ref import spike_matmul_ref
+
+Array = jax.Array
+
+
+def fused_pe_ref(x: Array, w: Array, *,
+                 bias: Array | None = None,
+                 residual: Array | None = None,
+                 v_prev: Array | None = None,
+                 s_prev: Array | None = None,
+                 q: Array | None = None,
+                 tau: float = 0.5, v_th: float = 1.0,
+                 soft_reset: bool = False, qk_threshold: float = 1.0,
+                 block_m: int = 128, block_n: int = 128
+                 ) -> tuple[Array, Optional[Array], Array]:
+    """Returns (spikes int8, v_next f32 | None, vld_next int32).
+
+    v_next is None when no state was passed (deployed T=1 form), matching
+    the kernel's stateless mode which skips the HBM write entirely.
+    """
+    cur = spike_matmul_ref(x, w)
+    if bias is not None:
+        cur = cur + bias.reshape(1, -1).astype(jnp.float32)
+    if residual is not None:
+        cur = cur + residual.astype(jnp.float32)
+    stateless = v_prev is None
+    vp = jnp.zeros_like(cur) if stateless else v_prev
+    sp = jnp.zeros_like(cur) if s_prev is None else s_prev
+    spk, v_next = lif_update_ref(cur, vp, sp, tau=tau, v_th=v_th,
+                                 soft_reset=soft_reset)
+    if q is not None:
+        spk = qk_attention_ref(q, spk, threshold=qk_threshold)
+    vld_next = block_count_map_2d(pad_to_blocks(spk, block_m, block_n),
+                                  block_m, block_n)
+    return spk, (None if stateless else v_next), vld_next

@@ -44,17 +44,28 @@ def lif_update_pallas(current: Array, v_prev: Array, s_prev: Array, *,
                       tau: float = 0.5, v_th: float = 1.0,
                       soft_reset: bool = False, block: int = 1024,
                       interpret: bool = False) -> tuple[Array, Array]:
-    """All inputs [M, D] (flatten first). Returns (spikes int8, v_next f32)."""
+    """All inputs [M, D] (flatten first). Returns (spikes int8, v_next f32).
+
+    M need not be a multiple of ``block``: inputs are zero-padded to the
+    block grid and outputs sliced back (padded rows are inert — zero current
+    against zero state never fires for v_th > 0).
+    """
+    from ...core.events import pad_to_blocks
+
     m, d = current.shape
-    assert m % block == 0
+    cur = pad_to_blocks(current, block, 1)
+    vp = pad_to_blocks(v_prev, block, 1)
+    sp = pad_to_blocks(s_prev, block, 1)
+    mp = cur.shape[0]
     kern = functools.partial(_kernel, tau=tau, v_th=v_th,
                              soft_reset=soft_reset)
-    return pl.pallas_call(
+    spk, vn = pl.pallas_call(
         kern,
-        grid=(m // block,),
+        grid=(mp // block,),
         in_specs=[pl.BlockSpec((block, d), lambda i: (i, 0))] * 3,
         out_specs=[pl.BlockSpec((block, d), lambda i: (i, 0))] * 2,
-        out_shape=[jax.ShapeDtypeStruct((m, d), jnp.int8),
-                   jax.ShapeDtypeStruct((m, d), jnp.float32)],
+        out_shape=[jax.ShapeDtypeStruct((mp, d), jnp.int8),
+                   jax.ShapeDtypeStruct((mp, d), jnp.float32)],
         interpret=interpret,
-    )(current, v_prev, s_prev)
+    )(cur, vp, sp)
+    return spk[:m], vn[:m]

@@ -6,7 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ...core.events import block_count_map_2d, pad_to_blocks
+from ...core.events import block_count_map_2d, pad_to_blocks, vld_or_compute
 from .spike_matmul import spike_matmul_pallas
 
 Array = jax.Array
@@ -18,7 +18,8 @@ def _on_tpu() -> bool:
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
                                              "interpret"))
-def spike_matmul(x: Array, w: Array, *, block_m: int = 128,
+def spike_matmul(x: Array, w: Array, *, vld_cnt: Array | None = None,
+                 block_m: int = 128,
                  block_n: int = 128, block_k: int = 128,
                  interpret: bool | None = None) -> Array:
     """Event-driven spike matmul. x: [M,K] {0,1} (any dtype); w: [K,N].
@@ -26,6 +27,10 @@ def spike_matmul(x: Array, w: Array, *, block_m: int = 128,
     Pads to block multiples, computes the per-block event-count map (the
     PipeSDA routing metadata), and invokes the Pallas kernel. On CPU the
     kernel body runs in interpret mode (used by the allclose tests).
+
+    ``vld_cnt``: optional precomputed [M/bm, K/bk] count map — pass the
+    ``vld_next`` emitted by a previous ``fused_pe`` layer (same block sizes)
+    to skip the metadata reduction pass over ``x`` entirely.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -33,7 +38,7 @@ def spike_matmul(x: Array, w: Array, *, block_m: int = 128,
     n0 = w.shape[1]
     xi = pad_to_blocks(x.astype(jnp.int8), block_m, block_k)
     wp = pad_to_blocks(w, block_k, block_n)
-    vld = block_count_map_2d(xi, block_m, block_k)
+    vld = vld_or_compute(xi, vld_cnt, block_m, block_k)
     out = spike_matmul_pallas(xi, wp, vld, block_m=block_m, block_n=block_n,
                               block_k=block_k, interpret=interpret)
     return out[:m0, :n0]

@@ -297,9 +297,39 @@ def _qk_spiking_apply(p: dict, cfg: ModelConfig, x: Array,
 
     Per head: Q,K spike maps [B,S,h,Dh]; token mask from Q row-sum gates K.
     No RoPE (spike trains carry no phase), no cache (mask is token-local).
+
+    With ``cfg.use_event_kernels`` (deployed serving path) the chain runs
+    NEURAL's fused PE dataflow: wq/wk projections + LIF threshold are single
+    fused Pallas passes (no f32 pre-activation round-trip); with one head
+    the QK token mask is applied inside the K pass's write-back (the full
+    Fig 5 fusion — per-head masks need per-head row sums, so multi-head
+    models mask outside); and the output projection consumes the binary
+    masked spikes through the event-skipped ``spike_matmul``. Forward-exact
+    vs the jnp path; inference only (no surrogate gradient).
     """
     b, s, _ = x.shape
     dh = cfg.resolved_head_dim
+    if cfg.use_event_kernels:
+        from ..kernels.spike_matmul import spike_matmul
+        from .layers import fused_dense_lif
+
+        q = fused_dense_lif(p["wq"], x, cfg.lif).reshape(b, s, h, dh)
+        if h == 1 and hkv == 1:
+            out = fused_dense_lif(p["wk"], x, cfg.lif,
+                                  q=q.reshape(b, s, dh),
+                                  qk_threshold=cfg.lif.v_th)
+            out = out.reshape(b, s, h, dh)
+        else:
+            k = fused_dense_lif(p["wk"], x, cfg.lif).reshape(b, s, hkv, dh)
+            k = _expand_kv(k, h)
+            mask = (q.astype(jnp.float32).sum(axis=-1, keepdims=True)
+                    >= cfg.lif.v_th)
+            out = k * mask.astype(k.dtype)
+        flat = out.reshape(b * s, h * dh)
+        proj = spike_matmul(flat, p["wo"]["w"]).astype(x.dtype)
+        if "b" in p["wo"]:
+            proj = proj + p["wo"]["b"].astype(proj.dtype)
+        return proj.reshape(b, s, -1)
     q_cur = dense_apply(p["wq"], x).reshape(b, s, h, dh)
     k_cur = dense_apply(p["wk"], x).reshape(b, s, hkv, dh)
     q = maybe_spike(q_cur, True, cfg.lif)

@@ -112,6 +112,38 @@ def maybe_spike(x: Array, spiking: bool, lif: LIFConfig) -> Array:
     return lif_forward(x, lif)
 
 
+def fused_dense_lif(p: dict, x: Array, lif: LIFConfig, *,
+                    q: Optional[Array] = None,
+                    qk_threshold: float = 1.0) -> Array:
+    """dense(x) -> LIF spikes as ONE fused PE pass (deployed inference).
+
+    The LM analogue of NEURAL's PE dataflow: the projection's f32
+    pre-activation never round-trips HBM — the LIF threshold fires
+    in-register and int8 spikes are written back (optionally gated by the
+    QK token mask from ``q``'s row sums, the Fig 5 write-back fusion).
+    ``x`` is the dense residual stream, so no metadata pass is spent on it
+    (a ones map: dense blocks are never silent). Forward-exact vs
+    ``maybe_spike(dense_apply(p, x), True, lif)``; no surrogate gradient —
+    inference only.
+
+    x: [..., Din] -> int8 spikes [..., Dout].
+    """
+    from ..kernels.fused_pe import fused_pe
+
+    shape = x.shape
+    flat = x.reshape(-1, shape[-1])
+    m, k = flat.shape
+    bm, bk = 128, 128
+    gm, gk = -(-m // bm), -(-k // bk)
+    dense_vld = jnp.ones((gm, gk), jnp.int32)
+    out = fused_pe(flat, p["w"], bias=p.get("b"), vld_cnt=dense_vld,
+                   q=None if q is None else q.reshape(m, -1),
+                   qk_threshold=qk_threshold,
+                   tau=lif.tau, v_th=lif.v_th, soft_reset=lif.soft_reset,
+                   emit_vld=False)
+    return out.spikes.reshape(*shape[:-1], p["w"].shape[1])
+
+
 # ------------------------------------------------------------- misc numerics
 def soft_cap(x: Array, cap: float) -> Array:
     return cap * jnp.tanh(x / cap)

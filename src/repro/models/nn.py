@@ -43,6 +43,44 @@ def conv_apply(p: dict, x: Array, stride: int = 1, padding: str = "SAME") -> Arr
     return y
 
 
+# ----------------------------------------------------- conv-as-matmul (im2col)
+def im2col(x: Array, kh: int, kw: int, stride: int = 1,
+           padding: str = "SAME") -> Array:
+    """Patch extraction: [B, H, W, C] -> [B, Ho, Wo, kh*kw*C].
+
+    Feature ordering is (kh, kw, C) row-major, so a conv weight
+    [kh, kw, Cin, Cout] reshaped to [kh*kw*Cin, Cout] gives
+    ``im2col(x) @ w2d == conv_apply`` exactly. This is how the deployed
+    event path turns every conv into a spike matmul: patches of a binary
+    spike map are themselves binary, so the fused PE kernel's per-block
+    vld_cnt skip applies to convolutions unchanged.
+    """
+    b, h, w, c = x.shape
+    if padding == "SAME":
+        ho = -(-h // stride)
+        wo = -(-w // stride)
+        ph = max((ho - 1) * stride + kh - h, 0)
+        pw = max((wo - 1) * stride + kw - w, 0)
+        x = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2),
+                        (pw // 2, pw - pw // 2), (0, 0)))
+    elif padding == "VALID":
+        ho = (h - kh) // stride + 1
+        wo = (w - kw) // stride + 1
+    else:
+        raise ValueError(f"unknown padding {padding!r}")
+    cols = [x[:, i:i + (ho - 1) * stride + 1:stride,
+              j:j + (wo - 1) * stride + 1:stride, :]
+            for i in range(kh) for j in range(kw)]
+    return jnp.concatenate(cols, axis=-1)
+
+
+def conv_weights_as_matmul(w: Array) -> Array:
+    """[kh, kw, Cin, Cout] HWIO conv weight -> [kh*kw*Cin, Cout] matmul
+    weight matching ``im2col``'s feature ordering."""
+    kh, kw, cin, cout = w.shape
+    return w.reshape(kh * kw * cin, cout)
+
+
 # ---------------------------------------------------------------- batch norm
 def bn_init(c: int, dtype=jnp.float32) -> tuple[dict, dict]:
     params = {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}

@@ -308,60 +308,156 @@ def fuse_model(variables: dict, cfg: SNNCNNConfig) -> list:
     return fused
 
 
+def _fused_conv_lif(p: dict, x_spk: Array, stride: int, cfg: SNNCNNConfig,
+                    *, residual: Array | None = None) -> tuple[Array, Array]:
+    """conv(spikes) + bias + LIF as ONE fused PE pass (conv-as-matmul).
+
+    x_spk: [T, B, H, W, C] binary spike maps. The 3x3/1x1 conv becomes an
+    im2col spike matmul — patches of binary maps are binary, so silent
+    VMEM blocks are skipped on the vld_cnt metadata, the LIF threshold is
+    applied in-register, and the layer's output count map is emitted on the
+    fly. ``residual`` (f32 membrane current or spikes, [T, B, Ho, Wo, Cout])
+    is added before the threshold (MS-ResNet shortcut).
+
+    Returns (spikes [T, B, Ho, Wo, Cout], vld_next [T, Mo/bm, Cout/bn]).
+    """
+    from ..kernels.fused_pe import fused_pe_layer
+
+    t, b, h, w, c = x_spk.shape
+    kh, kw = p["conv"]["w"].shape[:2]
+    pat = nn.im2col(x_spk.reshape(t * b, h, w, c).astype(jnp.int8),
+                    kh, kw, stride)
+    tb2, ho, wo, kdim = pat.shape
+    pat = pat.reshape(t, b * ho * wo, kdim)
+    res = None
+    if residual is not None:
+        res = residual.reshape(t, b * ho * wo, -1).astype(jnp.float32)
+    w2d = nn.conv_weights_as_matmul(p["conv"]["w"])
+    spikes, vld_next = fused_pe_layer(
+        pat, w2d, bias=p["conv"].get("b"), residual=res,
+        tau=cfg.lif.tau, v_th=cfg.lif.v_th, soft_reset=cfg.lif.soft_reset)
+    cout = w2d.shape[1]
+    return spikes.reshape(t, b, ho, wo, cout).astype(cfg.dtype), vld_next
+
+
 def apply_fused(fused_params: list, images: Array, cfg: SNNCNNConfig) -> tuple[Array, dict]:
     """Inference with the fused+quantized (deployment) model — conv+bias+LIF,
-    no BN. This is the computation NEURAL's EPA executes."""
+    no BN. This is the computation NEURAL's EPA executes.
+
+    With ``cfg.use_event_kernels`` every binary-activation layer runs the
+    fused PE dataflow kernel (C3 + C4 in one Pallas pass): conv-as-matmul
+    spike matmul with vld_cnt block skipping, in-register LIF, QK token mask
+    on write-back, and on-the-fly emission of the NEXT layer's vld_cnt map.
+    The emitted metadata is chained layer-to-layer wherever the flattened
+    [tokens, channels] layout is preserved (resblock -> QKFormer -> QKFormer
+    chains); im2col and pooling reshuffle the layout, so those boundaries
+    recompute the map. ``aux["vld_reused"]`` counts the chained hand-offs.
+    """
     layers = build_layers(cfg)
     t = cfg.timesteps
+    ev = cfg.use_event_kernels
     x = jnp.broadcast_to(images[None], (t, *images.shape)).astype(cfg.dtype)
-    aux = {"spikes": {}}
+    aux = {"spikes": {}, "vld_reused": 0}
     li = 0
+    spiking_input = False       # first conv consumes the analog image
+    vld = None                  # on-the-fly metadata for x as [T, M, C]
     for p, layer in zip(fused_params, layers):
         kind = layer[0]
         if kind == "conv_bn_lif":
             stride = layer[3]
-            cur = _per_step(lambda z: nn.conv_apply(p["conv"], z, stride), x)
-            x = lif_multistep(cur, cfg.lif)
+            if ev and spiking_input:
+                x, vld = _fused_conv_lif(p, x, stride, cfg)
+            else:
+                cur = _per_step(lambda z: nn.conv_apply(p["conv"], z, stride), x)
+                x = lif_multistep(cur, cfg.lif)
+                vld = None
+            spiking_input = True
         elif kind == "maxpool":
             x = _per_step(nn.max_pool, x)
+            vld = None          # pooling reshuffles the token layout
         elif kind == "resblock":
             stride = layer[3]
-            cur1 = _per_step(lambda z: nn.conv_apply(p["conv1"], z, stride), x)
-            s1 = lif_multistep(cur1, cfg.lif)
-            cur2 = _per_step(lambda z: nn.conv_apply(p["conv2"], z, 1), s1)
-            sc = _per_step(lambda z: nn.conv_apply(p["conv_sc"], z, stride), x) if "conv_sc" in p else x
-            x = lif_multistep(cur2 + sc, cfg.lif)
+            if ev and spiking_input:
+                s1, _ = _fused_conv_lif({"conv": p["conv1"]}, x, stride, cfg)
+                if "conv_sc" in p:
+                    # 1x1 shortcut conv: binary input -> event matmul; its
+                    # output is a membrane CURRENT (no LIF), added as the
+                    # residual operand of conv2's fused pass
+                    from ..kernels.spike_matmul import spike_matmul
+                    tb_, h_, w_, c_ = x.shape[1:]
+                    scp = nn.im2col(
+                        x.reshape(t * tb_, h_, w_, c_).astype(jnp.int8),
+                        *p["conv_sc"]["w"].shape[:2], stride)
+                    sc = (spike_matmul(
+                        scp.reshape(-1, scp.shape[-1]),
+                        nn.conv_weights_as_matmul(p["conv_sc"]["w"]))
+                        + p["conv_sc"]["b"]).reshape(t, tb_, *scp.shape[1:3],
+                                                     -1)
+                else:
+                    sc = x
+                x, vld = _fused_conv_lif({"conv": p["conv2"]}, s1, 1, cfg,
+                                         residual=sc)
+            else:
+                cur1 = _per_step(lambda z: nn.conv_apply(p["conv1"], z, stride), x)
+                s1 = lif_multistep(cur1, cfg.lif)
+                cur2 = _per_step(lambda z: nn.conv_apply(p["conv2"], z, 1), s1)
+                sc = _per_step(lambda z: nn.conv_apply(p["conv_sc"], z, stride), x) if "conv_sc" in p else x
+                x = lif_multistep(cur2 + sc, cfg.lif)
+                vld = None
+            spiking_input = True
         elif kind == "qkformer":
             d = layer[1]
             tb = x.shape[:2]
             hw = x.shape[2] * x.shape[3]
             tok = x.reshape(*tb, hw, d)
 
-            if cfg.use_event_kernels:
-                # event-driven path (C3): binary token maps hit the Pallas
-                # spike_matmul — silent 128x128 blocks are skipped on the
-                # vld_cnt metadata (PipeSDA analogue)
-                from ..kernels.spike_matmul import spike_matmul
+            if ev:
+                # fully fused event path (C3+C4): each linear+LIF is ONE
+                # fused PE pass; the K pass applies the QK token mask on
+                # write-back (Fig 5) and every pass emits the next pass's
+                # vld_cnt metadata — zero standalone reduction passes
+                from ..kernels.fused_pe import fused_pe_layer
 
-                def smm(spk, w):                 # [T,B,N,D] x [D,F]
-                    flat = spk.reshape(-1, spk.shape[-1])
-                    out = spike_matmul(flat, w)
-                    return out.reshape(*spk.shape[:-1], w.shape[1]
-                                       ).astype(cfg.dtype)
+                tok3 = tok.reshape(t, tb[1] * hw, d).astype(jnp.int8)
+                tok_vld = vld   # previous layer's on-the-fly metadata
+                lifkw = dict(tau=cfg.lif.tau, v_th=cfg.lif.v_th,
+                             soft_reset=cfg.lif.soft_reset)
+
+                q3, _ = fused_pe_layer(tok3, p["q"]["w"], bias=p["q"]["b"],
+                                       vld_cnt=tok_vld, **lifkw)
+                # atten_reg "or" mode == rowsum >= 1 on integer spike counts
+                attn3, vld_a = fused_pe_layer(
+                    tok3, p["k"]["w"], bias=p["k"]["b"], vld_cnt=tok_vld,
+                    q=q3, qk_threshold=1.0, **lifkw)
+                y3, vld_y = fused_pe_layer(
+                    attn3, p["proj"]["w"], bias=p["proj"]["b"],
+                    residual=tok3, vld_cnt=vld_a, **lifkw)
+                m13, vld_m = fused_pe_layer(y3, p["mlp1"]["w"],
+                                            bias=p["mlp1"]["b"],
+                                            vld_cnt=vld_y, **lifkw)
+                y23, vld = fused_pe_layer(m13, p["mlp2"]["w"],
+                                          bias=p["mlp2"]["b"], residual=y3,
+                                          vld_cnt=vld_m, **lifkw)
+                # q+k consumed the inbound map; proj/mlp1/mlp2 consumed maps
+                # emitted by the pass right before them
+                aux["vld_reused"] += 3 + (2 if tok_vld is not None else 0)
+                x = y23.reshape(*tb, x.shape[2], x.shape[3], d
+                                ).astype(cfg.dtype)
             else:
                 def smm(spk, w):
                     return spk @ w
 
-            q = lif_multistep(smm(tok, p["q"]["w"]) + p["q"]["b"], cfg.lif)
-            k = lif_multistep(smm(tok, p["k"]["w"]) + p["k"]["b"], cfg.lif)
-            mask = qk_token_mask(q, "or")        # hardware atten_reg mode
-            attn = mask * k                      # still binary (mask x spikes)
-            y = lif_multistep(smm(attn, p["proj"]["w"]) + p["proj"]["b"] + tok,
-                              cfg.lif)
-            m1 = lif_multistep(smm(y, p["mlp1"]["w"]) + p["mlp1"]["b"], cfg.lif)
-            y2 = lif_multistep(smm(m1, p["mlp2"]["w"]) + p["mlp2"]["b"] + y,
-                               cfg.lif)
-            x = y2.reshape(*tb, x.shape[2], x.shape[3], d)
+                q = lif_multistep(smm(tok, p["q"]["w"]) + p["q"]["b"], cfg.lif)
+                k = lif_multistep(smm(tok, p["k"]["w"]) + p["k"]["b"], cfg.lif)
+                mask = qk_token_mask(q, "or")    # hardware atten_reg mode
+                attn = mask * k                  # still binary (mask x spikes)
+                y = lif_multistep(smm(attn, p["proj"]["w"]) + p["proj"]["b"] + tok,
+                                  cfg.lif)
+                m1 = lif_multistep(smm(y, p["mlp1"]["w"]) + p["mlp1"]["b"], cfg.lif)
+                y2 = lif_multistep(smm(m1, p["mlp2"]["w"]) + p["mlp2"]["b"] + y,
+                                   cfg.lif)
+                x = y2.reshape(*tb, x.shape[2], x.shape[3], d)
+                vld = None
         elif kind == "head":
             _, cin, size = layer
             logits = jnp.mean(jax.vmap(

@@ -53,6 +53,11 @@ class EngineConfig:
     max_slots: int = 8
     max_len: int = 512
     prefill_pad: int = 64               # prompt length bucket size
+    # deployed spiking path: route qk_spiking models' LIF projections and
+    # binary-activation matmuls through the fused-PE / spike_matmul Pallas
+    # kernels (forward-exact; serving is inference, so the missing surrogate
+    # gradient is irrelevant here)
+    use_event_kernels: bool = False
 
 
 class Engine:
@@ -60,6 +65,13 @@ class Engine:
         self.model = model
         self.params = params
         self.cfg = cfg
+        if cfg.use_event_kernels and \
+                getattr(model.cfg, "attention_kind", "") == "qk_spiking":
+            # run THIS engine's prefills/decodes on the fused event-kernel
+            # dataflow without mutating the caller's model (the flag is
+            # inference-only; a shared model may still be used for training)
+            self.model = type(model)(
+                dataclasses.replace(model.cfg, use_event_kernels=True))
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}
         self.finished: list[Request] = []

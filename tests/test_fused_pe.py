@@ -1,0 +1,215 @@
+"""Fused PE dataflow kernel vs the composed unfused reference chain.
+
+The oracle is BY CONSTRUCTION the 4-kernel pipeline the fusion replaces:
+spike_matmul_ref -> lif_update_ref -> qk_attention_ref -> block_count_map_2d
+(see repro/kernels/fused_pe/ref.py). Parity requirements from the brief:
+spikes bit-for-bit (int8), v_next within 1e-5, emitted vld_next equal to
+block_count_map_2d of the emitted spikes.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.events import block_count_map_2d, pad_to_blocks
+from repro.kernels.fused_pe import fused_pe, fused_pe_layer, fused_pe_ref
+from repro.kernels.spike_matmul import spike_matmul, spike_matmul_ref
+
+
+def _structured_spikes(key, m, k, frac_silent, rate=0.2):
+    """Spike matrix with a silent top fraction of rows (whole blocks skip)."""
+    rows_on = int(m * (1 - frac_silent))
+    x = jnp.zeros((m, k), jnp.int8)
+    if rows_on:
+        x = x.at[:rows_on].set(
+            (jax.random.uniform(key, (rows_on, k)) < rate).astype(jnp.int8))
+    return x
+
+
+def _check(out, ref, v_tol=1e-5):
+    spk_r, vn_r, vld_r = ref
+    np.testing.assert_array_equal(np.asarray(out.spikes), np.asarray(spk_r))
+    if vn_r is None:
+        assert out.v_next is None
+    else:
+        np.testing.assert_allclose(np.asarray(out.v_next), np.asarray(vn_r),
+                                   rtol=v_tol, atol=v_tol)
+    np.testing.assert_array_equal(np.asarray(out.vld_next), np.asarray(vld_r))
+
+
+# ------------------------------------------------------- sparsity level sweep
+@pytest.mark.parametrize("frac_silent", [0.0, 0.5, 0.9])
+def test_fused_pe_sparsity_sweep(frac_silent):
+    m = k = 256
+    n = 128
+    x = _structured_spikes(jax.random.PRNGKey(0), m, k, frac_silent)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.1
+    out = fused_pe(x, w)
+    _check(out, fused_pe_ref(x, w))
+
+
+def test_fused_pe_all_silent_is_exact_zero():
+    x = jnp.zeros((256, 256), jnp.int8)
+    w = jax.random.normal(jax.random.PRNGKey(0), (256, 128))
+    out = fused_pe(x, w)
+    assert int(jnp.abs(out.spikes).max()) == 0
+    assert int(out.vld_next.sum()) == 0
+
+
+# --------------------------------------------------------- reset mode + state
+@pytest.mark.parametrize("soft_reset", [False, True])
+def test_fused_pe_stateful_resets(soft_reset):
+    m, k, n = 200, 300, 130            # non-block-multiples: padding path
+    x = (jax.random.uniform(jax.random.PRNGKey(0), (m, k)) < 0.2
+         ).astype(jnp.int8)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.1
+    v = jax.random.normal(jax.random.PRNGKey(2), (m, n))
+    s = (jax.random.uniform(jax.random.PRNGKey(3), (m, n)) < 0.5
+         ).astype(jnp.int8)
+    b = jax.random.normal(jax.random.PRNGKey(4), (n,))
+    out = fused_pe(x, w, bias=b, v_prev=v, s_prev=s, soft_reset=soft_reset,
+                   tau=0.7, v_th=0.8)
+    _check(out, fused_pe_ref(x, w, bias=b, v_prev=v, s_prev=s,
+                             soft_reset=soft_reset, tau=0.7, v_th=0.8))
+    if not soft_reset:
+        vn = np.asarray(out.v_next)
+        # hard reset: fired neurons sit at exactly 0 (pre-mask spikes)
+        cur = np.asarray(spike_matmul_ref(x, w)) + np.asarray(b)[None, :]
+        vpre = 0.7 * np.asarray(v) * (1 - np.asarray(s)) + cur
+        assert np.all(vn[vpre >= 0.8] == 0.0)
+
+
+# ------------------------------------------------------------- QK write-back
+@pytest.mark.parametrize("with_qk", [False, True])
+def test_fused_pe_qk_writeback(with_qk):
+    m, k, n = 256, 256, 128
+    x = (jax.random.uniform(jax.random.PRNGKey(0), (m, k)) < 0.15
+         ).astype(jnp.int8)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.1
+    q = (jax.random.uniform(jax.random.PRNGKey(2), (m, 96)) < 0.02
+         ).astype(jnp.int8) if with_qk else None
+    out = fused_pe(x, w, q=q)
+    _check(out, fused_pe_ref(x, w, q=q))
+    if with_qk:
+        # silent-Q tokens must emit NO spikes (atten_reg gating)
+        dead = np.asarray(q).sum(axis=1) < 1
+        assert np.asarray(out.spikes)[dead].sum() == 0
+
+
+def test_fused_pe_full_combination():
+    m, k, n = 130, 257, 100
+    x = (jax.random.uniform(jax.random.PRNGKey(0), (m, k)) < 0.2
+         ).astype(jnp.int8)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.1
+    b = jax.random.normal(jax.random.PRNGKey(2), (n,))
+    res = jax.random.normal(jax.random.PRNGKey(3), (m, n))
+    v = jax.random.normal(jax.random.PRNGKey(4), (m, n))
+    s = (jax.random.uniform(jax.random.PRNGKey(5), (m, n)) < 0.5
+         ).astype(jnp.int8)
+    q = (jax.random.uniform(jax.random.PRNGKey(6), (m, 64)) < 0.1
+         ).astype(jnp.int8)
+    out = fused_pe(x, w, bias=b, residual=res, v_prev=v, s_prev=s, q=q)
+    _check(out, fused_pe_ref(x, w, bias=b, residual=res, v_prev=v,
+                             s_prev=s, q=q))
+
+
+# -------------------------------------------- emitted metadata (PipeSDA C3)
+def test_emitted_vld_matches_block_count_of_emitted_spikes():
+    """The on-the-fly vld_next IS block_count_map_2d of the emitted spikes."""
+    m, k, n = 300, 256, 200
+    x = _structured_spikes(jax.random.PRNGKey(7), m, k, 0.5)
+    w = jax.random.normal(jax.random.PRNGKey(8), (k, n)) * 0.1
+    q = (jax.random.uniform(jax.random.PRNGKey(9), (m, 32)) < 0.05
+         ).astype(jnp.int8)
+    out = fused_pe(x, w, q=q)
+    expect = block_count_map_2d(pad_to_blocks(out.spikes, 128, 128), 128, 128)
+    np.testing.assert_array_equal(np.asarray(out.vld_next),
+                                  np.asarray(expect))
+
+
+def test_emitted_vld_chains_into_spike_matmul():
+    """Layer L's vld_next drives layer L+1's event skip: result unchanged."""
+    m, k, n, n2 = 256, 256, 256, 64
+    x = _structured_spikes(jax.random.PRNGKey(0), m, k, 0.5)
+    w1 = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.1
+    w2 = jax.random.normal(jax.random.PRNGKey(2), (n, n2)) * 0.1
+    out = fused_pe(x, w1)
+    chained = spike_matmul(out.spikes, w2, vld_cnt=out.vld_next)
+    np.testing.assert_allclose(np.asarray(chained),
+                               np.asarray(spike_matmul_ref(out.spikes, w2)),
+                               rtol=1e-5, atol=1e-5)
+    fused_chained = fused_pe(out.spikes, w2, vld_cnt=out.vld_next)
+    _check(fused_chained, fused_pe_ref(out.spikes, w2))
+
+
+# --------------------------------------------------------------- T>1 layers
+def test_fused_pe_layer_multistep_matches_lif_multistep():
+    from repro.core.lif import LIFConfig, lif_multistep
+
+    t, m, k, n = 3, 96, 128, 64
+    xt = (jax.random.uniform(jax.random.PRNGKey(0), (t, m, k)) < 0.2
+          ).astype(jnp.int8)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.1
+    b = jax.random.normal(jax.random.PRNGKey(2), (n,))
+    spikes, vld = fused_pe_layer(xt, w, bias=b)
+    cur = jnp.einsum("tmk,kn->tmn", xt.astype(jnp.float32), w) + b
+    ref = lif_multistep(cur, LIFConfig()).astype(jnp.int8)
+    np.testing.assert_array_equal(np.asarray(spikes), np.asarray(ref))
+    assert vld.shape == (t, 1, 1)
+
+
+# ------------------------------------------------- satellite: lif padding fix
+def test_lif_update_pallas_non_multiple_block():
+    """Regression: lif_update_pallas used to assert m % block == 0."""
+    from repro.kernels.lif_update import lif_update_ref
+    from repro.kernels.lif_update.lif_update import lif_update_pallas
+
+    m, d = 100, 64                     # not a multiple of any default block
+    cur = jax.random.normal(jax.random.PRNGKey(0), (m, d))
+    v = jax.random.normal(jax.random.PRNGKey(1), (m, d))
+    s = (jax.random.uniform(jax.random.PRNGKey(2), (m, d)) < 0.5
+         ).astype(jnp.float32)
+    spk, vn = lif_update_pallas(cur, v, s, block=64, interpret=True)
+    spk_r, vn_r = lif_update_ref(cur, v, s)
+    np.testing.assert_array_equal(np.asarray(spk), np.asarray(spk_r))
+    np.testing.assert_allclose(np.asarray(vn), np.asarray(vn_r), rtol=1e-6)
+
+
+# --------------------------------------------- model wiring (deployed paths)
+def test_snn_cnn_apply_fused_event_path_parity():
+    """QKFResNet-11 deployed inference: fused-PE event path == dense path,
+    and the on-the-fly metadata is chained through the QKFormer block."""
+    from repro.models import snn_cnn
+
+    cfg = snn_cnn.SNNCNNConfig(arch="qkfresnet11", image_size=16,
+                               width_mult=0.25, timesteps=1)
+    var = snn_cnn.init(jax.random.PRNGKey(0), cfg)
+    fused = snn_cnn.fuse_model(var, cfg)
+    img = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
+    l_ref, aux_ref = snn_cnn.apply_fused(fused, img, cfg)
+    cfg_ev = dataclasses.replace(cfg, use_event_kernels=True)
+    l_ev, aux_ev = snn_cnn.apply_fused(fused, img, cfg_ev)
+    np.testing.assert_allclose(np.asarray(l_ev), np.asarray(l_ref),
+                               rtol=1e-4, atol=1e-4)
+    assert float(aux_ev["total_spikes"]) == float(aux_ref["total_spikes"])
+    assert aux_ev["vld_reused"] >= 5   # q,k from resblock; proj/mlp1/mlp2
+
+
+def test_qk_spiking_attention_event_path_parity():
+    """LM serving path: fused projections + event wo matmul == jnp path."""
+    from repro.configs import build_model, get_config, reduced
+
+    cfg = reduced(get_config("qwen3-1.7b"), spiking=True,
+                  attention_kind="qk_spiking")
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                              cfg.vocab_size)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    l_ref, _ = model.prefill(params, {"tokens": toks},
+                             return_all_logits=True)
+    model.cfg = dataclasses.replace(cfg, use_event_kernels=True)
+    l_ev, _ = model.prefill(params, {"tokens": toks}, return_all_logits=True)
+    np.testing.assert_allclose(np.asarray(l_ev), np.asarray(l_ref),
+                               rtol=2e-4, atol=2e-4)
