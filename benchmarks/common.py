@@ -7,9 +7,22 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
+from pathlib import Path
 
 import jax
 import numpy as np
+
+# repo root — BENCH_*.json artifacts always land here regardless of CWD, so
+# the perf trajectory is actually captured (and diffable) across PRs
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def artifact_path(name: str) -> str:
+    """Resolve a benchmark artifact name/path to the repo root (absolute
+    paths pass through untouched)."""
+    p = Path(name)
+    return str(p if p.is_absolute() else REPO_ROOT / p)
+
 
 # TPU v5e model (per chip)
 PEAK_FLOPS = 197e12          # bf16

@@ -17,11 +17,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import RooflineEstimate, time_call
+from benchmarks.common import RooflineEstimate, artifact_path, time_call
 from repro.kernels.fused_pe import fused_pe, fused_pe_ref
 from repro.kernels.lif_update import lif_update_ref
+from repro.kernels.packed import pack_spikes, unpack_spikes
 from repro.kernels.qk_attention import qk_attention_ref
-from repro.kernels.spike_matmul import spike_matmul_ref
+from repro.kernels.spike_matmul import spike_matmul, spike_matmul_ref
 from repro.kernels.spike_matmul.ops import block_sparsity
 from repro.kernels.w2ttfs_pool import w2ttfs_pool_fc_ref
 
@@ -80,7 +81,27 @@ def fused_chain_bytes(m: int, k: int, n: int, dq: int, *,
             "reduction": unfused / fused}
 
 
-def main(json_path: str = "BENCH_kernels.json") -> None:
+# ---------------------------------------------- packed-spike HBM-byte model
+def packed_spike_bytes(m: int, k: int, n: int, dq: int) -> dict:
+    """SPIKE-tensor HBM bytes for one deployed fused layer (x in, Q in,
+    spikes out): dense int8 interchange vs the bit-packed format.
+
+    Packed = 1 bit/spike + the int32 vld_cnt block map per tensor (which
+    the dense event path ALSO needs, but derives with an extra pass when
+    not chained — here it rides inside PackedSpikes for free). Weights and
+    membrane state are unchanged by the format, so they are excluded: this
+    is the term event compression attacks.
+    """
+    def maps(mm, kk):
+        return 4 * (mm // 128) * (kk // 128)
+
+    dense = float(m * k + m * dq + m * n)                 # int8, 1 B/spike
+    packed = float((m * k + m * dq + m * n) / 8
+                   + maps(m, k) + maps(m, dq) + maps(m, n))
+    return {"dense": dense, "packed": packed, "reduction": dense / packed}
+
+
+def main(json_path: str | None = None) -> None:
     print("# kernel roofline model (TPU v5e) + measured CPU oracle time")
     print("kernel,case,flops,bytes,tpu_time_us,tpu_bound,cpu_ref_us")
 
@@ -143,6 +164,44 @@ def main(json_path: str = "BENCH_kernels.json") -> None:
     spk_ref, _, _ = fused_pe_ref(xs, ws, q=qs)
     assert np.array_equal(np.asarray(out.spikes), np.asarray(spk_ref))
 
+    # ------------------------------------------------------- packed spikes
+    # event compression: every spike tensor 32-per-int32-lane. Modeled HBM
+    # bytes at the deployed layer config + measured CPU wall-clock of the
+    # packed vs dense kernel paths (interpret mode: Python-level cost, the
+    # TPU numbers are the byte models).
+    for frac_silent in (0.0, 0.5, 0.9):
+        byt = packed_spike_bytes(m, k, n, dq)
+        x = _structured(m, k, frac_silent)
+        skip = float(block_sparsity(x))
+        flops = 2.0 * m * k * n * (1 - skip)
+        emit("packed_spikes", f"fused layer spike-bytes silent="
+             f"{frac_silent:.0%}", flops, byt["packed"],
+             None, spike_bytes_dense=byt["dense"],
+             spike_hbm_reduction=byt["reduction"])
+
+    ms2 = ks2 = ns2 = 256
+    xs2 = _structured(ms2, ks2, 0.5)
+    ws2 = jax.random.normal(jax.random.PRNGKey(9), (ks2, ns2)) * 0.1
+    ps2 = pack_spikes(xs2)
+    t_pack = time_call(lambda a: pack_spikes(a).words, xs2) * 1e6
+    t_unpack = time_call(unpack_spikes, ps2) * 1e6
+    t_dense_mm = time_call(lambda a, w_: spike_matmul(a, w_), xs2, ws2) * 1e6
+    t_packed_mm = time_call(lambda a, w_: spike_matmul(a, w_), ps2, ws2) * 1e6
+    emit("packed_spikes", f"pack {ms2}x{ks2} (measured)", 0.0,
+         ms2 * ks2 * 1.125 + 4 * (ms2 // 128) * (ks2 // 128), t_pack)
+    emit("packed_spikes", f"unpack {ms2}x{ks2} (measured)", 0.0,
+         ms2 * ks2 * 1.125, t_unpack)
+    emit("spike_matmul", f"{ms2}^3 dense operand (measured)", 0.0, 0.0,
+         t_dense_mm)
+    emit("spike_matmul", f"{ms2}^3 packed operand (measured)", 0.0, 0.0,
+         t_packed_mm, wallclock_vs_dense=t_packed_mm / max(t_dense_mm, 1e-9))
+    # correctness anchor: packed operand == dense oracle, bit for bit
+    np.testing.assert_allclose(
+        np.asarray(spike_matmul(ps2, ws2)),
+        np.asarray(spike_matmul_ref(xs2, ws2)), rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(unpack_spikes(ps2)),
+                                  np.asarray(xs2))
+
     # qk_attention: N=4096, D=512 — one HBM pass
     nq, d = 4096, 512
     qq = (jax.random.uniform(jax.random.PRNGKey(2), (nq, d)) < 0.1
@@ -184,21 +243,32 @@ def main(json_path: str = "BENCH_kernels.json") -> None:
     emit("lif_update", "(unfused 3-pass)", 5.0 * n_el, unfused_bytes)
 
     # ----------------------------------------------------------- JSON output
+    json_path = artifact_path(json_path or "BENCH_kernels.json")
     deployed = fused_chain_bytes(1024, 1024, 1024, 1024, stateful=False)
+    packed_deployed = packed_spike_bytes(1024, 1024, 1024, 1024)
     summary = {
         "fused_pe_1024_deployed": deployed,
         "fused_pe_1024_stateful": fused_chain_bytes(1024, 1024, 1024, 1024,
                                                     stateful=True),
     }
+    packed_summary = {
+        "deployed_1024": packed_deployed,
+        "pack_us_256": t_pack, "unpack_us_256": t_unpack,
+        "spike_matmul_dense_us_256": t_dense_mm,
+        "spike_matmul_packed_us_256": t_packed_mm,
+    }
     with open(json_path, "w") as f:
-        json.dump({"rows": ROWS, "fused_pe_hbm_model": summary}, f, indent=1)
+        json.dump({"rows": ROWS, "fused_pe_hbm_model": summary,
+                   "packed_spike_hbm_model": packed_summary}, f, indent=1)
     print(f"# wrote {json_path}: fused-PE modeled HBM reduction "
-          f"{deployed['reduction']:.2f}x (deployed, 1024^3)")
+          f"{deployed['reduction']:.2f}x (deployed, 1024^3); packed spike "
+          f"tensors {packed_deployed['reduction']:.2f}x fewer spike bytes")
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_kernels.json",
-                    help="machine-readable output path")
+                    help="machine-readable output path (relative paths "
+                         "resolve to the repo root)")
     args = ap.parse_args()
     main(args.out)

@@ -2,9 +2,14 @@
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   BENCH_KD_STEPS=40 ... python -m benchmarks.run     # quick KD budget
+
+Writes a machine-readable run summary (section status + wall time) to
+``BENCH_run.json`` at the REPO ROOT regardless of CWD — like every
+``BENCH_*.json`` artifact — so the perf trajectory is captured across PRs.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -12,6 +17,7 @@ import traceback
 
 
 def main() -> None:
+    from benchmarks.common import artifact_path
     from benchmarks import (fig8_kd_accuracy, kernel_bench, serve_throughput,
                             table1_resources, table2_spikes,
                             table3_efficiency, timestep_ablation)
@@ -31,19 +37,31 @@ def main() -> None:
          serve_throughput.main),
     ]
     failed = []
+    section_log = []
     for title, fn in sections:
         print(f"\n{'=' * 72}\n== {title}\n{'=' * 72}")
         t0 = time.time()
+        ok = True
         try:
             fn()
         except Exception:
             traceback.print_exc()
             failed.append(title)
-        print(f"== ({time.time() - t0:.1f}s)")
+            ok = False
+        dt = time.time() - t0
+        section_log.append({"section": title, "ok": ok, "seconds": dt})
+        print(f"== ({dt:.1f}s)")
+    out_path = artifact_path("BENCH_run.json")
+    with open(out_path, "w") as f:
+        json.dump({"sections": section_log,
+                   "failed": failed,
+                   "finished_at": time.strftime("%Y-%m-%dT%H:%M:%S")},
+                  f, indent=1)
+    print(f"\nwrote {out_path}")
     if failed:
-        print(f"\nFAILED sections: {failed}")
+        print(f"FAILED sections: {failed}")
         sys.exit(1)
-    print("\nAll benchmark sections completed.")
+    print("All benchmark sections completed.")
 
 
 if __name__ == "__main__":

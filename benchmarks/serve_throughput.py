@@ -17,12 +17,13 @@ from repro.serve import Engine, EngineConfig
 
 
 def run_engine(arch: str, slots: int, n_req: int = 8, max_new: int = 8,
-               **overrides) -> dict:
+               spike_format: str = "dense", **overrides) -> dict:
     cfg = reduced(get_config(arch), **overrides)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     eng = Engine(model, params, EngineConfig(max_slots=slots, max_len=64,
-                                             prefill_pad=16))
+                                             prefill_pad=16,
+                                             spike_format=spike_format))
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for _ in range(n_req):
@@ -32,7 +33,7 @@ def run_engine(arch: str, slots: int, n_req: int = 8, max_new: int = 8,
     wall = time.perf_counter() - t0
     st = eng.stats()
     return {"arch": arch, "slots": slots, "tok_s": st["tokens"] / wall,
-            "ttft_s": st["ttft_mean_s"]}
+            "ttft_s": st["ttft_mean_s"], "stats": st}
 
 
 def main() -> None:
@@ -47,6 +48,17 @@ def main() -> None:
                     attention_kind="qk_spiking")
     print(f"qwen3-1.7b,qkformer(C4) continuous,4,{qk['tok_s']:.1f},"
           f"{qk['ttft_s']:.2f}")
+    # event-compressed serving: packed spike state + measured telemetry
+    pk = run_engine("qwen3-1.7b", slots=4, spiking=True,
+                    attention_kind="qk_spiking", spike_format="packed")
+    st = pk["stats"]
+    print(f"qwen3-1.7b,qkformer(C4) packed,4,{pk['tok_s']:.1f},"
+          f"{pk['ttft_s']:.2f}  # tok_s includes per-tick spike telemetry "
+          f"(EngineConfig.spike_stats_every)")
+    print(f"# packed serving telemetry: spike_sparsity="
+          f"{st['spike_sparsity_mean']:.3f}, packed_bytes/tick="
+          f"{st['packed_spike_bytes_per_tick_mean']:.0f}, spike-state HBM "
+          f"reduction={st['spike_state_hbm_reduction']:.1f}x")
 
 
 if __name__ == "__main__":

@@ -64,6 +64,12 @@ class ModelConfig:
     # through the fused-PE / spike_matmul Pallas kernels (event-skipped, no
     # surrogate gradient: do NOT enable for training)
     use_event_kernels: bool = False
+    # spike_format: HBM format for spike tensors on the qk_spiking path.
+    # "packed" bit-packs the masked attention spike map (32 spikes/int32
+    # lane, core.events.PackedSpikes) before the output projection and
+    # caches the per-token spike state packed (~8x fewer spike bytes,
+    # bit-identical spikes); "dense" keeps int8 maps.
+    spike_format: str = "dense"
     lif: LIFConfig = LIFConfig()
     quant: QuantConfig = QuantConfig()
     # --- numerics / perf knobs (hillclimb surface) ---

@@ -13,13 +13,30 @@ the event-driven kernels (``repro.kernels.spike_matmul``) consume it with
 ``@pl.when(vld_cnt > 0)`` to skip silent blocks entirely: no MXU work, no HBM
 write. The data-driven level is the Pallas grid itself (the elastic-FIFO
 stream of blocks).
+
+Event COMPRESSION lives here too: ``PackedSpikes`` is the bit-packed HBM
+interchange format for spike tensors (32 spikes per int32 lane along the
+last axis + the block-aligned ``vld_cnt`` map derived by popcount at pack
+time). Spikes are 1-bit events; shipping them between layers as int8 — let
+alone f32 — pays 8-32x the information-theoretic HBM cost, and memory
+traffic is the term that decides whether spiking execution saves energy
+(arXiv 2409.08290). The Pallas pack/unpack primitives are in
+``repro.kernels.packed``; this module holds the container and the pure-jnp
+references so ``core`` stays kernel-free.
 """
 from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 Array = jax.Array
+
+LANE_BITS = 32                  # spikes per packed int32 word
+SPIKE_FORMATS = ("dense", "packed")
 
 
 def block_count_map_2d(spikes: Array, block_m: int, block_k: int) -> Array:
@@ -91,3 +108,165 @@ def synaptic_ops(spikes: Array, fanout: int) -> Array:
     ``fanout`` accumulations downstream. This is the SOPS numerator of the
     paper's GSOPS/W metric (Table III)."""
     return jnp.sum(spikes.astype(jnp.float32)) * fanout
+
+
+# ===================================================== bit-packed spike format
+#
+# Layout contract (shared by the jnp references below, the Pallas kernels in
+# ``repro.kernels.packed``, and the packed operand paths of spike_matmul /
+# fused_pe): word j of a row covers columns [j*32, (j+1)*32) of the padded
+# spike matrix, bit b (little-endian) = column j*32 + b. Both core dims are
+# padded to the (block_m, block_k) grid — PackedSpikes is always
+# kernel-ready — and block_k must be a multiple of 32 so VMEM tiles land on
+# word boundaries.
+
+def _word_shifts() -> Array:
+    return jnp.arange(LANE_BITS, dtype=jnp.int32)
+
+
+def pack_words(bits: Array) -> Array:
+    """[..., K] 0/nonzero spikes -> [..., K/32] int32 words (K % 32 == 0).
+
+    Pure bit math, safe inside Pallas kernel bodies: XLA shifts/adds are
+    modular, so bit 31 wraps to INT32_MIN and the per-word sum of distinct
+    powers of two is exactly the bitwise OR.
+    """
+    *lead, k = bits.shape
+    assert k % LANE_BITS == 0, k
+    b3 = (bits != 0).astype(jnp.int32).reshape(*lead, k // LANE_BITS,
+                                               LANE_BITS)
+    return jnp.sum(jnp.left_shift(b3, _word_shifts()), axis=-1,
+                   dtype=jnp.int32)
+
+
+def unpack_words(words: Array, dtype=jnp.int8) -> Array:
+    """[..., W] int32 words -> [..., W*32] 0/1 spikes (inverse of
+    ``pack_words``; arithmetic >> then &1 extracts every bit incl. bit 31)."""
+    *lead, w = words.shape
+    bits = jnp.bitwise_and(
+        jnp.right_shift(words[..., None], _word_shifts()), 1)
+    return bits.reshape(*lead, w * LANE_BITS).astype(dtype)
+
+
+def popcount_block_map(words: Array, block_m: int, block_k: int) -> Array:
+    """vld_cnt per (block_m x block_k) tile straight from packed words —
+    the metadata pass reads 1/32nd of the bytes a dense re-read would."""
+    *lead, m, w = words.shape
+    wpb = block_k // LANE_BITS
+    assert m % block_m == 0 and w % wpb == 0, (words.shape, block_m, block_k)
+    pc = jax.lax.population_count(words)
+    pc = pc.reshape(*lead, m // block_m, block_m, w // wpb, wpb)
+    return jnp.sum(pc, axis=(-3, -1), dtype=jnp.int32)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PackedSpikes:
+    """Event-compressed spike tensor: the HBM interchange type.
+
+    words   : int32 [..., Mp, Kp/32] — bit-packed spikes, both core dims
+              padded to the (block_m, block_k) grid
+    vld_cnt : int32 [..., Mp/block_m, Kp/block_k] — per-block spike counts
+              (PipeSDA FIFO-tail metadata), derived by popcount AT PACK TIME
+              so no second pass over the tensor ever builds it
+    shape   : the logical (pre-padding) shape, last two dims are (m, k)
+
+    One object carries both the compressed payload and the routing metadata,
+    so handing a layer's packed output to the next layer's kernel needs no
+    recomputation of either. ~8x fewer HBM bytes than int8 spikes (32x vs
+    f32), minus the tiny count map.
+    """
+    words: Array
+    vld_cnt: Array
+    shape: tuple
+    block_m: int = 128
+    block_k: int = 128
+
+    # ------------------------------------------------------------- pytree
+    def tree_flatten(self):
+        return (self.words, self.vld_cnt), (tuple(self.shape), self.block_m,
+                                            self.block_k)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        shape, bm, bk = aux
+        words, vld = children
+        return cls(words, vld, shape, bm, bk)
+
+    # -------------------------------------------------------------- views
+    @property
+    def m(self) -> int:
+        return self.shape[-2]
+
+    @property
+    def k(self) -> int:
+        return self.shape[-1]
+
+    @property
+    def padded_shape(self) -> tuple:
+        return (*self.shape[:-2], self.words.shape[-2],
+                self.words.shape[-1] * LANE_BITS)
+
+    @property
+    def packed_bytes(self) -> int:
+        """HBM bytes this tensor occupies (words + metadata)."""
+        return (4 * math.prod(self.words.shape)
+                + 4 * math.prod(self.vld_cnt.shape))
+
+    @property
+    def dense_bytes(self) -> int:
+        """HBM bytes of the int8 tensor it replaces (padded, as shipped)."""
+        return math.prod(self.padded_shape)
+
+    @property
+    def compression(self) -> float:
+        return self.dense_bytes / self.packed_bytes
+
+    def __getitem__(self, idx) -> "PackedSpikes":
+        """Index ONE leading (batch/time) dim; the packed core is
+        preserved. Integer indices only — a slice would need the logical
+        shape rewritten, which this deliberately does not support."""
+        assert isinstance(idx, int), idx
+        assert len(self.shape) > 2, "cannot index the packed core dims"
+        return PackedSpikes(self.words[idx], self.vld_cnt[idx],
+                            self.shape[1:], self.block_m, self.block_k)
+
+
+def packed_from_words(words: Array, shape: tuple, *, block_m: int = 128,
+                      block_k: int = 128,
+                      vld_cnt: Optional[Array] = None) -> PackedSpikes:
+    """Wrap an existing word tensor (e.g. im2col patches of packed maps or a
+    bitwise-OR pooled map) into a kernel-ready PackedSpikes: pads rows to the
+    block_m grid and derives vld_cnt by popcount over the WORDS — never the
+    dense tensor — unless the producer already emitted it."""
+    assert words.dtype == jnp.int32
+    assert block_k % LANE_BITS == 0
+    *lead, m, w = words.shape
+    kp = w * LANE_BITS
+    assert kp % block_k == 0, (kp, block_k)
+    pm = (-m) % block_m
+    if pm:
+        pad = [(0, 0)] * (words.ndim - 2) + [(0, pm), (0, 0)]
+        words = jnp.pad(words, pad)
+    if vld_cnt is None:
+        vld_cnt = popcount_block_map(words, block_m, block_k)
+    return PackedSpikes(words, vld_cnt, tuple(shape), block_m, block_k)
+
+
+def pack_spikes_ref(x: Array, *, block_m: int = 128,
+                    block_k: int = 128) -> PackedSpikes:
+    """Pure-jnp reference pack: pad -> pack_words -> popcount vld. The
+    Pallas version (``repro.kernels.packed``) does all three in one grid
+    pass; this is its oracle and the portable fallback."""
+    assert block_k % LANE_BITS == 0
+    xp = pad_to_blocks(x, block_m, block_k)
+    words = pack_words(xp)
+    vld = popcount_block_map(words, block_m, block_k)
+    return PackedSpikes(words, vld, tuple(x.shape), block_m, block_k)
+
+
+def unpack_spikes_ref(ps: PackedSpikes, dtype=jnp.int8) -> Array:
+    """Pure-jnp reference unpack back to the LOGICAL (unpadded) dense map."""
+    dense = unpack_words(ps.words, dtype)
+    sl = tuple(slice(0, d) for d in ps.shape[-2:])
+    return dense[(..., *sl)]

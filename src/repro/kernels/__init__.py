@@ -11,8 +11,13 @@ Kernels (mapped from the paper's FPGA units in DESIGN.md §6):
                     event-skipped spike matmul + bias/residual + LIF update
                     + QK write-back mask + on-the-fly emission of the next
                     layer's vld_cnt metadata (see docs/fused_pe_dataflow.md)
-  spike_matmul    — event-driven matmul: int8 spike activations, per-block
-                    vld_cnt skip (@pl.when) = PipeSDA + PE event FIFO (C3)
+  spike_matmul    — event-driven matmul: int8 OR bit-packed spike
+                    activations, per-block vld_cnt skip (@pl.when) =
+                    PipeSDA + PE event FIFO (C3)
+  packed          — event compression: pack/unpack 32 spikes per int32
+                    lane with popcount-derived vld_cnt in the same pass
+                    (the PackedSpikes HBM interchange format,
+                    docs/event_compression.md)
   qk_attention    — fused on-the-fly QKFormer token attention in the
                     write-back path (C4)
   w2ttfs_pool     — window spike-count + unit-scale FC head = WTFC core (C2)

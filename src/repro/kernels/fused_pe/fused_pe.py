@@ -24,17 +24,29 @@ This kernel is the TPU realization of the paper's fusion: per output tile,
      so layer L produces layer L+1's PipeSDA routing metadata on the fly
      instead of a separate reduction pass re-reading the spikes from HBM.
 
+Event COMPRESSION (the ``packed_*`` static flags): every spike operand can
+arrive bit-packed — 32 spikes per int32 lane, the ``PackedSpikes`` HBM
+format — and the emitted spike map can leave bit-packed. Packed K-tiles /
+residual tiles are unpacked in VMEM right before use; a packed Q tile's row
+sum is a popcount (no unpack at all); the packed output is built from the
+in-register spike tile during write-back. With ``packed_in + packed_out``
+a chained layer moves ~1/8th the spike bytes over HBM in each direction
+while producing bit-identical spikes.
+
 Inputs (optional operands selected by static flags):
   x        [M, K]  int8 spikes (or dense activations; only zero-blocks skip)
+           packed_in:  [M, K/32] int32 words
   w        [K, N]  weights
   bias     [1, N]  f32  (with_bias)    — F&Q-folded BN bias
   residual [M, N]  f32  (with_residual)— shortcut membrane current (MS-ResNet)
+           packed_residual: [M, N/32] int32 words (binary spike shortcut)
   v_prev   [M, N]  f32  (with_state)   — membrane state for T>1
   s_prev   [M, N]  int8 (with_state)   — previous-step spikes for hard reset
   q        [M, Dq] int8 (apply_qk)     — Q spikes; row-sum -> token mask
+           packed_q: [M, Dq/32] int32 words; row-sum == popcount row-sum
 
 Outputs:
-  spikes   [M, N]        int8
+  spikes   [M, N]        int8; packed_out: [M, N/32] int32 words
   v_next   [M, N]        f32   (with_state only — T=1 deployed mode skips
                                 the write entirely: s = H(I - v_th))
   vld_next [M/bm, N/bn]  int32 (emit_vld) — per-tile nonzero count of the
@@ -54,13 +66,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...core.events import LANE_BITS, pack_words, unpack_words
+
 Array = jax.Array
 
 
 def _make_kernel(*, tau: float, v_th: float, soft_reset: bool,
                  qk_threshold: float, with_bias: bool, with_residual: bool,
                  with_state: bool, apply_qk: bool, emit_vld: bool,
-                 m_valid: int, n_valid: int, block_m: int, block_n: int):
+                 m_valid: int, n_valid: int, block_m: int, block_n: int,
+                 packed_in: bool, packed_q: bool, packed_residual: bool,
+                 packed_out: bool):
     def kernel(vld_ref, *refs):
         it = iter(refs)
         x_ref = next(it)
@@ -87,7 +103,10 @@ def _make_kernel(*, tau: float, v_th: float, soft_reset: bool,
 
         @pl.when(cnt > 0)            # event skip: silent block -> no MXU
         def _accum():
-            x = x_ref[...].astype(jnp.float32)
+            if packed_in:            # decompress the K-tile in VMEM
+                x = unpack_words(x_ref[...], jnp.float32)
+            else:
+                x = x_ref[...].astype(jnp.float32)
             w = w_ref[...].astype(jnp.float32)
             acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
@@ -97,7 +116,10 @@ def _make_kernel(*, tau: float, v_th: float, soft_reset: bool,
             if with_bias:
                 cur = cur + b_ref[...].astype(jnp.float32)
             if with_residual:
-                cur = cur + r_ref[...].astype(jnp.float32)
+                if packed_residual:  # binary spike shortcut, stored packed
+                    cur = cur + unpack_words(r_ref[...], jnp.float32)
+                else:
+                    cur = cur + r_ref[...].astype(jnp.float32)
             if with_state:
                 v_prev = v_ref[...].astype(jnp.float32)
                 s_prev = s_ref[...].astype(jnp.float32)
@@ -111,8 +133,13 @@ def _make_kernel(*, tau: float, v_th: float, soft_reset: bool,
                 else:
                     vout_ref[...] = v * (1.0 - spk)
             if apply_qk:             # Fig 5: atten_reg gates the write-back
-                rowsum = q_ref[...].astype(jnp.float32).sum(
-                    axis=1, keepdims=True)
+                if packed_q:         # row sum of packed spikes == popcount
+                    rowsum = jnp.sum(
+                        jax.lax.population_count(q_ref[...]), axis=1,
+                        keepdims=True).astype(jnp.float32)
+                else:
+                    rowsum = q_ref[...].astype(jnp.float32).sum(
+                        axis=1, keepdims=True)
                 spk = spk * (rowsum >= qk_threshold).astype(jnp.float32)
             if m_valid % block_m or n_valid % block_n:
                 rows = (jax.lax.broadcasted_iota(
@@ -121,7 +148,10 @@ def _make_kernel(*, tau: float, v_th: float, soft_reset: bool,
                     jnp.int32, (block_m, block_n), 1) + j * block_n)
                 spk = spk * ((rows < m_valid) & (cols < n_valid)
                              ).astype(jnp.float32)
-            spike_ref[...] = spk.astype(spike_ref.dtype)
+            if packed_out:           # compress in-register before the write
+                spike_ref[...] = pack_words(spk)
+            else:
+                spike_ref[...] = spk.astype(spike_ref.dtype)
             if emit_vld:             # on-the-fly next-layer PipeSDA metadata
                 cnt_ref[0, 0] = jnp.sum(spk).astype(jnp.int32)
 
@@ -132,7 +162,9 @@ def _make_kernel(*, tau: float, v_th: float, soft_reset: bool,
                    static_argnames=("tau", "v_th", "soft_reset",
                                     "qk_threshold", "block_m", "block_n",
                                     "block_k", "emit_vld", "m_valid",
-                                    "n_valid", "interpret"))
+                                    "n_valid", "packed_in", "packed_q",
+                                    "packed_residual", "packed_out",
+                                    "interpret"))
 def fused_pe_pallas(x: Array, w: Array, vld_cnt: Array,
                     bias: Array | None = None,
                     residual: Array | None = None,
@@ -144,19 +176,26 @@ def fused_pe_pallas(x: Array, w: Array, vld_cnt: Array,
                     block_m: int = 128, block_n: int = 128,
                     block_k: int = 128, emit_vld: bool = True,
                     m_valid: int | None = None, n_valid: int | None = None,
+                    packed_in: bool = False, packed_q: bool = False,
+                    packed_residual: bool = False, packed_out: bool = False,
                     interpret: bool = False):
     """Block-aligned core. All shapes must already be padded to the blocks;
     use ``repro.kernels.fused_pe.ops.fused_pe`` for the padding wrapper.
     ``m_valid``/``n_valid`` are the pre-padding extents: spikes and counts
     in the padded margin are forced to zero (bias alone could otherwise
-    fire pad rows).
+    fire pad rows). The ``packed_*`` flags select the bit-packed layout for
+    the corresponding spike operand / output (int32 words along the packed
+    axis, 32 spikes per lane).
 
     Returns (spikes, v_next | None, vld_next | None).
     """
-    m, k = x.shape
+    m = x.shape[0]
+    k = x.shape[1] * LANE_BITS if packed_in else x.shape[1]
     k2, n = w.shape
     assert k == k2 and m % block_m == 0 and k % block_k == 0 \
         and n % block_n == 0, (x.shape, w.shape, block_m, block_n, block_k)
+    if packed_in or packed_out or packed_residual:
+        assert block_k % LANE_BITS == 0 and block_n % LANE_BITS == 0
     with_state = v_prev is not None
     assert (s_prev is not None) == with_state
     grid = (m // block_m, n // block_n, k // block_k)
@@ -166,11 +205,14 @@ def fused_pe_pallas(x: Array, w: Array, vld_cnt: Array,
         with_bias=bias is not None, with_residual=residual is not None,
         with_state=with_state, apply_qk=q is not None, emit_vld=emit_vld,
         m_valid=m_valid or m, n_valid=n_valid or n,
-        block_m=block_m, block_n=block_n)
+        block_m=block_m, block_n=block_n, packed_in=packed_in,
+        packed_q=packed_q, packed_residual=packed_residual,
+        packed_out=packed_out)
 
     # index maps receive the prefetched scalar ref as a trailing arg
+    x_bk = block_k // LANE_BITS if packed_in else block_k
     in_specs = [
-        pl.BlockSpec((block_m, block_k), lambda i, j, kk, vld: (i, kk)),
+        pl.BlockSpec((block_m, x_bk), lambda i, j, kk, vld: (i, kk)),
         pl.BlockSpec((block_k, block_n), lambda i, j, kk, vld: (kk, j)),
     ]
     operands = [x, w]
@@ -179,7 +221,8 @@ def fused_pe_pallas(x: Array, w: Array, vld_cnt: Array,
                                      lambda i, j, kk, vld: (0, j)))
         operands.append(bias.reshape(1, n))
     if residual is not None:
-        in_specs.append(pl.BlockSpec((block_m, block_n),
+        r_bn = block_n // LANE_BITS if packed_residual else block_n
+        in_specs.append(pl.BlockSpec((block_m, r_bn),
                                      lambda i, j, kk, vld: (i, j)))
         operands.append(residual)
     if with_state:
@@ -192,9 +235,14 @@ def fused_pe_pallas(x: Array, w: Array, vld_cnt: Array,
                                      lambda i, j, kk, vld: (i, 0)))
         operands.append(q)
 
-    out_shape = [jax.ShapeDtypeStruct((m, n), jnp.int8)]
-    out_specs = [pl.BlockSpec((block_m, block_n),
-                              lambda i, j, kk, vld: (i, j))]
+    if packed_out:
+        out_shape = [jax.ShapeDtypeStruct((m, n // LANE_BITS), jnp.int32)]
+        out_specs = [pl.BlockSpec((block_m, block_n // LANE_BITS),
+                                  lambda i, j, kk, vld: (i, j))]
+    else:
+        out_shape = [jax.ShapeDtypeStruct((m, n), jnp.int8)]
+        out_specs = [pl.BlockSpec((block_m, block_n),
+                                  lambda i, j, kk, vld: (i, j))]
     if with_state:
         out_shape.append(jax.ShapeDtypeStruct((m, n), jnp.float32))
         out_specs.append(pl.BlockSpec((block_m, block_n),

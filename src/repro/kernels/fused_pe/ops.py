@@ -4,32 +4,42 @@ the multi-timestep scan used by the deployed models.
 ``fused_pe``      — one fused layer over 2-D operands (pad + dispatch).
 ``fused_pe_layer``— [T, M, K] spike trains: T=1 runs the stateless deployed
                     form; T>1 scans the stateful kernel carrying (v, s).
+
+Spike operands (``x``, ``q``, ``residual``) may be dense arrays OR
+``PackedSpikes`` (the bit-packed HBM interchange format), and ``pack_out``
+makes the emitted spike map leave packed too — a chained stack of layers
+then never materializes an unpacked spike tensor in HBM: each PackedSpikes
+output carries both the 32x-compressed words and the ``vld_cnt`` routing
+metadata the next kernel's block skip consumes.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from ...core.events import pad_to_blocks, vld_or_compute
+from ...core.events import (LANE_BITS, PackedSpikes, pad_to_blocks,
+                            vld_or_compute)
 from .fused_pe import fused_pe_pallas
 
 Array = jax.Array
+Spikes = Union[Array, PackedSpikes]
 
 
 class FusedPEOut(NamedTuple):
     """One fused layer's outputs.
 
-    spikes   : [M, N] int8 — emitted (post-QK-mask) spike map
+    spikes   : [M, N] int8 emitted (post-QK-mask) spike map — or, with
+               ``pack_out``, a PackedSpikes whose vld_cnt IS vld_next
     v_next   : [M, N] f32 or None — membrane state (stateful calls only)
     vld_next : [M/bm, N/bn] int32 or None — the EMITTED spikes' block count
                map over the PADDED grid; feed it to the next fused_pe /
                spike_matmul call (same block sizes) as ``vld_cnt`` to skip
                that layer's metadata pass.
     """
-    spikes: Array
+    spikes: Spikes
     v_next: Optional[Array]
     vld_next: Optional[Array]
 
@@ -41,36 +51,52 @@ def _on_tpu() -> bool:
 @functools.partial(jax.jit, static_argnames=("tau", "v_th", "soft_reset",
                                              "qk_threshold", "block_m",
                                              "block_n", "block_k",
-                                             "emit_vld", "interpret"))
-def fused_pe(x: Array, w: Array, *,
+                                             "emit_vld", "pack_out",
+                                             "interpret"))
+def fused_pe(x: Spikes, w: Array, *,
              bias: Array | None = None,
-             residual: Array | None = None,
+             residual: Spikes | None = None,
              v_prev: Array | None = None,
              s_prev: Array | None = None,
-             q: Array | None = None,
+             q: Spikes | None = None,
              vld_cnt: Array | None = None,
              tau: float = 0.5, v_th: float = 1.0, soft_reset: bool = False,
              qk_threshold: float = 1.0,
              block_m: int = 128, block_n: int = 128, block_k: int = 128,
-             emit_vld: bool = True,
+             emit_vld: bool = True, pack_out: bool = False,
              interpret: bool | None = None) -> FusedPEOut:
     """One fused PE layer: spikes/v_next/vld_next = PE(x, w, ...).
 
-    x: [M, K] spikes (any dtype; nonzero == event) or dense activations.
-    w: [K, N]. Optional bias [N], residual [M, N] (added to the membrane
-    current), LIF state (v_prev [M, N] f32 + s_prev [M, N]), and Q spikes
-    [M, Dq] for the QKFormer write-back mask. ``vld_cnt`` is the
-    [M/bm, K/bk] input metadata — pass a previous layer's ``vld_next`` to
-    chain the on-the-fly dataflow; leave None to compute it here.
+    x: [M, K] spikes (any dtype; nonzero == event), dense activations, or a
+    PackedSpikes. w: [K, N]. Optional bias [N], residual [M, N] (added to
+    the membrane current; a PackedSpikes residual is a binary shortcut
+    unpacked in VMEM), LIF state (v_prev [M, N] f32 + s_prev [M, N]), and Q
+    spikes [M, Dq] (dense or packed — packed row sums are popcounts) for
+    the QKFormer write-back mask. ``vld_cnt`` is the [M/bm, K/bk] input
+    metadata — pass a previous layer's ``vld_next`` to chain the on-the-fly
+    dataflow; leave None to compute it here (a PackedSpikes x already
+    carries it). ``pack_out`` emits the spike map bit-packed.
     """
     if interpret is None:
         interpret = not _on_tpu()
-    m0, k0 = x.shape
+    packed_in = isinstance(x, PackedSpikes)
+    if packed_in:
+        assert (x.block_m, x.block_k) == (block_m, block_k)
+        assert len(x.shape) == 2, "fused_pe takes a 2-D packed operand"
+        m0, k0 = x.shape
+        xi = x.words
+        vld = x.vld_cnt if vld_cnt is None else vld_cnt.astype(jnp.int32)
+        kp = xi.shape[1] * LANE_BITS
+    else:
+        m0, k0 = x.shape
+        xi = pad_to_blocks(x.astype(jnp.int8) if x.dtype == jnp.bool_ else x,
+                           block_m, block_k)
+        vld = vld_or_compute(xi, vld_cnt, block_m, block_k)
+        kp = xi.shape[1]
     n0 = w.shape[1]
-    xi = pad_to_blocks(x.astype(jnp.int8) if x.dtype == jnp.bool_ else x,
-                       block_m, block_k)
     wp = pad_to_blocks(w, block_k, block_n)
-    vld = vld_or_compute(xi, vld_cnt, block_m, block_k)
+    if wp.shape[0] < kp:
+        wp = jnp.pad(wp, ((0, kp - wp.shape[0]), (0, 0)))
 
     def pad_mn(t, dtype=None):
         t = pad_to_blocks(t, block_m, block_n)
@@ -80,38 +106,62 @@ def fused_pe(x: Array, w: Array, *,
     if bias is not None:
         bp = jnp.pad(bias.reshape(1, n0).astype(jnp.float32),
                      ((0, 0), (0, (-n0) % block_n)))
-    rp = pad_mn(residual, jnp.float32) if residual is not None else None
+    packed_res = isinstance(residual, PackedSpikes)
+    if packed_res:
+        assert (residual.block_m, residual.block_k) == (block_m, block_n)
+        assert tuple(residual.shape) == (m0, n0), (residual.shape, m0, n0)
+        rp = residual.words
+    else:
+        rp = pad_mn(residual, jnp.float32) if residual is not None else None
     vp = pad_mn(v_prev, jnp.float32) if v_prev is not None else None
     sp = pad_mn(s_prev, jnp.int8) if s_prev is not None else None
-    qp = None
-    if q is not None:
+    packed_q = isinstance(q, PackedSpikes)
+    if packed_q:
+        assert q.block_m == block_m and q.shape[-2] == m0
+        qp = q.words
+    elif q is not None:
         # pad Q rows to the M grid and channels to the lane width; zero
         # padding never changes a row sum
         qp = pad_to_blocks(q.astype(jnp.int8), block_m, 128)
+    else:
+        qp = None
 
     spikes, v_next, vld_next = fused_pe_pallas(
         xi, wp, vld, bp, rp, vp, sp, qp,
         tau=tau, v_th=v_th, soft_reset=soft_reset, qk_threshold=qk_threshold,
         block_m=block_m, block_n=block_n, block_k=block_k,
-        emit_vld=emit_vld, m_valid=m0, n_valid=n0, interpret=interpret)
-    spikes = spikes[:m0, :n0]
+        emit_vld=emit_vld or pack_out, m_valid=m0, n_valid=n0,
+        packed_in=packed_in, packed_q=packed_q, packed_residual=packed_res,
+        packed_out=pack_out, interpret=interpret)
+    if pack_out:
+        spikes = PackedSpikes(spikes, vld_next, (m0, n0), block_m, block_n)
+    else:
+        spikes = spikes[:m0, :n0]
     if v_next is not None:
         v_next = v_next[:m0, :n0]
     return FusedPEOut(spikes, v_next, vld_next)
 
 
-def fused_pe_layer(spk: Array, w: Array, *,
+def _stack_packed(pss: list[PackedSpikes]) -> PackedSpikes:
+    first = pss[0]
+    return PackedSpikes(jnp.stack([p.words for p in pss]),
+                        jnp.stack([p.vld_cnt for p in pss]),
+                        (len(pss), *first.shape),
+                        first.block_m, first.block_k)
+
+
+def fused_pe_layer(spk: Spikes, w: Array, *,
                    bias: Array | None = None,
-                   residual: Array | None = None,
-                   q: Array | None = None,
+                   residual: Spikes | None = None,
+                   q: Spikes | None = None,
                    vld_cnt: Array | None = None,
                    tau: float = 0.5, v_th: float = 1.0,
                    soft_reset: bool = False, qk_threshold: float = 1.0,
                    block_m: int = 128, block_n: int = 128,
-                   block_k: int = 128,
+                   block_k: int = 128, pack_out: bool = False,
                    interpret: bool | None = None
-                   ) -> tuple[Array, Optional[Array]]:
-    """Multi-timestep fused layer over [T, M, K] inputs.
+                   ) -> tuple[Spikes, Optional[Array]]:
+    """Multi-timestep fused layer over [T, M, K] inputs (dense or packed).
 
     T=1 (the paper's deployed mode) is a single stateless kernel call —
     no membrane state read or written. T>1 scans the stateful kernel over
@@ -119,7 +169,11 @@ def fused_pe_layer(spk: Array, w: Array, *,
     v[0] = 0, s[0] = 0.
 
     ``residual`` / ``q`` / ``vld_cnt`` are per-timestep ([T, ...]) or None.
-    Returns (spikes [T, M, N] int8, vld_next [T, M/bm, N/bn] int32).
+    ``pack_out`` returns the emitted spikes as a [T, ...] PackedSpikes; for
+    T>1 the stateful scan needs the dense per-step spikes for the reset
+    carry, so the pack happens on write-out of each step's EMITTED map.
+    Returns (spikes [T, M, N] int8 | PackedSpikes,
+             vld_next [T, M/bm, N/bn] int32).
     """
     t, m, _ = spk.shape
     n = w.shape[1]
@@ -131,7 +185,9 @@ def fused_pe_layer(spk: Array, w: Array, *,
         out = fused_pe(spk[0], w, residual=None if residual is None
                        else residual[0], q=None if q is None else q[0],
                        vld_cnt=None if vld_cnt is None else vld_cnt[0],
-                       **kw)
+                       pack_out=pack_out, **kw)
+        if pack_out:
+            return _stack_packed([out.spikes]), out.vld_next[None]
         return out.spikes[None], out.vld_next[None]
 
     def step(carry, spk_t, res_t, q_t, vld_t):
@@ -144,6 +200,9 @@ def fused_pe_layer(spk: Array, w: Array, *,
                        v_prev=v, s_prev=s, emit_vld=q_t is None, **kw)
         emitted, vld_next = out.spikes, out.vld_next
         if q_t is not None:
+            if isinstance(q_t, PackedSpikes):
+                from ..packed import unpack_spikes
+                q_t = unpack_spikes(q_t)
             rowsum = q_t.astype(jnp.float32).sum(axis=-1, keepdims=True)
             emitted = emitted * (rowsum >= qk_threshold).astype(emitted.dtype)
             vld_next = vld_or_compute(
@@ -163,4 +222,9 @@ def fused_pe_layer(spk: Array, w: Array, *,
             None if vld_cnt is None else vld_cnt[ti])
         spikes_ts.append(spk_t)
         vld_ts.append(vld_t)
+    if pack_out:
+        from ..packed import pack_spikes
+        packed = [pack_spikes(s, block_m=block_m, block_k=block_n)
+                  for s in spikes_ts]
+        return _stack_packed(packed), jnp.stack(vld_ts)
     return jnp.stack(spikes_ts), jnp.stack(vld_ts)

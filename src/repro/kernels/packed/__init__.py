@@ -1,0 +1,6 @@
+from .ops import pack_spikes, unpack_spikes
+from .packed import pack_spikes_pallas, unpack_spikes_pallas
+from .ref import pack_spikes_ref, unpack_spikes_ref
+
+__all__ = ["pack_spikes", "unpack_spikes", "pack_spikes_pallas",
+           "unpack_spikes_pallas", "pack_spikes_ref", "unpack_spikes_ref"]

@@ -1,0 +1,92 @@
+"""Pallas pack / unpack primitives for the bit-packed spike format.
+
+Event compression (ExSpike, arXiv 2606.20414) applied at TPU block
+granularity: a [M, K] spike map becomes int32 words along K — 32 spikes per
+lane — and the PACK KERNEL emits the block-aligned ``vld_cnt`` map in the
+SAME grid pass, via popcount of the words it just built. That closes the
+metadata hole the dense pipeline had: ``block_count_map_2d`` re-read the
+whole dense tensor from HBM just to count events; here the count falls out
+of the compression pass for free (one read of x, one 1/8-size write, one
+tiny map write).
+
+Bit layout (shared contract with ``core.events`` and the packed operand
+paths of spike_matmul / fused_pe): word j covers columns [j*32, (j+1)*32),
+bit b = column j*32 + b. Shapes must be pre-padded to the (block_m, block_k)
+grid; block_k % 32 == 0 so VMEM tiles land on word boundaries.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...core.events import LANE_BITS, pack_words, unpack_words
+
+Array = jax.Array
+
+
+def _pack_kernel(x_ref, w_ref, cnt_ref):
+    x = x_ref[...]
+    words = pack_words(x)
+    w_ref[...] = words
+    # popcount at pack time: the vld_cnt metadata is a reduction of data
+    # already in VMEM — no second HBM pass ever builds it
+    cnt_ref[0, 0] = jnp.sum(
+        jax.lax.population_count(words), dtype=jnp.int32)
+
+
+def _unpack_kernel(w_ref, o_ref):
+    o_ref[...] = unpack_words(w_ref[...], o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_k", "interpret"))
+def pack_spikes_pallas(x: Array, *, block_m: int = 128, block_k: int = 128,
+                       interpret: bool = False) -> tuple[Array, Array]:
+    """x: [M, K] spikes (any dtype; nonzero == event), block-aligned.
+
+    Returns (words int32 [M, K/32], vld_cnt int32 [M/bm, K/bk]) from ONE
+    grid pass.
+    """
+    m, k = x.shape
+    assert m % block_m == 0 and k % block_k == 0, (x.shape, block_m, block_k)
+    assert block_k % LANE_BITS == 0, block_k
+    grid = (m // block_m, k // block_k)
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m, block_k), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((block_m, block_k // LANE_BITS),
+                         lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k // LANE_BITS), jnp.int32),
+            jax.ShapeDtypeStruct((m // block_m, k // block_k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_k", "dtype",
+                                    "interpret"))
+def unpack_spikes_pallas(words: Array, *, block_m: int = 128,
+                         block_k: int = 128, dtype=jnp.int8,
+                         interpret: bool = False) -> Array:
+    """words: [M, K/32] int32 -> [M, K] dense spikes (0/1)."""
+    m, w = words.shape
+    wpb = block_k // LANE_BITS
+    assert m % block_m == 0 and w % wpb == 0, (words.shape, block_m, block_k)
+    grid = (m // block_m, w // wpb)
+    return pl.pallas_call(
+        _unpack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m, wpb), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_m, block_k), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, w * LANE_BITS), dtype),
+        interpret=interpret,
+    )(words)

@@ -1,0 +1,10 @@
+"""Oracle for the packed spike format: the pure-jnp pack/unpack in
+``core.events`` (kept there so ``core`` has no kernel dependency). Re-exported
+under the mandated kernel-trio names."""
+from __future__ import annotations
+
+from ...core.events import (PackedSpikes, pack_spikes_ref, popcount_block_map,
+                            unpack_spikes_ref)
+
+__all__ = ["PackedSpikes", "pack_spikes_ref", "unpack_spikes_ref",
+           "popcount_block_map"]

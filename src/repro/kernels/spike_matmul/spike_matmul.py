@@ -9,6 +9,10 @@ data-driven outer level is the Pallas grid itself (blocks stream through
 VMEM as operands become resident).
 
   x  : [M, K] int8  spikes (0/1)           — activations
+       or, with ``packed_in``, [M, K/32] int32 bit-packed words (the
+       event-compressed HBM format, ``core.events.PackedSpikes``): the
+       K-tile is unpacked in VMEM right before the MXU, so the 8x-smaller
+       representation is what crosses HBM
   w  : [K, N] bf16/f32 weights
   out: [M, N] f32 = x @ w, accumulated over the K grid axis
 
@@ -24,46 +28,65 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...core.events import LANE_BITS, unpack_words
+
 Array = jax.Array
 
 
-def _kernel(vld_ref, x_ref, w_ref, o_ref):
-    i = pl.program_id(0)
-    k = pl.program_id(2)
+def _make_kernel(packed_in: bool):
+    def kernel(vld_ref, x_ref, w_ref, o_ref):
+        i = pl.program_id(0)
+        k = pl.program_id(2)
 
-    @pl.when(k == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+        @pl.when(k == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
 
-    cnt = vld_ref[i, k]
+        cnt = vld_ref[i, k]
 
-    @pl.when(cnt > 0)                    # event skip: silent block -> no MXU
-    def _accum():
-        x = x_ref[...].astype(jnp.float32)
-        w = w_ref[...].astype(jnp.float32)
-        o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+        @pl.when(cnt > 0)                # event skip: silent block -> no MXU
+        def _accum():
+            if packed_in:                # decompress the K-tile in VMEM
+                x = unpack_words(x_ref[...], jnp.float32)
+            else:
+                x = x_ref[...].astype(jnp.float32)
+            w = w_ref[...].astype(jnp.float32)
+            o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    return kernel
 
 
 @functools.partial(jax.jit,
                    static_argnames=("block_m", "block_n", "block_k",
-                                    "interpret"))
+                                    "packed_in", "interpret"))
 def spike_matmul_pallas(x: Array, w: Array, vld_cnt: Array, *,
                         block_m: int = 128, block_n: int = 128,
-                        block_k: int = 128, interpret: bool = False) -> Array:
-    """x: [M,K] int8; w: [K,N]; vld_cnt: [M/bm, K/bk] int32 block counts."""
-    m, k = x.shape
+                        block_k: int = 128, packed_in: bool = False,
+                        interpret: bool = False) -> Array:
+    """x: [M,K] int8 (or [M,K/32] int32 words with ``packed_in``);
+    w: [K,N]; vld_cnt: [M/bm, K/bk] int32 block counts."""
+    m = x.shape[0]
     k2, n = w.shape
-    assert k == k2 and m % block_m == 0 and k % block_k == 0 and n % block_n == 0
+    k = x.shape[1] * LANE_BITS if packed_in else x.shape[1]
+    assert k == k2 and m % block_m == 0 and k % block_k == 0 \
+        and n % block_n == 0, (x.shape, w.shape, block_m, block_n, block_k)
+    if packed_in:
+        assert x.dtype == jnp.int32 and block_k % LANE_BITS == 0
+        x_spec = pl.BlockSpec((block_m, block_k // LANE_BITS),
+                              lambda i, j, kk, vld: (i, kk))
+    else:
+        x_spec = pl.BlockSpec((block_m, block_k),
+                              lambda i, j, kk, vld: (i, kk))
 
     grid = (m // block_m, n // block_n, k // block_k)
     return pl.pallas_call(
-        _kernel,
+        _make_kernel(packed_in),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[
                 # index maps receive the prefetched scalar ref as a trailing arg
-                pl.BlockSpec((block_m, block_k), lambda i, j, kk, vld: (i, kk)),
+                x_spec,
                 pl.BlockSpec((block_k, block_n), lambda i, j, kk, vld: (kk, j)),
             ],
             out_specs=pl.BlockSpec((block_m, block_n),

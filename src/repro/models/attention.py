@@ -190,9 +190,16 @@ def attn_prefill(p: dict, cfg: ModelConfig, x: Array, positions: Array,
     dh = cfg.resolved_head_dim
     b, s, _ = x.shape
     if cfg.attention_kind == "qk_spiking":
+        empty = jnp.zeros((b, 0, hkv, dh), x.dtype)
+        if cfg.spike_format == "packed":
+            # cache the last token's masked spike map BIT-PACKED — the
+            # engine's per-slot spike state (8x fewer bytes than int8; the
+            # telemetry popcounts it for measured sparsity)
+            out, state = _qk_spiking_apply(p, cfg, x, h, hkv,
+                                           return_spike_state=True)
+            return out, (state, empty)
         out = _qk_spiking_apply(p, cfg, x, h, hkv)
         # QKTA keeps no inter-token state: empty cache entries
-        empty = jnp.zeros((b, 0, hkv, dh), x.dtype)
         return out, (empty, empty)
     q, k, v = _project_qkv(p, cfg, x, positions, h, hkv)
     ke, ve = _expand_kv(k, h), _expand_kv(v, h)
@@ -225,6 +232,10 @@ def attn_decode(p: dict, cfg: ModelConfig, x: Array, pos: Array,
     scale = dh ** -0.5
 
     if cfg.attention_kind == "qk_spiking":
+        if cfg.spike_format == "packed":
+            out, state = _qk_spiking_apply(p, cfg, x, h, hkv,
+                                           return_spike_state=True)
+            return out, (state, cache_v)
         out = _qk_spiking_apply(p, cfg, x, h, hkv)
         return out, (cache_k, cache_v)
 
@@ -291,8 +302,28 @@ def attn_decode(p: dict, cfg: ModelConfig, x: Array, pos: Array,
 
 
 # ----------------------------------------------------- spiking QKTA (paper C4)
+def qk_spike_state_width(cfg: ModelConfig) -> int:
+    """int32 words per cached packed spike-state row: the masked attention
+    map [H*Dh] padded to the 128 lane grid, 32 spikes per word."""
+    d = cfg.n_heads * cfg.resolved_head_dim
+    return (-(-d // 128) * 128) // 32
+
+
+def _packed_token_state(out_last: Array) -> Array:
+    """[B, D] binary spike map -> [B, 1, 1, ceil(D/128)*4] int32 words —
+    the per-token spike state the serving engine caches per slot (packed:
+    8x fewer bytes than int8, and popcount over it IS the measured spike
+    count the engine's telemetry reports)."""
+    from ..core.events import pack_words
+
+    b, d = out_last.shape
+    dp = -(-d // 128) * 128
+    padded = jnp.pad(out_last.astype(jnp.int32), ((0, 0), (0, dp - d)))
+    return pack_words(padded)[:, None, None, :]
+
+
 def _qk_spiking_apply(p: dict, cfg: ModelConfig, x: Array,
-                      h: int, hkv: int) -> Array:
+                      h: int, hkv: int, *, return_spike_state: bool = False):
     """QKFormer token attention on LIF spikes (paper Fig 5, on-the-fly form).
 
     Per head: Q,K spike maps [B,S,h,Dh]; token mask from Q row-sum gates K.
@@ -306,30 +337,69 @@ def _qk_spiking_apply(p: dict, cfg: ModelConfig, x: Array,
     models mask outside); and the output projection consumes the binary
     masked spikes through the event-skipped ``spike_matmul``. Forward-exact
     vs the jnp path; inference only (no surrogate gradient).
+
+    With ``cfg.spike_format == "packed"`` the masked spike map crosses HBM
+    bit-packed (PackedSpikes): single-head models keep the whole chain
+    packed (the Q operand's row sums are in-kernel popcounts and the K
+    pass's output leaves packed); multi-head models pack the masked map
+    before the event-skipped output projection. Bit-identical spikes.
+
+    ``return_spike_state`` additionally returns the LAST token's masked
+    spike map packed ([B, 1, 1, W] int32) — the state the serving engine
+    caches per slot.
     """
     b, s, _ = x.shape
     dh = cfg.resolved_head_dim
+    packed = cfg.spike_format == "packed"
+    state = None
     if cfg.use_event_kernels:
+        from ..kernels.packed import pack_spikes
         from ..kernels.spike_matmul import spike_matmul
         from .layers import fused_dense_lif
 
-        q = fused_dense_lif(p["wq"], x, cfg.lif).reshape(b, s, h, dh)
-        if h == 1 and hkv == 1:
-            out = fused_dense_lif(p["wk"], x, cfg.lif,
-                                  q=q.reshape(b, s, dh),
-                                  qk_threshold=cfg.lif.v_th)
-            out = out.reshape(b, s, h, dh)
+        if packed and h == 1 and hkv == 1:
+            # fully event-compressed Fig 5 chain: Q packed, K pass masks on
+            # write-back and emits packed, wo consumes packed — the masked
+            # spike map never exists dense
+            q_ps = fused_dense_lif(p["wq"], x, cfg.lif, pack_out=True)
+            out_ps = fused_dense_lif(p["wk"], x, cfg.lif, q=q_ps,
+                                     qk_threshold=cfg.lif.v_th,
+                                     pack_out=True)
+            proj = spike_matmul(out_ps, p["wo"]["w"]).astype(x.dtype)
+            if return_spike_state:
+                dw = out_ps.words.shape[-1]
+                state = out_ps.words[:b * s].reshape(b, s, dw)[
+                    :, -1][:, None, None, :]
         else:
-            k = fused_dense_lif(p["wk"], x, cfg.lif).reshape(b, s, hkv, dh)
-            k = _expand_kv(k, h)
-            mask = (q.astype(jnp.float32).sum(axis=-1, keepdims=True)
-                    >= cfg.lif.v_th)
-            out = k * mask.astype(k.dtype)
-        flat = out.reshape(b * s, h * dh)
-        proj = spike_matmul(flat, p["wo"]["w"]).astype(x.dtype)
+            q = fused_dense_lif(p["wq"], x, cfg.lif).reshape(b, s, h, dh)
+            if h == 1 and hkv == 1:
+                out = fused_dense_lif(p["wk"], x, cfg.lif,
+                                      q=q.reshape(b, s, dh),
+                                      qk_threshold=cfg.lif.v_th)
+                out = out.reshape(b, s, h, dh)
+            else:
+                k = fused_dense_lif(p["wk"], x, cfg.lif
+                                    ).reshape(b, s, hkv, dh)
+                k = _expand_kv(k, h)
+                mask = (q.astype(jnp.float32).sum(axis=-1, keepdims=True)
+                        >= cfg.lif.v_th)
+                out = k * mask.astype(k.dtype)
+            flat = out.reshape(b * s, h * dh)
+            if packed:              # event-compressed HBM hop into wo
+                ps = pack_spikes(flat.astype(jnp.int8))
+                proj = spike_matmul(ps, p["wo"]["w"]).astype(x.dtype)
+                if return_spike_state:
+                    dw = ps.words.shape[-1]
+                    state = ps.words[:b * s].reshape(b, s, dw)[
+                        :, -1][:, None, None, :]
+            else:
+                proj = spike_matmul(flat, p["wo"]["w"]).astype(x.dtype)
+                if return_spike_state:
+                    state = _packed_token_state(flat.reshape(b, s, -1)[:, -1])
         if "b" in p["wo"]:
             proj = proj + p["wo"]["b"].astype(proj.dtype)
-        return proj.reshape(b, s, -1)
+        proj = proj.reshape(b, s, -1)
+        return (proj, state) if return_spike_state else proj
     q_cur = dense_apply(p["wq"], x).reshape(b, s, h, dh)
     k_cur = dense_apply(p["wk"], x).reshape(b, s, hkv, dh)
     q = maybe_spike(q_cur, True, cfg.lif)
@@ -338,4 +408,8 @@ def _qk_spiking_apply(p: dict, cfg: ModelConfig, x: Array,
     mask = qk_token_mask(q, mode="threshold", threshold=cfg.lif.v_th,
                          surrogate=cfg.lif.surrogate, alpha=cfg.lif.alpha)
     out = mask * k                      # [B,S,H,Dh] — the QK token mask (4)
-    return dense_apply(p["wo"], out.reshape(b, s, h * dh))
+    proj = dense_apply(p["wo"], out.reshape(b, s, h * dh))
+    if return_spike_state:
+        state = _packed_token_state(out.reshape(b, s, h * dh)[:, -1])
+        return proj, state
+    return proj

@@ -113,21 +113,25 @@ def maybe_spike(x: Array, spiking: bool, lif: LIFConfig) -> Array:
 
 
 def fused_dense_lif(p: dict, x: Array, lif: LIFConfig, *,
-                    q: Optional[Array] = None,
-                    qk_threshold: float = 1.0) -> Array:
+                    q=None, qk_threshold: float = 1.0,
+                    pack_out: bool = False):
     """dense(x) -> LIF spikes as ONE fused PE pass (deployed inference).
 
     The LM analogue of NEURAL's PE dataflow: the projection's f32
     pre-activation never round-trips HBM — the LIF threshold fires
     in-register and int8 spikes are written back (optionally gated by the
-    QK token mask from ``q``'s row sums, the Fig 5 write-back fusion).
+    QK token mask from ``q``'s row sums, the Fig 5 write-back fusion;
+    ``q`` may itself be a ``PackedSpikes``, whose row sums are popcounts).
     ``x`` is the dense residual stream, so no metadata pass is spent on it
     (a ones map: dense blocks are never silent). Forward-exact vs
     ``maybe_spike(dense_apply(p, x), True, lif)``; no surrogate gradient —
     inference only.
 
-    x: [..., Din] -> int8 spikes [..., Dout].
+    x: [..., Din] -> int8 spikes [..., Dout]; with ``pack_out`` the spikes
+    leave bit-packed as a 2-D ``PackedSpikes`` over the flattened
+    [tokens, Dout] layout (the event-compressed HBM format).
     """
+    from ..core.events import PackedSpikes
     from ..kernels.fused_pe import fused_pe
 
     shape = x.shape
@@ -136,11 +140,14 @@ def fused_dense_lif(p: dict, x: Array, lif: LIFConfig, *,
     bm, bk = 128, 128
     gm, gk = -(-m // bm), -(-k // bk)
     dense_vld = jnp.ones((gm, gk), jnp.int32)
+    if q is not None and not isinstance(q, PackedSpikes):
+        q = q.reshape(m, -1)
     out = fused_pe(flat, p["w"], bias=p.get("b"), vld_cnt=dense_vld,
-                   q=None if q is None else q.reshape(m, -1),
-                   qk_threshold=qk_threshold,
+                   q=q, qk_threshold=qk_threshold,
                    tau=lif.tau, v_th=lif.v_th, soft_reset=lif.soft_reset,
-                   emit_vld=False)
+                   emit_vld=pack_out, pack_out=pack_out)
+    if pack_out:
+        return out.spikes
     return out.spikes.reshape(*shape[:-1], p["w"].shape[1])
 
 

@@ -169,7 +169,10 @@ def _pad_kv_layers(layers: Any, max_len: int) -> Any:
     def pad(path, leaf):
         ps = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                       for k in path)
-        if "ssm" in ps or "conv" in ps or leaf.ndim < 4:
+        # int32 leaves are packed qk_spiking spike-state words: one row per
+        # token by construction (O(1) in sequence length) — never padded
+        if "ssm" in ps or "conv" in ps or leaf.ndim < 4 \
+                or leaf.dtype == jnp.int32:
             return leaf
         s = leaf.shape[-3]
         if s >= max_len or s == 0:
@@ -463,8 +466,17 @@ class LM:
 
         def attn_entry(lead):
             if cfg.attention_kind == "qk_spiking":
-                shp = (lead, batch_size, 0, hkv, dh)
-                return (jnp.zeros(shp, kv_dtype), jnp.zeros(shp, kv_dtype))
+                empty = jnp.zeros((lead, batch_size, 0, hkv, dh), kv_dtype)
+                if cfg.spike_format == "packed":
+                    # per-slot spike state, BIT-PACKED (32 spikes/int32
+                    # word): one row of masked-attention spikes per layer —
+                    # O(1) in sequence length, 8x smaller than int8
+                    from .attention import qk_spike_state_width
+                    words = jnp.zeros(
+                        (lead, batch_size, 1, 1, qk_spike_state_width(cfg)),
+                        jnp.int32)
+                    return (words, empty)
+                return (empty, empty)
             shp = (lead, batch_size, max_len, hkv, dh)
             return (jnp.zeros(shp, kv_dtype), jnp.zeros(shp, kv_dtype))
 

@@ -81,6 +81,52 @@ def conv_weights_as_matmul(w: Array) -> Array:
     return w.reshape(kh * kw * cin, cout)
 
 
+# ------------------------------------------------- packed-spike conv support
+#
+# ``im2col`` is channel-preserving per (i, j) tap: each concatenated slice
+# carries a pixel's FULL channel vector. So when the channel axis is padded
+# to a multiple of 32 and bit-packed (core.events: 32 spikes per int32
+# lane), patch extraction works on the WORD tensor unchanged — the words of
+# im2col(packed) ARE the packing of im2col(dense). Convolutions over spike
+# maps therefore never need the dense representation: patches, pooling, and
+# the matmul operand all stay event-compressed.
+
+def im2col_packed(words: Array, kh: int, kw: int, stride: int = 1,
+                  padding: str = "SAME") -> Array:
+    """Patch extraction on channel-packed spike words.
+
+    words: [B, H, W, Cp/32] int32 (Cp = padded channels). Returns
+    [B, Ho, Wo, kh*kw*Cp/32] int32 — bit-for-bit the packed form of
+    ``im2col`` on the dense map, because zero words ARE zero spikes (SAME
+    padding stays silent).
+    """
+    assert words.dtype == jnp.int32, words.dtype
+    return im2col(words, kh, kw, stride, padding)
+
+
+def conv_weights_as_matmul_packed(w: Array, c_padded: int) -> Array:
+    """[kh, kw, Cin, Cout] -> [kh*kw*c_padded, Cout] with zero rows for the
+    pad channels interleaved per (i, j) tap, matching ``im2col_packed``'s
+    feature ordering (the pad lanes carry zero spikes AND zero weights, so
+    the packed matmul is exact)."""
+    kh, kw, cin, cout = w.shape
+    assert c_padded >= cin, (c_padded, cin)
+    if c_padded != cin:
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, c_padded - cin), (0, 0)))
+    return w.reshape(kh * kw * c_padded, cout)
+
+
+def max_pool_packed(words: Array, window: int = 2,
+                    stride: Optional[int] = None) -> Array:
+    """Max-pool of BINARY spike maps == per-window OR == bitwise OR of the
+    packed words: the pooled map never exists dense."""
+    assert words.dtype == jnp.int32, words.dtype
+    stride = stride or window
+    return jax.lax.reduce_window(
+        words, jnp.int32(0), jax.lax.bitwise_or,
+        (1, window, window, 1), (1, stride, stride, 1), "VALID")
+
+
 # ---------------------------------------------------------------- batch norm
 def bn_init(c: int, dtype=jnp.float32) -> tuple[dict, dict]:
     params = {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}

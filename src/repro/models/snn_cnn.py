@@ -48,6 +48,12 @@ class SNNCNNConfig:
     # route binary-activation matmuls through the event-driven Pallas
     # kernel (C3): deployed-inference path only (apply_fused)
     use_event_kernels: bool = False
+    # HBM format for inter-layer spike tensors on the event path:
+    # "packed" ships every spike map bit-packed (32/int32 lane + popcount
+    # vld_cnt, core.events.PackedSpikes — ~8x fewer spike bytes, bit-
+    # identical spikes); "dense" keeps the int8 maps of the pre-compression
+    # pipeline
+    spike_format: str = "packed"
 
 
 # --------------------------------------------------------------- arch tables
@@ -340,6 +346,151 @@ def _fused_conv_lif(p: dict, x_spk: Array, stride: int, cfg: SNNCNNConfig,
     return spikes.reshape(t, b, ho, wo, cout).astype(cfg.dtype), vld_next
 
 
+def _apply_fused_packed(fused_params: list, images: Array,
+                        cfg: SNNCNNConfig) -> tuple[Array, dict]:
+    """Deployed inference with the event kernels AND event compression:
+    every inter-layer spike tensor lives in HBM bit-packed (PackedSpikes —
+    32 spikes per int32 lane + the popcount-derived vld_cnt map), and no
+    unpacked spike tensor is ever materialized between layers:
+
+      * fused convs consume ``im2col_packed`` patches of the previous
+        layer's WORDS (patch extraction is channel-preserving, so the word
+        tensor im2cols unchanged) against channel-padded weights, and emit
+        their spike output packed (``pack_out``);
+      * max-pools are bitwise ORs of the words (pool of binary == OR);
+      * the QKFormer block chains five packed-in/packed-out fused passes,
+        with the Q operand's row sums taken by popcount in-kernel;
+      * metadata boundaries (im2col, pooling) rebuild vld_cnt by popcount
+        over the WORDS — 1/32nd of the bytes a dense re-read would touch;
+      * only the W2TTFS head unpacks (it needs dense window counts).
+
+    ``aux["spike_hbm_packed_bytes"]`` / ``aux["spike_hbm_dense_bytes"]``
+    account every spike tensor shipped between kernels in each format.
+    """
+    from ..core.events import packed_from_words
+    from ..kernels.fused_pe import fused_pe_layer
+    from ..kernels.packed import pack_spikes, unpack_spikes
+    from ..kernels.spike_matmul import spike_matmul
+
+    layers = build_layers(cfg)
+    t = cfg.timesteps
+    x = jnp.broadcast_to(images[None], (t, *images.shape)).astype(cfg.dtype)
+    aux = {"spikes": {}, "vld_reused": 0,
+           "spike_hbm_packed_bytes": 0, "spike_hbm_dense_bytes": 0}
+    lifkw = dict(tau=cfg.lif.tau, v_th=cfg.lif.v_th,
+                 soft_reset=cfg.lif.soft_reset)
+    xps = None                  # PackedSpikes [T, B*H*W, C] once spiking
+    spatial = None              # (B, H, W, C)
+    li = 0
+
+    def account(ps):
+        aux["spike_hbm_packed_bytes"] += ps.packed_bytes
+        aux["spike_hbm_dense_bytes"] += ps.dense_bytes
+        return ps
+
+    def spatial_words(ps, sp):
+        b, h, w_, _ = sp
+        cw = ps.words.shape[-1]
+        return ps.words[:, :b * h * w_].reshape(t * b, h, w_, cw)
+
+    def packed_patches(ps, sp, kh, kw, stride):
+        """im2col on the word tensor -> kernel-ready packed patch matrix."""
+        b = sp[0]
+        pat = nn.im2col_packed(spatial_words(ps, sp), kh, kw, stride)
+        _, ho, wo, kww = pat.shape
+        pat3 = pat.reshape(t, b * ho * wo, kww)
+        return packed_from_words(pat3, (t, b * ho * wo, kww * 32)), (ho, wo)
+
+    def conv_packed(pc, ps, sp, stride, residual=None):
+        """conv(packed spikes) + bias + LIF, packed in AND out."""
+        kh, kw = pc["w"].shape[:2]
+        cw = ps.words.shape[-1]
+        ps_pat, (ho, wo) = packed_patches(ps, sp, kh, kw, stride)
+        w2d = nn.conv_weights_as_matmul_packed(pc["w"], cw * 32)
+        spikes, _ = fused_pe_layer(ps_pat, w2d, bias=pc.get("b"),
+                                   residual=residual, pack_out=True, **lifkw)
+        return account(spikes), (sp[0], ho, wo, w2d.shape[1])
+
+    def conv_current_packed(pc, ps, sp, stride):
+        """Shortcut conv: packed patches -> event matmul -> f32 current."""
+        kh, kw = pc["w"].shape[:2]
+        cw = ps.words.shape[-1]
+        ps_pat, _ = packed_patches(ps, sp, kh, kw, stride)
+        w2d = nn.conv_weights_as_matmul_packed(pc["w"], cw * 32)
+        cur = jnp.stack([spike_matmul(ps_pat[ti], w2d) for ti in range(t)])
+        return cur + pc["b"].astype(jnp.float32)
+
+    for p, layer in zip(fused_params, layers):
+        kind = layer[0]
+        if kind == "conv_bn_lif":
+            stride = layer[3]
+            if xps is not None:
+                xps, spatial = conv_packed(p["conv"], xps, spatial, stride)
+            else:
+                # analog input: dense conv + LIF, then enter the packed
+                # domain (the first binary map is the first compressible one)
+                cur = _per_step(lambda z: nn.conv_apply(p["conv"], z, stride),
+                                x)
+                spk = lif_multistep(cur, cfg.lif)
+                b, h, w_, c = spk.shape[1:]
+                xps = account(pack_spikes(
+                    spk.reshape(t, b * h * w_, c).astype(jnp.int8)))
+                spatial = (b, h, w_, c)
+        elif kind == "maxpool":
+            b, h, w_, c = spatial
+            pooled = nn.max_pool_packed(spatial_words(xps, spatial))
+            h2, w2 = pooled.shape[1], pooled.shape[2]
+            xps = account(packed_from_words(
+                pooled.reshape(t, b * h2 * w2, pooled.shape[3]),
+                (t, b * h2 * w2, c)))
+            spatial = (b, h2, w2, c)
+        elif kind == "resblock":
+            stride = layer[3]
+            s1, sp1 = conv_packed(p["conv1"], xps, spatial, stride)
+            if "conv_sc" in p:
+                sc = conv_current_packed(p["conv_sc"], xps, spatial, stride)
+            else:
+                sc = xps            # identity: packed binary shortcut
+            xps, spatial = conv_packed(p["conv2"], s1, sp1, 1, residual=sc)
+        elif kind == "qkformer":
+            # five packed-in/packed-out fused passes; every pass consumes
+            # the vld map its producer emitted in-kernel (and the packed Q
+            # operand's row sums are popcounts — no unpack anywhere)
+            tok = xps
+            q3, _ = fused_pe_layer(tok, p["q"]["w"], bias=p["q"]["b"],
+                                   pack_out=True, **lifkw)
+            attn3, _ = fused_pe_layer(tok, p["k"]["w"], bias=p["k"]["b"],
+                                      q=q3, qk_threshold=1.0,
+                                      pack_out=True, **lifkw)
+            y3, _ = fused_pe_layer(attn3, p["proj"]["w"], bias=p["proj"]["b"],
+                                   residual=tok, pack_out=True, **lifkw)
+            m13, _ = fused_pe_layer(y3, p["mlp1"]["w"], bias=p["mlp1"]["b"],
+                                    pack_out=True, **lifkw)
+            y23, _ = fused_pe_layer(m13, p["mlp2"]["w"], bias=p["mlp2"]["b"],
+                                    residual=y3, pack_out=True, **lifkw)
+            for ps in (q3, attn3, y3, m13, y23):
+                account(ps)
+            aux["vld_reused"] += 5
+            xps = y23
+        elif kind == "head":
+            _, cin, size = layer
+            b, h, w_, c = spatial
+            xd = unpack_spikes(xps).astype(cfg.dtype)
+            xd = xd.reshape(t, b, h, w_, c)
+            logits = jnp.mean(jax.vmap(
+                lambda st: w2ttfs_classifier(st, p["fc"]["w"], p["fc"]["b"],
+                                             size)
+                if cfg.head == "w2ttfs" else
+                avgpool_classifier(st, p["fc"]["w"], p["fc"]["b"], size))(xd),
+                axis=0)
+        if kind != "head":
+            aux["spikes"][f"layer{li}"] = xps.vld_cnt.sum().astype(
+                jnp.float32)
+        li += 1
+    aux["total_spikes"] = sum(aux["spikes"].values())
+    return logits, aux
+
+
 def apply_fused(fused_params: list, images: Array, cfg: SNNCNNConfig) -> tuple[Array, dict]:
     """Inference with the fused+quantized (deployment) model — conv+bias+LIF,
     no BN. This is the computation NEURAL's EPA executes.
@@ -352,7 +503,13 @@ def apply_fused(fused_params: list, images: Array, cfg: SNNCNNConfig) -> tuple[A
     [tokens, channels] layout is preserved (resblock -> QKFormer -> QKFormer
     chains); im2col and pooling reshuffle the layout, so those boundaries
     recompute the map. ``aux["vld_reused"]`` counts the chained hand-offs.
+
+    With ``cfg.spike_format == "packed"`` (the default) the event path also
+    ships every inter-layer spike tensor bit-packed — see
+    ``_apply_fused_packed``; ``spike_format="dense"`` keeps int8 maps.
     """
+    if cfg.use_event_kernels and cfg.spike_format == "packed":
+        return _apply_fused_packed(fused_params, images, cfg)
     layers = build_layers(cfg)
     t = cfg.timesteps
     ev = cfg.use_event_kernels

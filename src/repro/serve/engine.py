@@ -58,6 +58,15 @@ class EngineConfig:
     # kernels (forward-exact; serving is inference, so the missing surrogate
     # gradient is irrelevant here)
     use_event_kernels: bool = False
+    # HBM format for the qk_spiking path's spike tensors: "packed" ships the
+    # masked attention spike maps bit-packed (32 spikes per int32 lane) and
+    # caches each slot's spike state packed — the engine then measures spike
+    # sparsity and packed bytes in flight every decode tick (see ``stats``)
+    spike_format: str = "dense"
+    # measure spike telemetry every Nth decode tick (0 disables): each
+    # measurement syncs the packed state pool to host, so latency-sensitive
+    # deployments should sample sparsely
+    spike_stats_every: int = 1
 
 
 class Engine:
@@ -65,21 +74,31 @@ class Engine:
         self.model = model
         self.params = params
         self.cfg = cfg
-        if cfg.use_event_kernels and \
-                getattr(model.cfg, "attention_kind", "") == "qk_spiking":
+        spiking = getattr(model.cfg, "attention_kind", "") == "qk_spiking"
+        repl = {}
+        if spiking and cfg.use_event_kernels:
+            repl["use_event_kernels"] = True
+        if spiking and cfg.spike_format != "dense":
+            repl["spike_format"] = cfg.spike_format
+        if repl:
             # run THIS engine's prefills/decodes on the fused event-kernel
-            # dataflow without mutating the caller's model (the flag is
+            # dataflow without mutating the caller's model (the flags are
             # inference-only; a shared model may still be used for training)
             self.model = type(model)(
-                dataclasses.replace(model.cfg, use_event_kernels=True))
+                dataclasses.replace(model.cfg, **repl))
         self.queue: deque[Request] = deque()
         self.active: dict[int, Request] = {}
         self.finished: list[Request] = []
         self._rng = jax.random.PRNGKey(rng_seed)
         self._uid = itertools.count()
+        # per-decode-tick spike telemetry (packed qk_spiking mode only)
+        self._track_spikes = (spiking and cfg.spike_format == "packed"
+                              and cfg.spike_stats_every > 0)
+        self._spike_log: list[dict] = []
+        self._tick = 0
 
         # slot-pool cache; per-slot valid lengths tracked host-side
-        self.cache = model.init_cache(cfg.max_slots, cfg.max_len)
+        self.cache = self.model.init_cache(cfg.max_slots, cfg.max_len)
         self.cache["len"] = jnp.zeros((), jnp.int32)  # engine manages length
         self.slot_len = np.zeros(cfg.max_slots, np.int64)
         self.free_slots = list(range(cfg.max_slots))
@@ -177,6 +196,9 @@ class Engine:
         self.cache["len"] = jnp.asarray(self.slot_len, jnp.int32)
         logits, self.cache = self._decode(self.params, jnp.asarray(toks),
                                           self.cache)
+        self._tick += 1
+        if self._track_spikes and self._tick % self.cfg.spike_stats_every == 0:
+            self._record_spike_step(sorted(self.active.keys()))
         done_slots = []
         for slot, req in list(self.active.items()):
             tok = self._sample(logits[slot], req)
@@ -202,6 +224,31 @@ class Engine:
                 break
         return self.finished
 
+    def _record_spike_step(self, live_slots: list) -> None:
+        """Measure one decode tick's spike activity straight off the PACKED
+        per-slot spike state in the cache pool: popcount of the int32 words
+        = spike count (the pad lanes are zero), words bytes = what actually
+        crossed HBM for spike state this tick."""
+        if not live_slots:
+            return
+        n_units = (self.model.cfg.n_heads *
+                   self.model.cfg.resolved_head_dim)
+        spikes = packed_b = units = 0
+        for leaf in jax.tree_util.tree_leaves(self.cache["layers"]):
+            if leaf.dtype != jnp.int32 or leaf.ndim != 5:
+                continue                    # only the packed word pools
+            sel = np.asarray(leaf)[:, live_slots]
+            spikes += int(np.unpackbits(
+                np.ascontiguousarray(sel).view(np.uint8)).sum())
+            packed_b += sel.size * 4
+            units += sel.shape[0] * len(live_slots) * n_units
+        if units:
+            self._spike_log.append({
+                "live": len(live_slots),
+                "spike_rate": spikes / units,
+                "packed_bytes": packed_b,
+                "dense_bytes": units})        # the int8 maps it replaces
+
     def stats(self) -> dict:
         if not self.finished:
             return {}
@@ -210,8 +257,23 @@ class Engine:
         toks = sum(len(r.out) for r in self.finished)
         span = max(r.finished_t for r in self.finished) - \
             min(r.enqueued_t for r in self.finished)
-        return {"n": len(self.finished),
-                "ttft_mean_s": float(np.mean(ttft)),
-                "latency_mean_s": float(np.mean(lat)),
-                "tokens": toks,
-                "tok_per_s": toks / max(span, 1e-9)}
+        out = {"n": len(self.finished),
+               "ttft_mean_s": float(np.mean(ttft)),
+               "latency_mean_s": float(np.mean(lat)),
+               "tokens": toks,
+               "tok_per_s": toks / max(span, 1e-9),
+               "queue_depth": len(self.queue),
+               "active": len(self.active),
+               "spike_format": self.cfg.spike_format}
+        if self._spike_log:
+            rate = float(np.mean([e["spike_rate"] for e in self._spike_log]))
+            pb = float(np.mean([e["packed_bytes"] for e in self._spike_log]))
+            db = float(np.mean([e["dense_bytes"] for e in self._spike_log]))
+            out.update({
+                "decode_ticks_measured": len(self._spike_log),
+                "spike_rate_mean": rate,
+                "spike_sparsity_mean": 1.0 - rate,
+                "packed_spike_bytes_per_tick_mean": pb,
+                "dense_spike_bytes_per_tick_mean": db,
+                "spike_state_hbm_reduction": db / max(pb, 1e-9)})
+        return out
