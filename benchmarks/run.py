@@ -2,6 +2,7 @@
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   BENCH_KD_STEPS=40 ... python -m benchmarks.run     # quick KD budget
+  python -m benchmarks.run --sections kernels,serve  # subset (CI artifacts)
 
 Writes a machine-readable run summary (section status + wall time) to
 ``BENCH_run.json`` at the REPO ROOT regardless of CWD — like every
@@ -9,6 +10,7 @@ Writes a machine-readable run summary (section status + wall time) to
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -17,25 +19,39 @@ import traceback
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sections", default="",
+                    help="comma-separated section keys to run "
+                         "(kd,resources,spikes,efficiency,timestep,"
+                         "kernels,serve); empty = all")
+    args = ap.parse_args()
+
     from benchmarks.common import artifact_path
     from benchmarks import (fig8_kd_accuracy, kernel_bench, serve_throughput,
                             table1_resources, table2_spikes,
                             table3_efficiency, timestep_ablation)
     sections = [
-        ("Fig 8 — KD pipeline accuracy (KDT/F&Q/KD-QAT/W2TTFS)",
+        ("kd", "Fig 8 — KD pipeline accuracy (KDT/F&Q/KD-QAT/W2TTFS)",
          fig8_kd_accuracy.main),
-        ("Table I — per-module resources", table1_resources.main),
-        ("Table II — ResNet-11 vs QKFResNet-11 spikes/latency/energy",
+        ("resources", "Table I — per-module resources", table1_resources.main),
+        ("spikes", "Table II — ResNet-11 vs QKFResNet-11 spikes/latency/energy",
          table2_spikes.main),
-        ("Table III — synaptic-op efficiency (GSOPS/W model)",
+        ("efficiency", "Table III — synaptic-op efficiency (GSOPS/W model)",
          table3_efficiency.main),
-        ("Timestep ablation — single- vs multi-timestep execution",
+        ("timestep", "Timestep ablation — single- vs multi-timestep execution",
          timestep_ablation.main),
-        ("Kernel bench — Pallas kernels roofline + oracle timing",
+        ("kernels", "Kernel bench — Pallas kernels roofline + oracle timing",
          kernel_bench.main),
-        ("Serving throughput — continuous batching + QKFormer (C4) mode",
-         serve_throughput.main),
+        ("serve", "Serving throughput — continuous batching + elastic-FIFO "
+         "chunked prefill + QKFormer (C4) mode", serve_throughput.main),
     ]
+    if args.sections:
+        keys = {k.strip() for k in args.sections.split(",") if k.strip()}
+        unknown = keys - {k for k, _, _ in sections}
+        if unknown:
+            sys.exit(f"unknown --sections keys: {sorted(unknown)}")
+        sections = [s for s in sections if s[0] in keys]
+    sections = [(title, fn) for _, title, fn in sections]
     failed = []
     section_log = []
     for title, fn in sections:

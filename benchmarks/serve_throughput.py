@@ -1,28 +1,44 @@
-"""Serving-engine throughput across model families (reduced configs, CPU).
+"""Serving-engine throughput + elastic-FIFO latency across model families
+(reduced configs, CPU).
 
-Not a paper table — a framework benchmark: continuous batching vs
-sequential serving, and the paper-C4 (QKFormer) serving mode's cache-free
-decode, measured through the real engine. CPU wall-times are only
-meaningful RELATIVE to each other on this host.
+Not a paper table — a framework benchmark, two parts:
+
+1. throughput: continuous batching vs sequential serving, and the paper-C4
+   (QKFormer) serving mode's cache-free decode, measured through the real
+   engine.
+
+2. adversarial head-of-line trace: live decode slots + a burst of LONG
+   prompts arriving mid-stream. The blocking engine pays each whole prefill
+   between two decode ticks (exactly the stall the paper's elastic FIFOs
+   decouple), so its p99 engine-tick latency explodes; the chunked-prefill
+   engine bounds per-tick prefill work at one chunk and must hold p99
+   within 2x of a no-long-prompt baseline. Results land in
+   ``BENCH_serve.json`` at the repo root.
+
+CPU wall-times are only meaningful RELATIVE to each other on this host.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import numpy as np
 
+from benchmarks.common import artifact_path
 from repro.configs import build_model, get_config, reduced
 from repro.serve import Engine, EngineConfig
 
 
 def run_engine(arch: str, slots: int, n_req: int = 8, max_new: int = 8,
-               spike_format: str = "dense", **overrides) -> dict:
+               spike_format: str = "dense", prefill_chunk: int = 0,
+               **overrides) -> dict:
     cfg = reduced(get_config(arch), **overrides)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     eng = Engine(model, params, EngineConfig(max_slots=slots, max_len=64,
                                              prefill_pad=16,
+                                             prefill_chunk=prefill_chunk,
                                              spike_format=spike_format))
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
@@ -34,6 +50,90 @@ def run_engine(arch: str, slots: int, n_req: int = 8, max_new: int = 8,
     st = eng.stats()
     return {"arch": arch, "slots": slots, "tok_s": st["tokens"] / wall,
             "ttft_s": st["ttft_mean_s"], "stats": st}
+
+
+# ----------------------------------------------------- adversarial p99 trace
+# the trace model is bigger than the smoke-test ``reduced`` (d_model 256, 4
+# layers): at d_model 64 a whole 512-token prefill costs less than one tick
+# of dispatch overhead, so there is no head-of-line stall to measure
+ADV_OVERRIDES = dict(d_model=256, d_ff=1024, n_layers=4,
+                     n_heads=8, n_kv_heads=4, head_dim=32)
+LONG_LEN = 512          # adversarial prompt length (64 chunks of 8)
+SHORT_LEN = 8
+CHUNK = 8
+PREFILL_PAD = 16
+MAX_LEN = 640
+
+
+def _trace(model, params, *, prefill_chunk: int, long_prompts: int,
+           vocab: int, max_new_short: int = 60) -> dict:
+    """Three short decode-heavy requests go live; after a few ticks a burst
+    of long prompts arrives. Engine-TICK wall time (decode + whatever
+    prefill work the tick absorbs) is the latency a live stream observes."""
+    eng = Engine(model, params,
+                 EngineConfig(max_slots=4, max_len=MAX_LEN,
+                              prefill_pad=PREFILL_PAD,
+                              prefill_chunk=prefill_chunk))
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        eng.submit(rng.integers(0, vocab, SHORT_LEN), max_new=max_new_short)
+    tick_wall = []
+    for i in range(6):                       # streams go live
+        t0 = time.perf_counter()
+        eng.step()
+        tick_wall.append(time.perf_counter() - t0)
+    for _ in range(long_prompts):            # adversarial arrivals
+        eng.submit(rng.integers(0, vocab, LONG_LEN), max_new=4)
+    while True:
+        t0 = time.perf_counter()
+        eng.step()
+        tick_wall.append(time.perf_counter() - t0)
+        if not eng.pending():
+            break
+    tw = np.asarray(tick_wall)
+    st = eng.stats()
+    return {"p50_ms": float(np.percentile(tw, 50) * 1e3),
+            "p99_ms": float(np.percentile(tw, 99) * 1e3),
+            "max_ms": float(tw.max() * 1e3),
+            "ticks": len(tw),
+            "decode_tick_p99_ms": st.get("decode_tick_p99_s", 0.0) * 1e3,
+            "prefill_fifo_hwm": st.get("prefill_fifo_hwm", 0),
+            "outputs": sorted(tuple(r.out) for r in eng.finished)}
+
+
+def adversarial_p99(arch: str = "qwen3-1.7b") -> dict:
+    cfg = reduced(get_config(arch), **ADV_OVERRIDES)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # warm every compiled shape (both modes share the engine jit cache), so
+    # the measured trace sees steady-state latency, not XLA compiles
+    for pc in (0, CHUNK):
+        _trace(model, params, prefill_chunk=pc, long_prompts=1,
+               vocab=cfg.vocab_size, max_new_short=6)
+    baseline = _trace(model, params, prefill_chunk=0, long_prompts=0,
+                      vocab=cfg.vocab_size)
+    blocking = _trace(model, params, prefill_chunk=0, long_prompts=2,
+                      vocab=cfg.vocab_size)
+    chunked = _trace(model, params, prefill_chunk=CHUNK, long_prompts=2,
+                     vocab=cfg.vocab_size)
+    # bit-identical serving is part of the contract, not just latency:
+    # strict equality of the sorted per-request output lists (a subset
+    # check would let a dropped or duplicated request pass silently)
+    assert chunked["outputs"] == blocking["outputs"], \
+        "chunked outputs diverged from blocking"
+    rows = {"baseline_no_long_prompts": baseline,
+            "blocking_prefill": blocking,
+            "chunked_prefill": chunked}
+    for r in rows.values():
+        r.pop("outputs")
+    rows["p99_ratio_blocking_vs_baseline"] = (
+        blocking["p99_ms"] / max(baseline["p99_ms"], 1e-9))
+    rows["p99_ratio_chunked_vs_baseline"] = (
+        chunked["p99_ms"] / max(baseline["p99_ms"], 1e-9))
+    rows["arch"] = arch
+    rows["long_len"] = LONG_LEN
+    rows["prefill_chunk"] = CHUNK
+    return rows
 
 
 def main() -> None:
@@ -59,6 +159,22 @@ def main() -> None:
           f"{st['spike_sparsity_mean']:.3f}, packed_bytes/tick="
           f"{st['packed_spike_bytes_per_tick_mean']:.0f}, spike-state HBM "
           f"reduction={st['spike_state_hbm_reduction']:.1f}x")
+
+    print("\n# adversarial long-prompt trace: engine-tick latency (ms)")
+    adv = adversarial_p99()
+    print("mode,p50_ms,p99_ms,max_ms")
+    for mode in ("baseline_no_long_prompts", "blocking_prefill",
+                 "chunked_prefill"):
+        r = adv[mode]
+        print(f"{mode},{r['p50_ms']:.2f},{r['p99_ms']:.2f},{r['max_ms']:.2f}")
+    print(f"# p99 vs baseline: blocking "
+          f"{adv['p99_ratio_blocking_vs_baseline']:.1f}x, chunked "
+          f"{adv['p99_ratio_chunked_vs_baseline']:.1f}x "
+          f"(elastic-FIFO target: <= 2x)")
+    out = artifact_path("BENCH_serve.json")
+    with open(out, "w") as f:
+        json.dump(adv, f, indent=1)
+    print(f"wrote {out}")
 
 
 if __name__ == "__main__":

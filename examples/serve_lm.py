@@ -1,7 +1,11 @@
 """Continuous-batching serving demo: more requests than slots, mixed prompt
-lengths, greedy + sampled decoding, engine stats.
+lengths, greedy + sampled decoding, engine stats — now through the
+elastic-FIFO pipeline: chunked prefill (one long prompt no longer stalls
+the live decode slots), a bounded admission FIFO with backpressure on
+``submit``, and streaming consumption from the per-slot output FIFOs.
 
   PYTHONPATH=src python examples/serve_lm.py [--arch qwen3-1.7b]
+                                             [--replicas 2]
 """
 import argparse
 
@@ -9,29 +13,45 @@ import jax
 import numpy as np
 
 from repro.configs import build_model, get_config, reduced
-from repro.serve import Engine, EngineConfig
+from repro.serve import Engine, EngineConfig, ReplicaRouter
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--replicas", type=int, default=1)
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = Engine(model, params, EngineConfig(max_slots=4, max_len=96,
-                                             prefill_pad=16))
+    ecfg = EngineConfig(max_slots=4, max_len=96, prefill_pad=16,
+                        prefill_chunk=16,     # elastic chunked prefill
+                        max_queue=8)          # bounded admission FIFO
+    if args.replicas > 1:
+        eng = ReplicaRouter(model, params, ecfg, n_replicas=args.replicas)
+    else:
+        eng = Engine(model, params, ecfg)
     rng = np.random.default_rng(0)
+    uids = []
     for i in range(args.requests):
         plen = int(rng.integers(4, 32))
-        eng.submit(rng.integers(0, cfg.vocab_size, plen),
-                   max_new=int(rng.integers(4, 12)),
-                   temperature=0.0 if i % 2 else 0.8)
-    done = eng.run_until_drained()
-    for r in done[:4]:
-        print(f"req {r.uid}: prompt_len={len(r.prompt)} -> {r.out}")
+        # submit blocks (runs engine ticks) if the admission FIFO is full —
+        # the elastic-FIFO backpressure discipline
+        uids.append(eng.submit(rng.integers(0, cfg.vocab_size, plen),
+                               max_new=int(rng.integers(4, 12)),
+                               temperature=0.0 if i % 2 else 0.8))
+    # stream: drain per-slot output FIFOs while the engine runs
+    streamed = {u: [] for u in uids}
+    while eng.step() or eng.pending():
+        for u in uids:
+            streamed[u].extend(eng.pop_output(u))
+    for u in uids:
+        streamed[u].extend(eng.pop_output(u))
+    for u in uids[:4]:
+        print(f"req {u}: streamed {len(streamed[u])} tokens -> "
+              f"{streamed[u]}")
     print("stats:", eng.stats())
 
 

@@ -102,6 +102,16 @@ class ModelConfig:
         return self.head_dim or (self.d_model // max(self.n_heads, 1))
 
     @property
+    def prefill_chunk_align(self) -> int:
+        """Chunked-prefill granularity this family supports while staying
+        bit-identical to a blocking prefill. Attention pads are causal-inert
+        so any chunk size works; the SSD scan's intra-chunk cumsums change
+        with the chunk partition, so ssm/hybrid chunks must land on
+        ``ssm_chunk`` boundaries for the chunked scan to decompose exactly
+        into the blocking one."""
+        return self.ssm_chunk if self.family in ("ssm", "hybrid") else 1
+
+    @property
     def d_inner(self) -> int:        # ssm inner width
         return self.ssm_expand * self.d_model
 

@@ -1,7 +1,9 @@
-"""Serving driver: batched requests through the continuous-batching engine.
+"""Serving driver: batched requests through the continuous-batching engine,
+optionally chunk-prefilled (elastic-FIFO pipeline) and data-parallel across
+replica shards.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
-      --requests 16 [--qk-attention]
+      --requests 16 [--qk-attention] [--prefill-chunk 16] [--replicas 2]
 """
 from __future__ import annotations
 
@@ -22,10 +24,20 @@ def main() -> None:
     ap.add_argument("--spiking", action="store_true")
     ap.add_argument("--qk-attention", action="store_true")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: tokens per chunk interleaved "
+                         "with decode ticks (0 = blocking prefill)")
+    ap.add_argument("--chunks-per-tick", type=int, default=1)
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="admission FIFO bound; submit applies "
+                         "backpressure when full (0 = unbounded)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel engine replicas; slot pools shard "
+                         "across local devices, least-loaded dispatch")
     args = ap.parse_args()
 
     from ..configs import get_config, reduced as reduce_cfg, build_model
-    from ..serve import Engine, EngineConfig
+    from ..serve import Engine, EngineConfig, ReplicaRouter
 
     overrides = {}
     if args.spiking:
@@ -38,8 +50,14 @@ def main() -> None:
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    eng = Engine(model, params,
-                 EngineConfig(max_slots=args.slots, max_len=args.max_len))
+    ecfg = EngineConfig(max_slots=args.slots, max_len=args.max_len,
+                        prefill_chunk=args.prefill_chunk,
+                        prefill_chunks_per_tick=args.chunks_per_tick,
+                        max_queue=args.max_queue)
+    if args.replicas > 1:
+        eng = ReplicaRouter(model, params, ecfg, n_replicas=args.replicas)
+    else:
+        eng = Engine(model, params, ecfg)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         plen = int(rng.integers(4, 24))

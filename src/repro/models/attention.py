@@ -212,6 +212,77 @@ def attn_prefill(p: dict, cfg: ModelConfig, x: Array, positions: Array,
     return dense_apply(p["wo"], out.reshape(b, s, h * dh)), (k, v)
 
 
+def attn_append(p: dict, cfg: ModelConfig, x: Array,
+                cache_k: Array, cache_v: Array, cache_len: Array,
+                *, n_heads: Optional[int] = None,
+                n_kv: Optional[int] = None) -> tuple[Array, tuple[Array, Array]]:
+    """Continued (chunked) prefill: C new tokens against a partially-filled
+    cache. x: [B, C, D]; cache_[kv]: [B, S_max, Hkv, Dh]; cache_len: scalar
+    or [B] — the number of already-valid cache rows per sequence.
+
+    The chunk's K/V rows are written at positions cache_len..cache_len+C-1
+    and query i attends the cached prefix plus chunk positions <= i — the
+    serving engine's elastic-FIFO prefill unit (one chunk per call, decode
+    ticks interleave between calls). Bit-identical to running the whole
+    prompt through ``attn_prefill`` in one pass: per-position projections
+    are local, masked-out keys get exactly-zero softmax weight, and scores
+    accumulate in f32 either way. C == 1 is ``attn_decode``'s math.
+
+    NOTE: scores read the cache as written, so bit-identity to blocking
+    prefill requires the cache dtype to be the COMPUTE dtype — with a
+    quantized (f8) serving cache the engine keeps per-request chunk caches
+    at compute precision and quantizes once on the slot write, exactly
+    where the blocking path does. Bit-identity also assumes the blocking
+    pass took the full-softmax branch: above ``cfg.flash_threshold``
+    ``attn_prefill`` streams KV blocks with running-max rescaling, a
+    different f32 reduction order this append path does not reproduce.
+    """
+    h = n_heads or cfg.n_heads
+    hkv = n_kv or (cfg.n_kv_heads or h)
+    dh = cfg.resolved_head_dim
+    b, c, _ = x.shape
+    scale = dh ** -0.5
+
+    if cfg.attention_kind == "qk_spiking":
+        # token-local: the chunk is self-contained; packed mode refreshes
+        # the per-slot spike state with the chunk's last token
+        if cfg.spike_format == "packed":
+            out, state = _qk_spiking_apply(p, cfg, x, h, hkv,
+                                           return_spike_state=True)
+            return out, (state, cache_v)
+        out = _qk_spiking_apply(p, cfg, x, h, hkv)
+        return out, (cache_k, cache_v)
+
+    lens = jnp.broadcast_to(jnp.asarray(cache_len), (b,))        # [B]
+    positions = lens[:, None] + jnp.arange(c)[None, :]           # [B, C]
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions, h, hkv)
+
+    if jnp.ndim(cache_len) == 0:
+        k = jax.lax.dynamic_update_slice(cache_k, k_new.astype(cache_k.dtype),
+                                         (0, cache_len, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache_v, v_new.astype(cache_v.dtype),
+                                         (0, cache_len, 0, 0))
+    else:
+        bi = jnp.arange(b)[:, None]
+        rows = positions
+        k = cache_k.at[bi, rows].set(k_new.astype(cache_k.dtype))
+        v = cache_v.at[bi, rows].set(v_new.astype(cache_v.dtype))
+
+    ke = _expand_kv(k.astype(q.dtype), h)
+    ve = _expand_kv(v.astype(q.dtype), h)
+    # f32 scores via preferred_element_type — same accumulation as the
+    # blocking prefill's _attn_full, so chunked == blocking bit-for-bit
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, ke,
+                        preferred_element_type=jnp.float32) * scale
+    # query i (absolute position lens+i) sees key j iff j <= lens + i
+    ki = jnp.arange(ke.shape[1])[None, None, :]                  # [1,1,S]
+    valid = ki <= positions[:, :, None]                          # [B,C,S]
+    scores = jnp.where(valid[:, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, ve)
+    return dense_apply(p["wo"], out.reshape(b, c, h * dh)), (k, v)
+
+
 def attn_decode(p: dict, cfg: ModelConfig, x: Array, pos: Array,
                 cache_k: Array, cache_v: Array, cache_len: Array,
                 *, n_heads: Optional[int] = None,

@@ -38,7 +38,8 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig, ShapeSpec
 from ..core.w2ttfs import window_counts
-from .attention import attn_apply, attn_decode, attn_init, attn_prefill
+from .attention import (attn_append, attn_apply, attn_decode, attn_init,
+                        attn_prefill)
 from .ffn import mlp_apply, mlp_init, moe_apply, moe_init
 from .layers import (dense_apply, dense_init, embedding_init,
                      embedding_lookup, embedding_logits, maybe_spike,
@@ -160,6 +161,29 @@ def block_decode(p: dict, cfg: ModelConfig, x: Array, cache_l: Any,
     out, st = mamba_decode_step(p["mamba"], cfg,
                                 rmsnorm_apply(p["ln1"], x, cfg.rms_eps),
                                 cache_l)
+    return x + out, st
+
+
+def block_append(p: dict, cfg: ModelConfig, x: Array, cache_l: Any,
+                 cache_len: Array) -> tuple[Array, Any]:
+    """Chunked-prefill block forward: C tokens appended to an existing
+    cache entry (the multi-token generalization of ``block_decode``)."""
+    kind = _block_kind(cfg)
+    if kind in ("attn_mlp", "attn_moe"):
+        h, (k, v) = attn_append(p["attn"], cfg,
+                                rmsnorm_apply(p["ln1"], x, cfg.rms_eps),
+                                cache_l[0], cache_l[1], cache_len)
+        x = x + h
+        y = rmsnorm_apply(p["ln2"], x, cfg.rms_eps)
+        if kind == "attn_mlp":
+            x = x + mlp_apply(p["mlp"], cfg, y)
+        else:
+            moe_y, _ = moe_apply(p["moe"], cfg, y)
+            x = x + moe_y
+        return x, (k, v)
+    out, st = mamba_apply(p["mamba"], cfg,
+                          rmsnorm_apply(p["ln1"], x, cfg.rms_eps),
+                          init_state=cache_l, return_state=True)
     return x + out, st
 
 
@@ -449,6 +473,72 @@ class LM:
                               rmsnorm_apply(shared["ln2"], x, cfg.rms_eps))
             x, states = jax.lax.scan(
                 lambda c, pc: block_decode(pc[0], cfg, c, pc[1], cache_len),
+                x, (p_g, c_g["mamba"]))
+            return x, {"attn": (ck, cv), "mamba": states}
+
+        x, layers = jax.lax.scan(group_body, x, (blocks_g, cache["layers"]))
+        return x, layers
+
+    # -------------------------------------------------------- chunked prefill
+    def prefill_chunk(self, params: dict, tokens: Array, cache: dict
+                      ) -> tuple[Array, dict]:
+        """Continued prefill: C tokens appended to an existing cache.
+
+        tokens: [B, C] int32; cache: an ``init_cache``-layout pytree whose
+        ``cache['len']`` (scalar or [B]) is the number of positions already
+        prefilled. Returns (all-position logits [B, C, V], updated cache
+        with len advanced by C). Feeding a prompt through this in chunks is
+        bit-identical to one blocking ``prefill`` pass — the serving
+        engine's elastic-FIFO prefill unit (decode ticks interleave between
+        chunks, so one long prompt cannot stall the decode pipeline).
+        """
+        cfg = self.cfg
+        cache_len = cache["len"]
+        x = embedding_lookup(params["embed"], tokens, cfg.dtype)
+        x = shard_act(x, "dp", None, None)
+
+        if cfg.family == "hybrid":
+            x, layers = self._hybrid_append(params, x, cache)
+        elif cfg.scan_layers:
+            def scan_body(carry, inp):
+                p_l, c_l = inp
+                y, nc = block_append(p_l, cfg, carry, c_l, cache_len)
+                return y, nc
+            x, layers = jax.lax.scan(scan_body, x,
+                                     (params["blocks"], cache["layers"]))
+        else:
+            entries = []
+            for i in range(cfg.n_layers):
+                p_l = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+                c_l = jax.tree_util.tree_map(lambda a: a[i], cache["layers"])
+                x, nc = block_append(p_l, cfg, x, c_l, cache_len)
+                entries.append(nc)
+            layers = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *entries)
+        x = rmsnorm_apply(params["final_norm"], x, cfg.rms_eps)
+        logits = self._logits(params, x)
+        return logits, {"layers": layers, "len": cache_len + tokens.shape[1]}
+
+    def _hybrid_append(self, params, x, cache):
+        cfg = self.cfg
+        k = cfg.attn_every
+        ng = cfg.n_layers // k
+        shared = params["shared_attn"]
+        cache_len = cache["len"]
+        blocks_g = jax.tree_util.tree_map(
+            lambda a: a.reshape(ng, k, *a.shape[1:]), params["blocks"])
+
+        def group_body(carry, inp):
+            x = carry
+            p_g, c_g = inp
+            h, (ck, cv) = attn_append(
+                shared["attn"], cfg,
+                rmsnorm_apply(shared["ln1"], x, cfg.rms_eps),
+                c_g["attn"][0], c_g["attn"][1], cache_len)
+            x = x + h
+            x = x + mlp_apply(shared["mlp"], cfg,
+                              rmsnorm_apply(shared["ln2"], x, cfg.rms_eps))
+            x, states = jax.lax.scan(
+                lambda c2, pc: block_append(pc[0], cfg, c2, pc[1], cache_len),
                 x, (p_g, c_g["mamba"]))
             return x, {"attn": (ck, cv), "mamba": states}
 

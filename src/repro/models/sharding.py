@@ -226,6 +226,28 @@ def batch_specs(batch_shape: Any, mesh: Mesh) -> Any:
     return jax.tree_util.tree_map(one, batch_shape)
 
 
+# ---------------------------------------------------------- replica serving
+def replica_meshes(n: int, devices: Optional[list] = None) -> list[Mesh]:
+    """Meshes for data-parallel multi-replica serving: the local device set
+    is dealt round-robin into ``n`` single-device 'data' meshes, one per
+    engine replica (each replica owns its own slot pool — the serving-side
+    DP shard). With fewer devices than replicas, replicas share devices
+    (the CPU/dev-box degenerate case)."""
+    import numpy as _np
+    devices = list(devices if devices is not None else jax.devices())
+    return [Mesh(_np.asarray([devices[i % len(devices)]]), ("data",))
+            for i in range(n)]
+
+
+def replicate_params(params: Any, mesh: Mesh) -> Any:
+    """Place a param pytree fully-replicated on one replica mesh — each
+    serving replica reads its own device-local copy (weights are replicated
+    across the serving DP axis; the slot-pool caches are what shard)."""
+    sharding = NamedSharding(mesh, P())
+    return jax.tree_util.tree_map(
+        lambda a: jax.device_put(a, sharding), params)
+
+
 def zero1_specs(params_shape: Any, mesh: Optional[Mesh] = None) -> Any:
     """Optimizer-state sharding (ZeRO-1): additionally shard the FIRST
     already-unsharded dim over 'data' where divisible. GSPMD then emits

@@ -63,10 +63,17 @@ def _split_proj(zxbcdt: Array, cfg: ModelConfig, d_inner: int, g: int, n: int):
     return z, xbc, dt
 
 
-def _causal_conv(xbc: Array, w: Array, b: Array, spiking: bool, cfg) -> Array:
-    """Depthwise causal conv over time. xbc: [B,S,C]; w: [K,C]."""
+def _causal_conv(xbc: Array, w: Array, b: Array, spiking: bool, cfg,
+                 tail: Optional[Array] = None) -> Array:
+    """Depthwise causal conv over time. xbc: [B,S,C]; w: [K,C].
+
+    ``tail`` [B, K-1, C] supplies the previous chunk's last K-1 pre-conv
+    inputs (chunked prefill); None means sequence start (zero history)."""
     k = w.shape[0]
-    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    if tail is None:
+        pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([tail.astype(xbc.dtype), xbc], axis=1)
     # depthwise conv as K shifted adds — K is tiny (4); avoids conv lowering
     out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :].astype(xbc.dtype)
               for i in range(k))
@@ -149,7 +156,9 @@ def mamba_apply(p: dict, cfg: ModelConfig, x: Array,
     b, s, _ = x.shape
     zxbcdt = dense_apply(p["in_proj"], x)
     z, xbc_raw, dt_raw = _split_proj(zxbcdt, cfg, d_inner, g, n)
-    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"], cfg.spiking, cfg)
+    conv_tail = None if init_state is None else init_state["conv"]
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"], cfg.spiking, cfg,
+                       tail=conv_tail)
     xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + g * n], axis=-1)
     xs = xs.reshape(b, s, h, cfg.ssm_headdim)
     Bm = Bm.reshape(b, s, g, n)
@@ -178,11 +187,12 @@ def mamba_apply(p: dict, cfg: ModelConfig, x: Array,
     out = dense_apply(p["out_proj"], y)
     if not return_state:
         return out
-    # conv state = last K-1 PRE-conv inputs (zero-padded for short sequences)
+    # conv state = last K-1 PRE-conv inputs; history (the incoming conv tail
+    # or zeros at sequence start) covers chunks shorter than K-1
     k1 = cfg.ssm_conv - 1
-    tail = jnp.concatenate(
-        [jnp.zeros((b, k1, xbc_raw.shape[-1]), x.dtype), xbc_raw], axis=1
-    )[:, -k1:, :]
+    hist = (jnp.zeros((b, k1, xbc_raw.shape[-1]), x.dtype)
+            if conv_tail is None else conv_tail.astype(x.dtype))
+    tail = jnp.concatenate([hist, xbc_raw], axis=1)[:, -k1:, :]
     return out, {"ssm": final.astype(jnp.float32), "conv": tail}
 
 

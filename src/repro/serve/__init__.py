@@ -1,1 +1,2 @@
-from .engine import Engine, Request, EngineConfig
+from .engine import Engine, EngineConfig, QueueFull, Request
+from .router import ReplicaRouter

@@ -1,4 +1,6 @@
-"""Batched serving engine: continuous batching over a fixed slot pool.
+"""Batched serving engine: continuous batching over a fixed slot pool, with
+an elastic-FIFO chunked-prefill pipeline (the paper's FIFO-decoupled hybrid
+data-event execution applied at the request-scheduling layer).
 
 Design (vLLM-style, TPU-static-shapes edition):
   * ``max_slots`` concurrent sequences share one preallocated KV cache of
@@ -14,6 +16,32 @@ Design (vLLM-style, TPU-static-shapes edition):
   * spiking/QKFormer models (attention_kind='qk_spiking') have an EMPTY
     attention cache (token-local masks), so the same engine serves them with
     per-slot state of size 0 — the paper's O(1)-decode claim in practice.
+
+Elastic-FIFO pipeline (``prefill_chunk > 0``), mirroring the paper's FIFO
+depth elasticity in software:
+  * chunked prefill — each prompt is split into ``prefill_chunk``-token
+    chunks that run through ``LM.prefill_chunk`` against a per-request
+    bucket cache; at most ``prefill_chunks_per_tick`` chunks run per engine
+    tick, so one long prompt can no longer freeze every live decode slot
+    (head-of-line stall → bounded p99 decode-tick latency). Bit-identical
+    to the blocking prefill under greedy decode: chunks cover the same
+    padded bucket, so every reduction runs over the same axis lengths.
+    (Caveat: above ``cfg.flash_threshold`` the blocking prefill switches
+    to flash accumulation, whose different f32 reduction order chunked
+    prefill does not reproduce — raise the threshold for strict parity on
+    very long prompts.)
+  * elastic admission FIFO — ``max_queue`` bounds the submit queue;
+    ``submit`` applies backpressure by donating engine ticks (draining the
+    pipeline) until a queue slot frees, like a producer stalling on a full
+    hardware FIFO. Occupancy high-water marks are exported via ``stats()``.
+  * per-slot output FIFOs — sampled tokens stream into a per-request FIFO
+    (``pop_output``); with ``out_fifo_depth`` set, a slot whose consumer
+    stops draining is STALLED (its cache row is restored after the pool
+    decode, its token re-fed next tick — exact and order-preserving under
+    greedy decode; temperature sampling draws from the engine's shared RNG
+    stream, whose consumption order stalls reshuffle) while the other
+    slots keep decoding: downstream backpressure without head-of-line
+    blocking.
 
 Sampling: greedy or temperature (per request).
 """
@@ -31,6 +59,31 @@ import numpy as np
 
 Array = jax.Array
 
+# Jitted engine step functions shared across Engine instances of the same
+# (model class, config): a process serving N replicas — or a test suite
+# constructing many engines — compiles each (shape, config) combination
+# exactly once instead of once per engine.
+_JIT_CACHE: dict = {}
+
+
+def _jitted_steps(model):
+    key = (type(model), model.cfg)
+    if key not in _JIT_CACHE:
+        def prefill_fn(params, tokens):
+            return model.prefill(params, {"tokens": tokens},
+                                 return_all_logits=True)
+
+        chunk_fn = getattr(model, "prefill_chunk", None)
+        _JIT_CACHE[key] = (jax.jit(prefill_fn),
+                           jax.jit(model.decode_step),
+                           jax.jit(chunk_fn) if chunk_fn else None)
+    return _JIT_CACHE[key]
+
+
+class QueueFull(RuntimeError):
+    """Raised by ``submit`` when the admission FIFO stays full (non-blocking
+    submit, or a blocking submit that exhausted its tick budget)."""
+
 
 @dataclasses.dataclass
 class Request:
@@ -41,11 +94,25 @@ class Request:
     eos_id: Optional[int] = None
     # -- filled by the engine --
     out: list = dataclasses.field(default_factory=list)
+    fifo: deque = dataclasses.field(default_factory=deque)  # undrained tokens
     slot: int = -1
     done: bool = False
     enqueued_t: float = 0.0
     first_token_t: float = 0.0
     finished_t: float = 0.0
+    enqueued_tick: int = 0
+    first_token_tick: int = -1
+
+
+@dataclasses.dataclass
+class _PrefillJob:
+    """One request's in-flight chunked prefill (an elastic-FIFO entry)."""
+    req: Request
+    slot: int
+    cache: dict                         # per-request bucket cache
+    bucket: int                         # positions this job must process
+    done: int = 0                       # positions processed so far
+    last_logits: Optional[Array] = None  # logits at the prompt's last token
 
 
 @dataclasses.dataclass
@@ -53,6 +120,16 @@ class EngineConfig:
     max_slots: int = 8
     max_len: int = 512
     prefill_pad: int = 64               # prompt length bucket size
+    # --- elastic-FIFO pipeline ---
+    # prefill_chunk > 0: split prefill into chunks of this many tokens that
+    # interleave with decode ticks (0 = blocking, monolithic prefill). The
+    # engine rounds the chunk up to the model family's exactness granularity
+    # (``cfg.prefill_chunk_align``: ssm/hybrid chunk on ssm_chunk bounds).
+    prefill_chunk: int = 0
+    prefill_chunks_per_tick: int = 1    # prefill work budget per decode tick
+    max_queue: int = 0                  # admission FIFO bound (0 = unbounded)
+    submit_block_ticks: int = 10_000    # backpressure budget before QueueFull
+    out_fifo_depth: int = 0             # per-slot output FIFO bound (0 = inf)
     # deployed spiking path: route qk_spiking models' LIF projections and
     # binary-activation matmuls through the fused-PE / spike_matmul Pallas
     # kernels (forward-exact; serving is inference, so the missing surrogate
@@ -87,8 +164,10 @@ class Engine:
             self.model = type(model)(
                 dataclasses.replace(model.cfg, **repl))
         self.queue: deque[Request] = deque()
+        self.prefill_fifo: deque[_PrefillJob] = deque()
         self.active: dict[int, Request] = {}
         self.finished: list[Request] = []
+        self.requests: dict[int, Request] = {}
         self._rng = jax.random.PRNGKey(rng_seed)
         self._uid = itertools.count()
         # per-decode-tick spike telemetry (packed qk_spiking mode only)
@@ -96,6 +175,14 @@ class Engine:
                               and cfg.spike_stats_every > 0)
         self._spike_log: list[dict] = []
         self._tick = 0
+        # elastic-FIFO telemetry: occupancy high-water marks + tick latency
+        self._queue_hwm = 0
+        self._prefill_fifo_hwm = 0
+        self._out_fifo_hwm = 0
+        self._stall_ticks = 0
+        self._prefill_chunks = 0
+        # rolling window: stats() percentiles stay O(window), memory bounded
+        self._tick_wall: deque = deque(maxlen=4096)
 
         # slot-pool cache; per-slot valid lengths tracked host-side
         self.cache = self.model.init_cache(cfg.max_slots, cfg.max_len)
@@ -103,58 +190,157 @@ class Engine:
         self.slot_len = np.zeros(cfg.max_slots, np.int64)
         self.free_slots = list(range(cfg.max_slots))
 
-        self._decode = jax.jit(self._decode_fn)
-        self._prefill = jax.jit(self._prefill_fn,
-                                static_argnames=("pad_len",))
-
-    # ----------------------------------------------------------- jitted fns
-    def _prefill_fn(self, params, tokens, pad_len):
-        # all-position logits: prompts are right-padded, the engine reads
-        # the logits at each prompt's true last position
-        logits, cache = self.model.prefill(params, {"tokens": tokens},
-                                           return_all_logits=True)
-        return logits, cache
-
-    def _decode_fn(self, params, tokens, cache):
-        """One pool-wide decode tick; cache['len'] is the per-slot [B]
-        length vector, so every slot attends exactly its own prefix."""
-        return self.model.decode_step(params, tokens, cache)
+        if cfg.prefill_chunk > 0 and not hasattr(self.model, "prefill_chunk"):
+            raise ValueError(
+                f"{type(self.model).__name__} has no prefill_chunk: chunked "
+                f"prefill serves the decoder-only LM zoo (set "
+                f"EngineConfig.prefill_chunk=0 for blocking prefill)")
+        # shared jitted steps: prefill returns all-position logits (prompts
+        # are right-padded; the engine reads each prompt's true last
+        # position) and decode is one pool-wide tick whose cache['len'] is
+        # the per-slot [B] length vector, so every slot attends exactly its
+        # own prefix
+        self._prefill, self._decode, self._prefill_chunk = \
+            _jitted_steps(self.model)
 
     # ------------------------------------------------------------ lifecycle
     def submit(self, prompt: np.ndarray, max_new: int = 32,
-               temperature: float = 0.0, eos_id: Optional[int] = None) -> int:
-        req = Request(uid=next(self._uid), prompt=np.asarray(prompt, np.int32),
+               temperature: float = 0.0, eos_id: Optional[int] = None,
+               block: bool = True) -> int:
+        """Enqueue a request. With ``max_queue`` set and the admission FIFO
+        full, a blocking submit applies backpressure: it donates engine
+        ticks (draining prefill chunks and decode work) until a queue slot
+        frees; ``block=False`` raises ``QueueFull`` immediately instead."""
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) == 0:
+            raise ValueError("empty prompt: there is no position to read "
+                             "first-token logits from")
+        if len(prompt) >= self.cfg.max_len:
+            raise ValueError(f"prompt length {len(prompt)} >= max_len "
+                             f"{self.cfg.max_len}: the slot pool cannot "
+                             f"hold it (raise EngineConfig.max_len)")
+        if self.cfg.max_queue and len(self.queue) >= self.cfg.max_queue:
+            if not block:
+                raise QueueFull(f"admission FIFO at bound "
+                                f"{self.cfg.max_queue}")
+            for _ in range(self.cfg.submit_block_ticks):
+                self.step()
+                if len(self.queue) < self.cfg.max_queue:
+                    break
+            else:
+                raise QueueFull("backpressure tick budget exhausted")
+        req = Request(uid=next(self._uid), prompt=prompt,
                       max_new=max_new, temperature=temperature, eos_id=eos_id)
         req.enqueued_t = time.time()
+        req.enqueued_tick = self._tick
         self.queue.append(req)
+        self.requests[req.uid] = req
+        self._queue_hwm = max(self._queue_hwm, len(self.queue))
         return req.uid
 
+    def pop_output(self, uid: int) -> list[int]:
+        """Drain a request's output FIFO (the consumer side of the per-slot
+        elastic FIFO). Draining un-stalls a slot paused by a full FIFO.
+        A finished, fully-drained request is retired from the uid map (so a
+        long-running server does not accumulate request state); draining an
+        unknown/retired uid returns []."""
+        req = self.requests.get(uid)
+        if req is None:
+            return []
+        out, req.fifo = list(req.fifo), deque()
+        if req.done:
+            del self.requests[uid]
+        return out
+
+    def load(self) -> int:
+        """Requests in flight (queued + prefilling + decoding) — the
+        dispatch metric for the multi-replica router."""
+        return len(self.queue) + len(self.prefill_fifo) + len(self.active)
+
+    # ------------------------------------------------------------- admission
+    def _bucket_len(self, s: int) -> int:
+        if self.model.cfg.family in ("ssm", "hybrid"):
+            # SSM recurrences integrate pad positions into the state —
+            # prefill at TRUE length (attention pads are causal-inert,
+            # SSM pads are not)
+            return s
+        return min(self.cfg.max_len,
+                   -(-s // self.cfg.prefill_pad) * self.cfg.prefill_pad)
+
     def _admit(self) -> None:
+        chunked = self.cfg.prefill_chunk > 0
         while self.queue and self.free_slots:
             req = self.queue.popleft()
             slot = self.free_slots.pop()
             req.slot = slot
-            s = len(req.prompt)
-            if self.model.cfg.family in ("ssm", "hybrid"):
-                # SSM recurrences integrate pad positions into the state —
-                # prefill at TRUE length (attention pads are causal-inert,
-                # SSM pads are not)
-                pad_len = s
+            if chunked:
+                self._admit_chunked(req, slot)
             else:
-                pad_len = min(
-                    self.cfg.max_len,
-                    -(-s // self.cfg.prefill_pad) * self.cfg.prefill_pad)
-            toks = np.zeros((1, pad_len), np.int32)
-            toks[0, :s] = req.prompt        # right-pad (causal: pads inert)
-            logits, cache = self._prefill(self.params, jnp.asarray(toks),
-                                          pad_len=pad_len)
-            self._write_slot(slot, cache)
-            self.slot_len[slot] = s         # only the REAL prompt is valid
-            tok = self._sample(logits[0, s - 1], req)
-            req.out.append(int(tok))
-            req.first_token_t = time.time()
-            self.active[slot] = req
+                self._admit_blocking(req, slot)
 
+    def _admit_blocking(self, req: Request, slot: int) -> None:
+        s = len(req.prompt)
+        pad_len = self._bucket_len(s)
+        toks = np.zeros((1, pad_len), np.int32)
+        toks[0, :s] = req.prompt        # right-pad (causal: pads inert)
+        logits, cache = self._prefill(self.params, jnp.asarray(toks))
+        self._write_slot(slot, cache)
+        self._activate(req, slot, logits[0, s - 1])
+
+    def _admit_chunked(self, req: Request, slot: int) -> None:
+        s = len(req.prompt)
+        bucket = self._bucket_len(s)
+        cache = self.model.init_cache(1, bucket)
+        cache["len"] = jnp.zeros((), jnp.int32)
+        if self.model.cfg.kv_dtype:
+            # chunk attention must read back the prefix it wrote: keep the
+            # per-request cache at COMPUTE precision and quantize (f8 etc.)
+            # once at _write_slot — exactly where the blocking path does —
+            # or chunked would attend quantized keys blocking never saw
+            dt = self.model.cfg.dtype
+            cache["layers"] = jax.tree_util.tree_map(
+                lambda a: a.astype(dt) if a.dtype == jnp.float8_e4m3fn
+                else a, cache["layers"])
+        self.prefill_fifo.append(_PrefillJob(req, slot, cache, bucket))
+        self._prefill_fifo_hwm = max(self._prefill_fifo_hwm,
+                                     len(self.prefill_fifo))
+
+    def _chunk_size(self) -> int:
+        align = self.model.cfg.prefill_chunk_align
+        return -(-self.cfg.prefill_chunk // align) * align
+
+    def _prefill_step(self, job: _PrefillJob) -> bool:
+        """Run ONE chunk of one request's prefill. Returns True when the
+        job completed (its slot cache is written and the request is live)."""
+        req, s = job.req, len(job.req.prompt)
+        chunk = min(self._chunk_size(), job.bucket - job.done)
+        toks = np.zeros((1, chunk), np.int32)
+        valid = max(0, min(chunk, s - job.done))
+        toks[0, :valid] = req.prompt[job.done:job.done + valid]
+        logits, job.cache = self._prefill_chunk(self.params,
+                                                jnp.asarray(toks), job.cache)
+        self._prefill_chunks += 1
+        if job.done <= s - 1 < job.done + chunk:
+            job.last_logits = logits[0, s - 1 - job.done]
+        job.done += chunk
+        if job.done < job.bucket:
+            return False
+        self._write_slot(job.slot, job.cache)
+        self._activate(req, job.slot, job.last_logits)
+        return True
+
+    def _activate(self, req: Request, slot: int, last_logits: Array) -> None:
+        """Prefill finished: slot goes live with the first sampled token."""
+        self.slot_len[slot] = len(req.prompt)  # only the REAL prompt is valid
+        tok = self._sample(last_logits, req)
+        req.out.append(int(tok))
+        req.fifo.append(int(tok))
+        req.first_token_t = time.time()
+        req.first_token_tick = self._tick
+        self._out_fifo_hwm = max(self._out_fifo_hwm, len(req.fifo))
+        self.active[slot] = req
+
+    # ---------------------------------------------------------- cache moves
     def _write_slot(self, slot: int, prefill_cache: dict) -> None:
         """Copy one request's prefill cache into its slot row."""
 
@@ -177,32 +363,83 @@ class Engine:
         self.cache["layers"] = jax.tree_util.tree_map_with_path(
             write, self.cache["layers"], prefill_cache["layers"])
 
+    def _restore_slot(self, slot: int, prev_layers: Any) -> None:
+        """Copy one slot's rows back from a pre-decode cache snapshot —
+        makes a stalled slot's tick side-effect-free (its SSM/spike state
+        must not advance while the consumer is not draining)."""
+
+        def restore(path, pool, prev):
+            ps = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                          for k in path)
+            nd = pool.ndim
+            idx = [slice(None)] * nd
+            idx[nd - 3 if "conv" in ps else nd - 4] = slice(slot, slot + 1)
+            idx = tuple(idx)
+            return pool.at[idx].set(prev[idx])
+
+        self.cache["layers"] = jax.tree_util.tree_map_with_path(
+            restore, self.cache["layers"], prev_layers)
+
     def _sample(self, logits: Array, req: Request) -> int:
         if req.temperature <= 0.0:
             return int(jnp.argmax(logits))
         self._rng, k = jax.random.split(self._rng)
         return int(jax.random.categorical(k, logits / req.temperature))
 
+    # ------------------------------------------------------------------ tick
+    def _stalled_slots(self) -> set:
+        if not self.cfg.out_fifo_depth:
+            return set()
+        return {slot for slot, req in self.active.items()
+                if len(req.fifo) >= self.cfg.out_fifo_depth}
+
     def step(self) -> int:
-        """One engine tick: admit + one decode for all live slots.
-        Returns number of live sequences."""
+        """One engine tick: admit, drain up to ``prefill_chunks_per_tick``
+        chunks from the prefill FIFO, then one pool decode for all live,
+        un-stalled slots. Returns number of live sequences."""
         self._admit()
+        if self.cfg.prefill_chunk > 0:
+            budget = max(1, self.cfg.prefill_chunks_per_tick)
+            while budget > 0 and self.prefill_fifo:
+                if self._prefill_step(self.prefill_fifo[0]):
+                    self.prefill_fifo.popleft()
+                budget -= 1
         if not self.active:
             return 0
+        stalled = self._stalled_slots()
+        self._tick += 1
+        if stalled and len(stalled) == len(self.active):
+            self._stall_ticks += 1
+            return len(self.active)     # every consumer is backed up
         toks = np.zeros((self.cfg.max_slots, 1), np.int32)
         for slot, req in self.active.items():
             toks[slot, 0] = req.out[-1]
         # per-slot length vector: every slot attends exactly its own prefix
         self.cache["len"] = jnp.asarray(self.slot_len, jnp.int32)
+        prev_layers = self.cache["layers"] if stalled else None
+        t0 = time.perf_counter()
         logits, self.cache = self._decode(self.params, jnp.asarray(toks),
                                           self.cache)
-        self._tick += 1
+        logits = jax.block_until_ready(logits)
+        self._tick_wall.append(time.perf_counter() - t0)
         if self._track_spikes and self._tick % self.cfg.spike_stats_every == 0:
             self._record_spike_step(sorted(self.active.keys()))
+        if stalled:
+            self._stall_ticks += 1
+            for slot in stalled:
+                # exact stall (greedy): state row rolls back, same token
+                # re-fed next tick recomputes the identical step once the
+                # FIFO drains; temperature sampling is only reproducible up
+                # to the shared RNG stream's consumption order
+                self._restore_slot(slot, prev_layers)
         done_slots = []
         for slot, req in list(self.active.items()):
+            if slot in stalled:
+                continue
             tok = self._sample(logits[slot], req)
             req.out.append(tok)
+            req.fifo.append(tok)
+            self._out_fifo_hwm = max(self._out_fifo_hwm, len(req.fifo))
             self.slot_len[slot] += 1
             hit_eos = req.eos_id is not None and tok == req.eos_id
             if hit_eos or len(req.out) >= req.max_new \
@@ -217,10 +454,16 @@ class Engine:
             self.free_slots.append(slot)
         return len(self.active)
 
+    def pending(self) -> bool:
+        """True while any pipeline stage still holds work (queued,
+        prefilling, or decoding) — THE drain predicate; drive loops should
+        use this instead of peeking at individual FIFOs."""
+        return bool(self.active or self.queue or self.prefill_fifo)
+
     def run_until_drained(self, max_ticks: int = 10_000) -> list[Request]:
         for _ in range(max_ticks):
-            live = self.step()
-            if not live and not self.queue:
+            self.step()
+            if not self.pending():
                 break
         return self.finished
 
@@ -264,7 +507,23 @@ class Engine:
                "tok_per_s": toks / max(span, 1e-9),
                "queue_depth": len(self.queue),
                "active": len(self.active),
-               "spike_format": self.cfg.spike_format}
+               "spike_format": self.cfg.spike_format,
+               # elastic-FIFO telemetry: the software analogue of the
+               # paper's FIFO-depth elasticity measurements
+               "prefill_mode": ("chunked" if self.cfg.prefill_chunk > 0
+                                else "blocking"),
+               "prefill_chunks": self._prefill_chunks,
+               "queue_hwm": self._queue_hwm,
+               "prefill_fifo_hwm": self._prefill_fifo_hwm,
+               "out_fifo_hwm": self._out_fifo_hwm,
+               "stall_ticks": self._stall_ticks}
+        if self._tick_wall:
+            tw = np.asarray(self._tick_wall)
+            out.update({
+                "decode_ticks": len(tw),
+                "decode_tick_p50_s": float(np.percentile(tw, 50)),
+                "decode_tick_p99_s": float(np.percentile(tw, 99)),
+                "decode_tick_max_s": float(tw.max())})
         if self._spike_log:
             rate = float(np.mean([e["spike_rate"] for e in self._spike_log]))
             pb = float(np.mean([e["packed_bytes"] for e in self._spike_log]))

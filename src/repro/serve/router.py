@@ -1,0 +1,118 @@
+"""Data-parallel multi-replica serving: a least-loaded router over N engine
+replicas whose slot pools shard across the local devices.
+
+Each replica is a full ``Engine`` (own slot-pool cache, own elastic FIFOs)
+placed on one device via the ``models.sharding`` replica-mesh helpers —
+weights replicate, slot pools shard: the serving-side data-parallel axis.
+Dispatch is least-loaded (queued + prefilling + active), lowest replica
+index on ties, so a given arrival trace routes deterministically and
+per-request outputs stay bit-identical to a single engine under greedy
+decode (each replica's pool math is slot-count-independent).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from ..models.sharding import replica_meshes, replicate_params
+from .engine import Engine, EngineConfig, QueueFull, Request
+
+
+class ReplicaRouter:
+    def __init__(self, model, params, cfg: EngineConfig, n_replicas: int = 2,
+                 devices: Optional[list] = None, rng_seed: int = 0):
+        assert n_replicas >= 1
+        meshes = replica_meshes(n_replicas, devices)
+        # per-replica rng offset: temperature sampling must not replay the
+        # same stream on every replica (greedy decode is seed-independent)
+        self.engines = [
+            Engine(model, replicate_params(params, mesh), cfg,
+                   rng_seed=rng_seed + i)
+            for i, mesh in enumerate(meshes)]
+        self.meshes = meshes
+        self._dispatch = np.zeros(n_replicas, np.int64)
+        self._by_uid: dict[int, tuple[int, int]] = {}   # uid -> (replica, local uid)
+        self._uid = 0
+
+    # ------------------------------------------------------------- dispatch
+    def submit(self, prompt, max_new: int = 32, temperature: float = 0.0,
+               eos_id=None, block: bool = True) -> int:
+        """Least-loaded dispatch with router-level backpressure: if the
+        chosen replica's admission FIFO is full, try the others before
+        falling back to a blocking submit on the least-loaded one."""
+        order = list(np.argsort([e.load() for e in self.engines],
+                                kind="stable"))
+        attempts = [(r, False) for r in order]
+        if block:
+            # every FIFO full: block on the LEAST-loaded replica — it is
+            # the one whose backpressure ticks free a queue slot soonest
+            attempts.append((order[0], True))
+        for r, blocking in attempts:
+            try:
+                local = self.engines[r].submit(
+                    prompt, max_new=max_new, temperature=temperature,
+                    eos_id=eos_id, block=blocking)
+            except QueueFull:
+                continue
+            uid = self._uid
+            self._uid += 1
+            self._by_uid[uid] = (r, local)
+            self._dispatch[r] += 1
+            return uid
+        raise QueueFull("every replica's admission FIFO is full")
+
+    # ------------------------------------------------------------ lifecycle
+    def step(self) -> int:
+        return sum(e.step() for e in self.engines)
+
+    def pending(self) -> bool:
+        return any(e.pending() for e in self.engines)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> list[Request]:
+        for _ in range(max_ticks):
+            self.step()
+            if not self.pending():
+                break
+        return self.finished
+
+    @property
+    def finished(self) -> list[Request]:
+        """Finished requests re-keyed to ROUTER uids (each engine numbers
+        its own requests from 0, so replica-local uids collide across the
+        pool — callers must never see them)."""
+        by_local = [{req.uid: req for req in e.finished}
+                    for e in self.engines]
+        out = []
+        for uid, (r, local) in sorted(self._by_uid.items()):
+            req = by_local[r].get(local)
+            if req is not None:
+                out.append(dataclasses.replace(req, uid=uid))
+        return out
+
+    def result(self, uid: int) -> Optional[Request]:
+        entry = self._by_uid.get(uid)
+        if entry is None:
+            return None
+        r, local = entry
+        return self.engines[r].requests.get(local)
+
+    def pop_output(self, uid: int) -> list[int]:
+        r, local = self._by_uid[uid]
+        return self.engines[r].pop_output(local)
+
+    def stats(self) -> dict:
+        per = [e.stats() for e in self.engines]
+        toks = sum(p.get("tokens", 0) for p in per)
+        return {
+            "replicas": len(self.engines),
+            "dispatch": self._dispatch.tolist(),
+            "devices": [str(m.devices.ravel()[0]) for m in self.meshes],
+            "tokens": toks,
+            "n": sum(p.get("n", 0) for p in per),
+            "queue_hwm": max((p.get("queue_hwm", 0) for p in per), default=0),
+            "prefill_fifo_hwm": max((p.get("prefill_fifo_hwm", 0)
+                                     for p in per), default=0),
+            "per_replica": per,
+        }

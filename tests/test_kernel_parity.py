@@ -1,0 +1,180 @@
+"""Golden kernel-parity sweep: EVERY Pallas kernel family against its
+``ref.py`` oracle over one shared grid of edge shapes and spike patterns.
+
+The per-kernel test files probe each kernel's own corners; this sweep is
+the regression net ACROSS the suite — a kernel change cannot pass its own
+file while silently breaking an edge (non-multiple-of-block M/K, singleton
+batch, all-zero input = every block skipped, all-one input = every block
+dense) or one of the two spike formats, because the same grid runs here
+for all seven families.
+
+Binary spike outputs must match the oracle EXACTLY (event skip and packing
+are exact transforms); f32 accumulations compare at tight tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.events import pack_spikes_ref, unpack_spikes_ref
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.fused_pe import fused_pe, fused_pe_ref
+from repro.kernels.lif_update import lif_update, lif_update_ref
+from repro.kernels.packed import pack_spikes, unpack_spikes
+from repro.kernels.qk_attention import qk_attention_fused, qk_attention_ref
+from repro.kernels.spike_matmul import spike_matmul, spike_matmul_ref
+from repro.kernels.w2ttfs_pool import w2ttfs_pool_fc, w2ttfs_pool_fc_ref
+
+# (M, K, N): block-aligned, non-multiple-of-block M/K/N, and singleton
+MATMUL_SHAPES = [(128, 128, 64), (130, 257, 33), (1, 7, 5)]
+# spike fill patterns: random events, no events (all blocks skipped),
+# saturated (every block dense)
+PATTERNS = ["bernoulli", "zeros", "ones"]
+FORMATS = ["dense", "packed"]
+
+
+def _spikes(shape, pattern, seed=0):
+    if pattern == "zeros":
+        return jnp.zeros(shape, jnp.int8)
+    if pattern == "ones":
+        return jnp.ones(shape, jnp.int8)
+    return (jax.random.uniform(jax.random.PRNGKey(seed), shape) < 0.2
+            ).astype(jnp.int8)
+
+
+def _weights(k, n, seed=1):
+    return jax.random.normal(jax.random.PRNGKey(seed), (k, n)) * 0.1
+
+
+# ------------------------------------------------------------- spike_matmul
+@pytest.mark.parametrize("m,k,n", MATMUL_SHAPES)
+@pytest.mark.parametrize("pattern", PATTERNS)
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_spike_matmul_parity(m, k, n, pattern, fmt):
+    x = _spikes((m, k), pattern, seed=m + k)
+    w = _weights(k, n)
+    op = pack_spikes(x) if fmt == "packed" else x
+    out = spike_matmul(op, w)
+    ref = spike_matmul_ref(x, w)
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    if pattern == "zeros":     # event skip is exact: no block may write
+        assert float(jnp.abs(out).max()) == 0.0
+
+
+# ----------------------------------------------------------------- fused_pe
+@pytest.mark.parametrize("m,k,n", MATMUL_SHAPES)
+@pytest.mark.parametrize("pattern", PATTERNS)
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_fused_pe_parity(m, k, n, pattern, fmt):
+    x = _spikes((m, k), pattern, seed=m + n)
+    w = _weights(k, n)
+    bias = jax.random.normal(jax.random.PRNGKey(3), (n,)) * 0.5
+    q = _spikes((m, 16), pattern, seed=m + n + 1)
+    op = pack_spikes(x) if fmt == "packed" else x
+    out = fused_pe(op, w, bias=bias, q=q, v_th=0.3)
+    spk_ref, v_ref, vld_ref = fused_pe_ref(x, w, bias=bias, q=q, v_th=0.3)
+    np.testing.assert_array_equal(np.asarray(out.spikes),
+                                  np.asarray(spk_ref))
+    assert out.v_next is None and v_ref is None   # stateless deployed form
+    np.testing.assert_array_equal(np.asarray(out.vld_next),
+                                  np.asarray(vld_ref))
+
+
+@pytest.mark.parametrize("m,k,n", [(130, 257, 33)])
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_fused_pe_pack_out_parity(m, k, n, pattern):
+    """pack_out chains the event-compressed HBM format: unpacking the
+    emitted PackedSpikes must reproduce the dense oracle bit-for-bit."""
+    x = _spikes((m, k), pattern, seed=7)
+    w = _weights(k, n)
+    out = fused_pe(x, w, pack_out=True)
+    spk_ref, _, vld_ref = fused_pe_ref(x, w)
+    np.testing.assert_array_equal(np.asarray(unpack_spikes(out.spikes)),
+                                  np.asarray(spk_ref))
+    np.testing.assert_array_equal(np.asarray(out.spikes.vld_cnt),
+                                  np.asarray(vld_ref))
+
+
+# ------------------------------------------------------------------- packed
+@pytest.mark.parametrize("m,k", [(128, 128), (130, 257), (1, 7)])
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_packed_roundtrip_parity(m, k, pattern):
+    x = _spikes((m, k), pattern, seed=m)
+    ps = pack_spikes(x)
+    ref = pack_spikes_ref(x)
+    np.testing.assert_array_equal(np.asarray(ps.words),
+                                  np.asarray(ref.words))
+    np.testing.assert_array_equal(np.asarray(ps.vld_cnt),
+                                  np.asarray(ref.vld_cnt))
+    np.testing.assert_array_equal(np.asarray(unpack_spikes(ps)),
+                                  np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(unpack_spikes_ref(ref)),
+                                  np.asarray(x))
+
+
+# --------------------------------------------------------------- lif_update
+@pytest.mark.parametrize("shape", [(1, 1), (3, 130), (2, 5, 33)])
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_lif_update_parity(shape, pattern):
+    if pattern == "bernoulli":
+        cur = jax.random.normal(jax.random.PRNGKey(0), shape) * 2
+    else:
+        cur = (jnp.zeros(shape) if pattern == "zeros"
+               else jnp.ones(shape))
+    v = jax.random.normal(jax.random.PRNGKey(1), shape)
+    s = _spikes(shape, pattern).astype(jnp.float32)
+    for soft in (False, True):
+        spk, vn = lif_update(cur, v, s, soft_reset=soft)
+        spk_r, vn_r = lif_update_ref(cur, v, s, soft_reset=soft)
+        np.testing.assert_array_equal(np.asarray(spk), np.asarray(spk_r))
+        np.testing.assert_allclose(np.asarray(vn), np.asarray(vn_r),
+                                   rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------------- qk_attention
+@pytest.mark.parametrize("b,n,d", [(1, 1, 16), (2, 100, 17), (1, 257, 64)])
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_qk_attention_parity(b, n, d, pattern):
+    q = _spikes((b, n, d), pattern, seed=n)
+    k = _spikes((b, n, d), "bernoulli", seed=n + 1)
+    out = qk_attention_fused(q, k)
+    ref = qk_attention_ref(q, k)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# -------------------------------------------------------------- w2ttfs_pool
+@pytest.mark.parametrize("b", [1, 5])        # singleton + non-multiple of 8
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_w2ttfs_pool_parity(b, pattern):
+    hw, c, cls, window = 4, 8, 10, 2
+    s = _spikes((b, hw, hw, c), pattern, seed=b).astype(jnp.float32)
+    w = _weights((hw // window) ** 2 * c, cls, seed=2)
+    bias = jax.random.normal(jax.random.PRNGKey(4), (cls,))
+    out = w2ttfs_pool_fc(s, w, bias, window=window)
+    ref = w2ttfs_pool_fc_ref(s, w, bias, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------- flash_attention
+@pytest.mark.parametrize("b,s,h,hkv,d", [(1, 1, 1, 1, 64),
+                                         (1, 100, 4, 2, 64),
+                                         (2, 64, 2, 2, 128)])
+def test_flash_attention_parity(b, s, h, hkv, d):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(s + d), 3)
+    q = jax.random.normal(kq, (b, s, h, d), jnp.float32)
+    k = jax.random.normal(kk, (b, s, hkv, d), jnp.float32)
+    v = jax.random.normal(kv, (b, s, hkv, d), jnp.float32)
+    out = flash_attention(q, k, v, q_block=64, kv_block=64)
+    ke = jnp.repeat(k, h // hkv, axis=2)
+    ve = jnp.repeat(v, h // hkv, axis=2)
+    ref = flash_attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(b * h, s, d),
+        ke.transpose(0, 2, 1, 3).reshape(b * h, s, d),
+        ve.transpose(0, 2, 1, 3).reshape(b * h, s, d),
+        causal=True, scale=d ** -0.5,
+    ).reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
