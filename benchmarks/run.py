@@ -23,13 +23,14 @@ def main() -> None:
     ap.add_argument("--sections", default="",
                     help="comma-separated section keys to run "
                          "(kd,resources,spikes,efficiency,timestep,"
-                         "kernels,serve); empty = all")
+                         "kernels,ops,serve); empty = all")
     args = ap.parse_args()
 
     from benchmarks.common import artifact_path
-    from benchmarks import (fig8_kd_accuracy, kernel_bench, serve_throughput,
-                            table1_resources, table2_spikes,
-                            table3_efficiency, timestep_ablation)
+    from benchmarks import (fig8_kd_accuracy, kernel_bench, ops_dispatch,
+                            serve_throughput, table1_resources,
+                            table2_spikes, table3_efficiency,
+                            timestep_ablation)
     sections = [
         ("kd", "Fig 8 — KD pipeline accuracy (KDT/F&Q/KD-QAT/W2TTFS)",
          fig8_kd_accuracy.main),
@@ -42,6 +43,8 @@ def main() -> None:
          timestep_ablation.main),
         ("kernels", "Kernel bench — Pallas kernels roofline + oracle timing",
          kernel_bench.main),
+        ("ops", "ops dispatch — repro.ops entry-point overhead vs direct "
+         "kernel calls (< 1% bar)", ops_dispatch.main),
         ("serve", "Serving throughput — continuous batching + elastic-FIFO "
          "chunked prefill + QKFormer (C4) mode", serve_throughput.main),
     ]

@@ -31,7 +31,7 @@ from repro.serve import Engine, EngineConfig
 
 
 def run_engine(arch: str, slots: int, n_req: int = 8, max_new: int = 8,
-               spike_format: str = "dense", prefill_chunk: int = 0,
+               policy: str | None = None, prefill_chunk: int = 0,
                **overrides) -> dict:
     cfg = reduced(get_config(arch), **overrides)
     model = build_model(cfg)
@@ -39,7 +39,7 @@ def run_engine(arch: str, slots: int, n_req: int = 8, max_new: int = 8,
     eng = Engine(model, params, EngineConfig(max_slots=slots, max_len=64,
                                              prefill_pad=16,
                                              prefill_chunk=prefill_chunk,
-                                             spike_format=spike_format))
+                                             policy=policy))
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for _ in range(n_req):
@@ -150,7 +150,7 @@ def main() -> None:
           f"{qk['ttft_s']:.2f}")
     # event-compressed serving: packed spike state + measured telemetry
     pk = run_engine("qwen3-1.7b", slots=4, spiking=True,
-                    attention_kind="qk_spiking", spike_format="packed")
+                    attention_kind="qk_spiking", policy="fused_packed")
     st = pk["stats"]
     print(f"qwen3-1.7b,qkformer(C4) packed,4,{pk['tok_s']:.1f},"
           f"{pk['ttft_s']:.2f}  # tok_s includes per-tick spike telemetry "

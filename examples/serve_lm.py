@@ -1,11 +1,19 @@
 """Continuous-batching serving demo: more requests than slots, mixed prompt
-lengths, greedy + sampled decoding, engine stats — now through the
-elastic-FIFO pipeline: chunked prefill (one long prompt no longer stalls
-the live decode slots), a bounded admission FIFO with backpressure on
-``submit``, and streaming consumption from the per-slot output FIFOs.
+lengths, greedy + sampled decoding, engine stats — through the elastic-FIFO
+pipeline: chunked prefill (one long prompt no longer stalls the live decode
+slots), a bounded admission FIFO with backpressure on ``submit``, and
+streaming consumption from the per-slot output FIFOs.
+
+How the model executes is one knob — the execution policy
+(``repro.ops.ExecutionPolicy``): ``--spiking --policy fused_packed`` serves
+the paper-C4 QKFormer mode on the fused event kernels with bit-packed spike
+state, and ``stats()`` then reports measured sparsity + packed bytes in
+flight.
 
   PYTHONPATH=src python examples/serve_lm.py [--arch qwen3-1.7b]
                                              [--replicas 2]
+                                             [--spiking]
+                                             [--policy fused_packed]
 """
 import argparse
 
@@ -21,14 +29,29 @@ def main():
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--spiking", action="store_true",
+                    help="serve the paper-C4 spiking QKFormer attention "
+                         "(token-local masks: O(1) decode, no KV cache)")
+    ap.add_argument("--policy", default=None,
+                    choices=["reference", "fused_dense", "fused_packed"],
+                    help="execution policy override for this engine "
+                         "(default: inherit the model config's policy)")
     args = ap.parse_args()
+    if args.policy and not args.spiking:
+        # the engine applies its policy to qk_spiking models only; without
+        # --spiking the softmax path would silently ignore the choice
+        ap.error("--policy requires --spiking (execution policies govern "
+                 "the spiking qk_spiking path)")
 
-    cfg = reduced(get_config(args.arch))
+    overrides = ({"spiking": True, "attention_kind": "qk_spiking"}
+                 if args.spiking else {})
+    cfg = reduced(get_config(args.arch), **overrides)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     ecfg = EngineConfig(max_slots=4, max_len=96, prefill_pad=16,
                         prefill_chunk=16,     # elastic chunked prefill
-                        max_queue=8)          # bounded admission FIFO
+                        max_queue=8,          # bounded admission FIFO
+                        policy=args.policy)
     if args.replicas > 1:
         eng = ReplicaRouter(model, params, ecfg, n_replicas=args.replicas)
     else:

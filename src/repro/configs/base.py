@@ -14,6 +14,8 @@ import jax.numpy as jnp
 
 from ..core.lif import LIFConfig
 from ..core.quant import QuantConfig
+from ..ops.compat import legacy_flags_policy
+from ..ops.policy import REFERENCE, ExecutionPolicy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,17 +61,19 @@ class ModelConfig:
     # --- paper technique flags ---
     spiking: bool = False            # LIF activations (C3), KD-student mode
     attention_kind: str = "softmax"  # softmax | qk_spiking (C4)
-    # use_event_kernels: deployed-inference only — route the qk_spiking
-    # path's dense->LIF projections and the binary-activation output matmul
-    # through the fused-PE / spike_matmul Pallas kernels (event-skipped, no
-    # surrogate gradient: do NOT enable for training)
-    use_event_kernels: bool = False
-    # spike_format: HBM format for spike tensors on the qk_spiking path.
-    # "packed" bit-packs the masked attention spike map (32 spikes/int32
-    # lane, core.events.PackedSpikes) before the output projection and
-    # caches the per-token spike state packed (~8x fewer spike bytes,
-    # bit-identical spikes); "dense" keeps int8 maps.
-    spike_format: str = "dense"
+    # policy: how the qk_spiking path executes (repro.ops.ExecutionPolicy
+    # or a preset name). "reference" (the None default) is the pure-jnp
+    # path — the only one with surrogate gradients, so training REQUIRES
+    # it; "fused_dense" routes the LIF projections and binary-activation
+    # matmuls through the fused-PE / spike_matmul Pallas kernels
+    # (deployed inference); "fused_packed" additionally ships every spike
+    # tensor bit-packed (32/int32 lane + popcount vld_cnt, ~8x fewer spike
+    # bytes) and caches the per-token spike state packed — all three are
+    # bit-identical in emitted spikes. Read via ``cfg.exec_policy``.
+    policy: Optional[Any] = None     # ExecutionPolicy | preset name | None
+    # deprecated flag pair -> policy (repro.ops.compat translates + warns)
+    use_event_kernels: Optional[bool] = None
+    spike_format: Optional[str] = None
     lif: LIFConfig = LIFConfig()
     quant: QuantConfig = QuantConfig()
     # --- numerics / perf knobs (hillclimb surface) ---
@@ -96,6 +100,27 @@ class ModelConfig:
     # (2x decode HBM traffic cut — the paper's FP8 deployment theme applied
     # to serving)
     kv_dtype: str = ""
+
+    def __post_init__(self):
+        # validate + warn on the deprecated flag pair ONCE at construction
+        # (dataclasses.replace round-trips re-run this, which is correct:
+        # each construction that still passes legacy flags is a legacy use)
+        resolved = legacy_flags_policy(
+            "ModelConfig", self.policy, self.use_event_kernels,
+            self.spike_format)
+        if self.policy is not None:
+            # normalize preset names so configs hash/compare consistently
+            # (they key jit caches in the serving engine)
+            object.__setattr__(self, "policy", resolved)
+
+    @property
+    def exec_policy(self) -> ExecutionPolicy:
+        """The resolved ExecutionPolicy (legacy flags translated; default
+        "reference")."""
+        pol = legacy_flags_policy(
+            "ModelConfig", self.policy, self.use_event_kernels,
+            self.spike_format, warn=False)
+        return pol if pol is not None else REFERENCE
 
     @property
     def resolved_head_dim(self) -> int:

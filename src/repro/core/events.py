@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +37,21 @@ Array = jax.Array
 
 LANE_BITS = 32                  # spikes per packed int32 word
 SPIKE_FORMATS = ("dense", "packed")
+
+
+class Blocks(NamedTuple):
+    """The TPU tile grid every event-metadata map and kernel agrees on."""
+    m: int = 128
+    n: int = 128
+    k: int = 128
+
+
+# THE canonical block choice: kernels tile on it, PackedSpikes pads to it,
+# and the occupancy/statistics helpers below measure on it — re-exported as
+# ``repro.ops.DEFAULT_BLOCKS`` (the public home). Keeping a single constant
+# is what makes a ``vld_cnt`` map produced by one kernel consumable by any
+# other without a re-count.
+DEFAULT_BLOCKS = Blocks()
 
 
 def block_count_map_2d(spikes: Array, block_m: int, block_k: int) -> Array:
@@ -83,17 +98,24 @@ def pad_to_blocks(x: Array, block_m: int, block_k: int) -> Array:
     return x
 
 
-def block_occupancy(spikes: Array, block_m: int = 8, block_k: int = 128) -> Array:
+def block_occupancy(spikes: Array, block_m: int = DEFAULT_BLOCKS.m,
+                    block_k: int = DEFAULT_BLOCKS.k) -> Array:
     """Fraction of NON-silent blocks — the sparsity actually exploitable on
     TPU (reported next to raw spike rate in the benchmarks; raw rate is what
-    an FPGA exploits, block occupancy is what we exploit)."""
+    an FPGA exploits, block occupancy is what we exploit).
+
+    Defaults come from ``DEFAULT_BLOCKS`` — the SAME tile grid the kernels
+    skip on — so the reported occupancy is the fraction of tiles the event
+    path actually elides (earlier revisions hardcoded an 8x128 grid here
+    that no kernel used, overstating exploitable sparsity)."""
     flat = spikes.reshape(-1, spikes.shape[-1])
     flat = pad_to_blocks(flat, block_m, block_k)
     cnt = block_count_map_2d(flat, block_m, block_k)
     return jnp.mean((cnt > 0).astype(jnp.float32))
 
 
-def event_stats(spikes: Array, block_m: int = 8, block_k: int = 128) -> dict:
+def event_stats(spikes: Array, block_m: int = DEFAULT_BLOCKS.m,
+                block_k: int = DEFAULT_BLOCKS.k) -> dict:
     """Spike-rate + block-occupancy summary used by Table II/III benchmarks."""
     s = spikes.astype(jnp.float32)
     return {

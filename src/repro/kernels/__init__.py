@@ -26,4 +26,9 @@ Kernels (mapped from the paper's FPGA units in DESIGN.md §6):
                     built because §Perf cell F measured the jnp-level flash
                     path spilling f32 score tiles to HBM (~20 s/step of the
                     qwen1.5-32b prefill_32k memory term)
+
+Models and serving reach these through ``repro.ops`` — the
+format-dispatching layer (SpikeTensor + ExecutionPolicy, docs/ops_api.md)
+each family registers its fused/reference implementations into. Direct
+kernel imports remain supported for tests and benchmarks.
 """

@@ -6,11 +6,14 @@ the multi-timestep scan used by the deployed models.
                     form; T>1 scans the stateful kernel carrying (v, s).
 
 Spike operands (``x``, ``q``, ``residual``) may be dense arrays OR
-``PackedSpikes`` (the bit-packed HBM interchange format), and ``pack_out``
-makes the emitted spike map leave packed too — a chained stack of layers
-then never materializes an unpacked spike tensor in HBM: each PackedSpikes
-output carries both the 32x-compressed words and the ``vld_cnt`` routing
-metadata the next kernel's block skip consumes.
+``PackedSpikes`` (the bit-packed HBM interchange format), and
+``out_format="packed"`` makes the emitted spike map leave packed too — a
+chained stack of layers then never materializes an unpacked spike tensor
+in HBM: each PackedSpikes output carries both the 32x-compressed words and
+the ``vld_cnt`` routing metadata the next kernel's block skip consumes.
+(The pre-policy ``pack_out`` boolean is still accepted through the
+``repro.ops.compat`` deprecation shim; prefer ``out_format`` or, one level
+up, a packed ``ExecutionPolicy`` on ``repro.ops.fused_pe``.)
 """
 from __future__ import annotations
 
@@ -26,6 +29,13 @@ from .fused_pe import fused_pe_pallas
 
 Array = jax.Array
 Spikes = Union[Array, PackedSpikes]
+
+
+def _out_format(pack_out: Optional[bool], out_format: Optional[str],
+                owner: str) -> str:
+    from ...ops.compat import resolve_out_format
+
+    return resolve_out_format(pack_out, out_format, owner=owner)
 
 
 class FusedPEOut(NamedTuple):
@@ -48,11 +58,6 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("tau", "v_th", "soft_reset",
-                                             "qk_threshold", "block_m",
-                                             "block_n", "block_k",
-                                             "emit_vld", "pack_out",
-                                             "interpret"))
 def fused_pe(x: Spikes, w: Array, *,
              bias: Array | None = None,
              residual: Spikes | None = None,
@@ -63,7 +68,8 @@ def fused_pe(x: Spikes, w: Array, *,
              tau: float = 0.5, v_th: float = 1.0, soft_reset: bool = False,
              qk_threshold: float = 1.0,
              block_m: int = 128, block_n: int = 128, block_k: int = 128,
-             emit_vld: bool = True, pack_out: bool = False,
+             emit_vld: bool = True, out_format: str | None = None,
+             pack_out: bool | None = None,
              interpret: bool | None = None) -> FusedPEOut:
     """One fused PE layer: spikes/v_next/vld_next = PE(x, w, ...).
 
@@ -75,8 +81,37 @@ def fused_pe(x: Spikes, w: Array, *,
     the QKFormer write-back mask. ``vld_cnt`` is the [M/bm, K/bk] input
     metadata — pass a previous layer's ``vld_next`` to chain the on-the-fly
     dataflow; leave None to compute it here (a PackedSpikes x already
-    carries it). ``pack_out`` emits the spike map bit-packed.
+    carries it). ``out_format="packed"`` emits the spike map bit-packed
+    (the deprecated boolean form routes through ``repro.ops.compat``).
     """
+    fmt = _out_format(pack_out, out_format, "fused_pe")
+    return _fused_pe(x, w, bias=bias, residual=residual, v_prev=v_prev,
+                     s_prev=s_prev, q=q, vld_cnt=vld_cnt, tau=tau, v_th=v_th,
+                     soft_reset=soft_reset, qk_threshold=qk_threshold,
+                     block_m=block_m, block_n=block_n, block_k=block_k,
+                     emit_vld=emit_vld, out_format=fmt, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "v_th", "soft_reset",
+                                             "qk_threshold", "block_m",
+                                             "block_n", "block_k",
+                                             "emit_vld", "out_format",
+                                             "interpret"))
+def _fused_pe(x: Spikes, w: Array, *,
+              bias: Array | None = None,
+              residual: Spikes | None = None,
+              v_prev: Array | None = None,
+              s_prev: Array | None = None,
+              q: Spikes | None = None,
+              vld_cnt: Array | None = None,
+              tau: float = 0.5, v_th: float = 1.0, soft_reset: bool = False,
+              qk_threshold: float = 1.0,
+              block_m: int = 128, block_n: int = 128, block_k: int = 128,
+              emit_vld: bool = True, out_format: str = "dense",
+              interpret: bool | None = None) -> FusedPEOut:
+    """Jitted core of ``fused_pe`` (all shims resolved: ``out_format`` is a
+    plain static string here)."""
+    pack_out = out_format == "packed"
     if interpret is None:
         interpret = not _on_tpu()
     packed_in = isinstance(x, PackedSpikes)
@@ -158,7 +193,8 @@ def fused_pe_layer(spk: Spikes, w: Array, *,
                    tau: float = 0.5, v_th: float = 1.0,
                    soft_reset: bool = False, qk_threshold: float = 1.0,
                    block_m: int = 128, block_n: int = 128,
-                   block_k: int = 128, pack_out: bool = False,
+                   block_k: int = 128, out_format: str | None = None,
+                   pack_out: bool | None = None,
                    interpret: bool | None = None
                    ) -> tuple[Spikes, Optional[Array]]:
     """Multi-timestep fused layer over [T, M, K] inputs (dense or packed).
@@ -169,12 +205,14 @@ def fused_pe_layer(spk: Spikes, w: Array, *,
     v[0] = 0, s[0] = 0.
 
     ``residual`` / ``q`` / ``vld_cnt`` are per-timestep ([T, ...]) or None.
-    ``pack_out`` returns the emitted spikes as a [T, ...] PackedSpikes; for
-    T>1 the stateful scan needs the dense per-step spikes for the reset
-    carry, so the pack happens on write-out of each step's EMITTED map.
-    Returns (spikes [T, M, N] int8 | PackedSpikes,
-             vld_next [T, M/bm, N/bn] int32).
+    ``out_format="packed"`` returns the emitted spikes as a [T, ...]
+    PackedSpikes; for T>1 the stateful scan needs the dense per-step spikes
+    for the reset carry, so the pack happens on write-out of each step's
+    EMITTED map. Returns (spikes [T, M, N] int8 | PackedSpikes,
+    vld_next [T, M/bm, N/bn] int32).
     """
+    fmt = _out_format(pack_out, out_format, "fused_pe_layer")
+    packed_out = fmt == "packed"
     t, m, _ = spk.shape
     n = w.shape[1]
     kw = dict(bias=bias, tau=tau, v_th=v_th, soft_reset=soft_reset,
@@ -185,8 +223,8 @@ def fused_pe_layer(spk: Spikes, w: Array, *,
         out = fused_pe(spk[0], w, residual=None if residual is None
                        else residual[0], q=None if q is None else q[0],
                        vld_cnt=None if vld_cnt is None else vld_cnt[0],
-                       pack_out=pack_out, **kw)
-        if pack_out:
+                       out_format=fmt, **kw)
+        if packed_out:
             return _stack_packed([out.spikes]), out.vld_next[None]
         return out.spikes[None], out.vld_next[None]
 
@@ -222,7 +260,7 @@ def fused_pe_layer(spk: Spikes, w: Array, *,
             None if vld_cnt is None else vld_cnt[ti])
         spikes_ts.append(spk_t)
         vld_ts.append(vld_t)
-    if pack_out:
+    if packed_out:
         from ..packed import pack_spikes
         packed = [pack_spikes(s, block_m=block_m, block_k=block_n)
                   for s in spikes_ts]

@@ -25,8 +25,10 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from .. import ops
 from ..configs.base import ModelConfig
 from ..core.qk_attention import qk_token_mask
+from ..ops import SpikeTensor
 from .layers import (apply_rope, causal_mask, dense_apply, dense_init,
                      maybe_spike, rmsnorm_apply, rmsnorm_init)
 from .sharding import shard_act
@@ -191,7 +193,7 @@ def attn_prefill(p: dict, cfg: ModelConfig, x: Array, positions: Array,
     b, s, _ = x.shape
     if cfg.attention_kind == "qk_spiking":
         empty = jnp.zeros((b, 0, hkv, dh), x.dtype)
-        if cfg.spike_format == "packed":
+        if cfg.exec_policy.packed:
             # cache the last token's masked spike map BIT-PACKED — the
             # engine's per-slot spike state (8x fewer bytes than int8; the
             # telemetry popcounts it for measured sparsity)
@@ -246,7 +248,7 @@ def attn_append(p: dict, cfg: ModelConfig, x: Array,
     if cfg.attention_kind == "qk_spiking":
         # token-local: the chunk is self-contained; packed mode refreshes
         # the per-slot spike state with the chunk's last token
-        if cfg.spike_format == "packed":
+        if cfg.exec_policy.packed:
             out, state = _qk_spiking_apply(p, cfg, x, h, hkv,
                                            return_spike_state=True)
             return out, (state, cache_v)
@@ -303,7 +305,7 @@ def attn_decode(p: dict, cfg: ModelConfig, x: Array, pos: Array,
     scale = dh ** -0.5
 
     if cfg.attention_kind == "qk_spiking":
-        if cfg.spike_format == "packed":
+        if cfg.exec_policy.packed:
             out, state = _qk_spiking_apply(p, cfg, x, h, hkv,
                                            return_spike_state=True)
             return out, (state, cache_v)
@@ -393,6 +395,16 @@ def _packed_token_state(out_last: Array) -> Array:
     return pack_words(padded)[:, None, None, :]
 
 
+def _token_state(st: SpikeTensor, b: int, s: int) -> Array:
+    """Last token's masked spike map as packed [B, 1, 1, W] int32 — the
+    per-slot state the serving engine caches, extracted without unpacking
+    when the map is already packed."""
+    if st.is_packed:
+        dw = st.data.shape[-1]
+        return st.data[:b * s].reshape(b, s, dw)[:, -1][:, None, None, :]
+    return _packed_token_state(st.data.reshape(b, s, -1)[:, -1])
+
+
 def _qk_spiking_apply(p: dict, cfg: ModelConfig, x: Array,
                       h: int, hkv: int, *, return_spike_state: bool = False):
     """QKFormer token attention on LIF spikes (paper Fig 5, on-the-fly form).
@@ -400,20 +412,22 @@ def _qk_spiking_apply(p: dict, cfg: ModelConfig, x: Array,
     Per head: Q,K spike maps [B,S,h,Dh]; token mask from Q row-sum gates K.
     No RoPE (spike trains carry no phase), no cache (mask is token-local).
 
-    With ``cfg.use_event_kernels`` (deployed serving path) the chain runs
-    NEURAL's fused PE dataflow: wq/wk projections + LIF threshold are single
-    fused Pallas passes (no f32 pre-activation round-trip); with one head
-    the QK token mask is applied inside the K pass's write-back (the full
-    Fig 5 fusion — per-head masks need per-head row sums, so multi-head
-    models mask outside); and the output projection consumes the binary
-    masked spikes through the event-skipped ``spike_matmul``. Forward-exact
-    vs the jnp path; inference only (no surrogate gradient).
+    ``cfg.exec_policy`` selects the execution (one body, no format forks):
 
-    With ``cfg.spike_format == "packed"`` the masked spike map crosses HBM
-    bit-packed (PackedSpikes): single-head models keep the whole chain
-    packed (the Q operand's row sums are in-kernel popcounts and the K
-    pass's output leaves packed); multi-head models pack the masked map
-    before the event-skipped output projection. Bit-identical spikes.
+      * fused policies (deployed serving path) run NEURAL's fused PE
+        dataflow — wq/wk projections + LIF threshold are single fused
+        Pallas passes (``ops.dense_lif``; no f32 pre-activation
+        round-trip); with one head the QK token mask is applied inside the
+        K pass's write-back (the full Fig 5 fusion — per-head masks need
+        per-head row sums, so multi-head models mask outside); the output
+        projection consumes the masked spikes through the event-skipped
+        ``ops.matmul``. Forward-exact vs the reference path; inference
+        only (no surrogate gradient).
+      * a packed policy ships the spike maps between passes bit-packed:
+        single-head models keep the whole chain packed (the Q operand's
+        row sums are in-kernel popcounts and the K pass's output leaves
+        packed); multi-head models pack the masked map before the output
+        projection. Bit-identical spikes.
 
     ``return_spike_state`` additionally returns the LAST token's masked
     spike map packed ([B, 1, 1, W] int32) — the state the serving engine
@@ -421,52 +435,30 @@ def _qk_spiking_apply(p: dict, cfg: ModelConfig, x: Array,
     """
     b, s, _ = x.shape
     dh = cfg.resolved_head_dim
-    packed = cfg.spike_format == "packed"
+    pol = cfg.exec_policy
     state = None
-    if cfg.use_event_kernels:
-        from ..kernels.packed import pack_spikes
-        from ..kernels.spike_matmul import spike_matmul
-        from .layers import fused_dense_lif
-
-        if packed and h == 1 and hkv == 1:
-            # fully event-compressed Fig 5 chain: Q packed, K pass masks on
-            # write-back and emits packed, wo consumes packed — the masked
-            # spike map never exists dense
-            q_ps = fused_dense_lif(p["wq"], x, cfg.lif, pack_out=True)
-            out_ps = fused_dense_lif(p["wk"], x, cfg.lif, q=q_ps,
-                                     qk_threshold=cfg.lif.v_th,
-                                     pack_out=True)
-            proj = spike_matmul(out_ps, p["wo"]["w"]).astype(x.dtype)
-            if return_spike_state:
-                dw = out_ps.words.shape[-1]
-                state = out_ps.words[:b * s].reshape(b, s, dw)[
-                    :, -1][:, None, None, :]
+    if pol.fused:
+        if h == 1 and hkv == 1:
+            # fully fused Fig 5 chain: the K pass masks on write-back, and
+            # under a packed policy the masked map never exists dense
+            q_st = ops.dense_lif(p["wq"], x, cfg.lif, policy=pol)
+            out_st = ops.dense_lif(p["wk"], x, cfg.lif, q=q_st,
+                                   qk_threshold=cfg.lif.v_th, policy=pol)
         else:
-            q = fused_dense_lif(p["wq"], x, cfg.lif).reshape(b, s, h, dh)
-            if h == 1 and hkv == 1:
-                out = fused_dense_lif(p["wk"], x, cfg.lif,
-                                      q=q.reshape(b, s, dh),
-                                      qk_threshold=cfg.lif.v_th)
-                out = out.reshape(b, s, h, dh)
-            else:
-                k = fused_dense_lif(p["wk"], x, cfg.lif
-                                    ).reshape(b, s, hkv, dh)
-                k = _expand_kv(k, h)
-                mask = (q.astype(jnp.float32).sum(axis=-1, keepdims=True)
-                        >= cfg.lif.v_th)
-                out = k * mask.astype(k.dtype)
-            flat = out.reshape(b * s, h * dh)
-            if packed:              # event-compressed HBM hop into wo
-                ps = pack_spikes(flat.astype(jnp.int8))
-                proj = spike_matmul(ps, p["wo"]["w"]).astype(x.dtype)
-                if return_spike_state:
-                    dw = ps.words.shape[-1]
-                    state = ps.words[:b * s].reshape(b, s, dw)[
-                        :, -1][:, None, None, :]
-            else:
-                proj = spike_matmul(flat, p["wo"]["w"]).astype(x.dtype)
-                if return_spike_state:
-                    state = _packed_token_state(flat.reshape(b, s, -1)[:, -1])
+            dense_pol = ops.ExecutionPolicy("fused", "dense")
+            q = ops.dense_lif(p["wq"], x, cfg.lif, policy=dense_pol
+                              ).data.reshape(b, s, h, dh)
+            k = ops.dense_lif(p["wk"], x, cfg.lif, policy=dense_pol
+                              ).data.reshape(b, s, hkv, dh)
+            k = _expand_kv(k, h)
+            mask = (q.astype(jnp.float32).sum(axis=-1, keepdims=True)
+                    >= cfg.lif.v_th)
+            flat = (k * mask.astype(k.dtype)).reshape(b * s, h * dh)
+            out_st = (ops.pack(flat.astype(jnp.int8)) if pol.packed
+                      else SpikeTensor.dense(flat))
+        proj = ops.matmul(out_st, p["wo"]["w"], policy=pol).astype(x.dtype)
+        if return_spike_state:
+            state = _token_state(out_st, b, s)
         if "b" in p["wo"]:
             proj = proj + p["wo"]["b"].astype(proj.dtype)
         proj = proj.reshape(b, s, -1)

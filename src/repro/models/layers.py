@@ -114,41 +114,31 @@ def maybe_spike(x: Array, spiking: bool, lif: LIFConfig) -> Array:
 
 def fused_dense_lif(p: dict, x: Array, lif: LIFConfig, *,
                     q=None, qk_threshold: float = 1.0,
-                    pack_out: bool = False):
+                    policy=None, pack_out: bool | None = None):
     """dense(x) -> LIF spikes as ONE fused PE pass (deployed inference).
 
     The LM analogue of NEURAL's PE dataflow: the projection's f32
     pre-activation never round-trips HBM — the LIF threshold fires
     in-register and int8 spikes are written back (optionally gated by the
-    QK token mask from ``q``'s row sums, the Fig 5 write-back fusion;
-    ``q`` may itself be a ``PackedSpikes``, whose row sums are popcounts).
-    ``x`` is the dense residual stream, so no metadata pass is spent on it
-    (a ones map: dense blocks are never silent). Forward-exact vs
+    QK token mask from ``q``'s row sums, the Fig 5 write-back fusion; a
+    packed ``q``'s row sums are popcounts). Forward-exact vs
     ``maybe_spike(dense_apply(p, x), True, lif)``; no surrogate gradient —
     inference only.
 
-    x: [..., Din] -> int8 spikes [..., Dout]; with ``pack_out`` the spikes
-    leave bit-packed as a 2-D ``PackedSpikes`` over the flattened
-    [tokens, Dout] layout (the event-compressed HBM format).
+    Thin veneer over ``repro.ops.dense_lif``: returns a 2-D ``SpikeTensor``
+    over the flattened [tokens, Dout] layout in the policy's format (the
+    deprecated boolean form routes through ``repro.ops.compat``).
     """
-    from ..core.events import PackedSpikes
-    from ..kernels.fused_pe import fused_pe
+    from .. import ops
 
-    shape = x.shape
-    flat = x.reshape(-1, shape[-1])
-    m, k = flat.shape
-    bm, bk = 128, 128
-    gm, gk = -(-m // bm), -(-k // bk)
-    dense_vld = jnp.ones((gm, gk), jnp.int32)
-    if q is not None and not isinstance(q, PackedSpikes):
-        q = q.reshape(m, -1)
-    out = fused_pe(flat, p["w"], bias=p.get("b"), vld_cnt=dense_vld,
-                   q=q, qk_threshold=qk_threshold,
-                   tau=lif.tau, v_th=lif.v_th, soft_reset=lif.soft_reset,
-                   emit_vld=pack_out, pack_out=pack_out)
-    if pack_out:
-        return out.spikes
-    return out.spikes.reshape(*shape[:-1], p["w"].shape[1])
+    if pack_out is not None:
+        assert policy is None, "pass policy= or the deprecated flag, not both"
+        fmt = ops.resolve_out_format(pack_out, None, owner="fused_dense_lif")
+        policy = ops.ExecutionPolicy("fused", fmt)
+    elif policy is None:
+        policy = ops.FUSED_DENSE
+    return ops.dense_lif(p, x, lif, q=q, qk_threshold=qk_threshold,
+                         policy=policy)
 
 
 # ------------------------------------------------------------- misc numerics

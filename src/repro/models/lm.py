@@ -557,7 +557,7 @@ class LM:
         def attn_entry(lead):
             if cfg.attention_kind == "qk_spiking":
                 empty = jnp.zeros((lead, batch_size, 0, hkv, dh), kv_dtype)
-                if cfg.spike_format == "packed":
+                if cfg.exec_policy.packed:
                     # per-slot spike state, BIT-PACKED (32 spikes/int32
                     # word): one row of masked-attention spikes per layer —
                     # O(1) in sequence length, 8x smaller than int8

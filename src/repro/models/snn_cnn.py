@@ -22,10 +22,12 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from .. import ops
 from ..core.lif import LIFConfig, lif_multistep
 from ..core.quant import QuantConfig, fake_quant, fuse_bn_into_conv, fuse_bn_into_linear, quantize_fixed
 from ..core.qk_attention import qk_token_mask, qk_channel_mask
 from ..core.w2ttfs import w2ttfs_classifier, avgpool_classifier
+from ..ops import SpikeTensor
 from . import nn
 
 Array = jax.Array
@@ -45,15 +47,32 @@ class SNNCNNConfig:
     qk_blocks: int = 1
     qk_mask_mode: str = "threshold"  # threshold | or  (Fig 5 atten_reg = "or")
     dtype: Any = jnp.float32
-    # route binary-activation matmuls through the event-driven Pallas
-    # kernel (C3): deployed-inference path only (apply_fused)
-    use_event_kernels: bool = False
-    # HBM format for inter-layer spike tensors on the event path:
-    # "packed" ships every spike map bit-packed (32/int32 lane + popcount
-    # vld_cnt, core.events.PackedSpikes — ~8x fewer spike bytes, bit-
-    # identical spikes); "dense" keeps the int8 maps of the pre-compression
-    # pipeline
-    spike_format: str = "packed"
+    # policy: how apply_fused (the deployed-inference path) executes —
+    # "reference" (the None default; pure jnp), "fused_dense" (event-driven
+    # Pallas kernels, int8 maps between layers), or "fused_packed" (event
+    # kernels + bit-packed inter-layer spike tensors, ~8x fewer spike
+    # bytes). All three emit bit-identical spikes; see
+    # repro.ops.ExecutionPolicy.
+    policy: Optional[Any] = None    # ExecutionPolicy | preset name | None
+    # deprecated flag pair -> policy (repro.ops.compat translates + warns);
+    # this model's historical default spike format was "packed", so a bare
+    # legacy event-kernel flag maps to "fused_packed"
+    use_event_kernels: Optional[bool] = None
+    spike_format: Optional[str] = None
+
+    def __post_init__(self):
+        resolved = ops.legacy_flags_policy(
+            "SNNCNNConfig", self.policy, self.use_event_kernels,
+            self.spike_format, default_format="packed")
+        if self.policy is not None:
+            object.__setattr__(self, "policy", resolved)
+
+    @property
+    def exec_policy(self) -> ops.ExecutionPolicy:
+        pol = ops.legacy_flags_policy(
+            "SNNCNNConfig", self.policy, self.use_event_kernels,
+            self.spike_format, default_format="packed", warn=False)
+        return pol if pol is not None else ops.REFERENCE
 
 
 # --------------------------------------------------------------- arch tables
@@ -314,315 +333,224 @@ def fuse_model(variables: dict, cfg: SNNCNNConfig) -> list:
     return fused
 
 
-def _fused_conv_lif(p: dict, x_spk: Array, stride: int, cfg: SNNCNNConfig,
-                    *, residual: Array | None = None) -> tuple[Array, Array]:
-    """conv(spikes) + bias + LIF as ONE fused PE pass (conv-as-matmul).
+def _account(aux: dict, st: SpikeTensor, packed: bool) -> SpikeTensor:
+    """HBM accounting for every spike tensor shipped between kernels, in
+    whatever format it shipped."""
+    aux["spike_hbm_bytes"] += st.hbm_bytes
+    if packed:
+        aux["spike_hbm_packed_bytes"] += st.hbm_bytes
+        aux["spike_hbm_dense_bytes"] += st.dense_bytes
+    return st
 
-    x_spk: [T, B, H, W, C] binary spike maps. The 3x3/1x1 conv becomes an
-    im2col spike matmul — patches of binary maps are binary, so silent
-    VMEM blocks are skipped on the vld_cnt metadata, the LIF threshold is
-    applied in-register, and the layer's output count map is emitted on the
-    fly. ``residual`` (f32 membrane current or spikes, [T, B, Ho, Wo, Cout])
-    is added before the threshold (MS-ResNet shortcut).
 
-    Returns (spikes [T, B, Ho, Wo, Cout], vld_next [T, Mo/bm, Cout/bn]).
+def _apply_fused_event(fused_params: list, images: Array, cfg: SNNCNNConfig,
+                       policy: "ops.ExecutionPolicy") -> tuple[Array, dict]:
+    """Deployed inference on the event-driven kernels — ONE format-agnostic
+    body for both HBM formats (this used to be two hand-maintained forks).
+
+    Every inter-layer activation is a ``SpikeTensor`` in token layout
+    [T, B*H*W, C]; the format (int8 maps vs bit-packed words) comes from
+    the policy and every format-sensitive step is an ``ops.*`` call:
+
+      * convs are ``ops.im2col`` patches (channel-preserving, so the packed
+        variant im2cols the WORD tensor) driven through
+        ``ops.fused_pe_layer`` — conv + bias + LIF threshold in one fused
+        PE pass, with the emitted spikes leaving in the policy's format;
+      * max-pools are ``ops.pool`` (packed: bitwise OR of the words);
+      * the QKFormer block chains five fused passes; each consumes the
+        ``vld_cnt`` its producer emitted in-kernel (``aux["vld_reused"]``
+        counts the hand-offs) and the Q operand's row sums are popcounts
+        when packed;
+      * only the W2TTFS head materializes a dense map (``ops.unpack``).
+
+    ``aux["spike_hbm_bytes"]`` accounts every spike tensor shipped between
+    kernels in its shipped format (plus the packed/dense pair of keys for
+    the compression ratio when the policy is packed). Bit-identical spikes
+    and logits across "fused_packed" / "fused_dense" / "reference".
     """
-    from ..kernels.fused_pe import fused_pe_layer
-
-    t, b, h, w, c = x_spk.shape
-    kh, kw = p["conv"]["w"].shape[:2]
-    pat = nn.im2col(x_spk.reshape(t * b, h, w, c).astype(jnp.int8),
-                    kh, kw, stride)
-    tb2, ho, wo, kdim = pat.shape
-    pat = pat.reshape(t, b * ho * wo, kdim)
-    res = None
-    if residual is not None:
-        res = residual.reshape(t, b * ho * wo, -1).astype(jnp.float32)
-    w2d = nn.conv_weights_as_matmul(p["conv"]["w"])
-    spikes, vld_next = fused_pe_layer(
-        pat, w2d, bias=p["conv"].get("b"), residual=res,
-        tau=cfg.lif.tau, v_th=cfg.lif.v_th, soft_reset=cfg.lif.soft_reset)
-    cout = w2d.shape[1]
-    return spikes.reshape(t, b, ho, wo, cout).astype(cfg.dtype), vld_next
-
-
-def _apply_fused_packed(fused_params: list, images: Array,
-                        cfg: SNNCNNConfig) -> tuple[Array, dict]:
-    """Deployed inference with the event kernels AND event compression:
-    every inter-layer spike tensor lives in HBM bit-packed (PackedSpikes —
-    32 spikes per int32 lane + the popcount-derived vld_cnt map), and no
-    unpacked spike tensor is ever materialized between layers:
-
-      * fused convs consume ``im2col_packed`` patches of the previous
-        layer's WORDS (patch extraction is channel-preserving, so the word
-        tensor im2cols unchanged) against channel-padded weights, and emit
-        their spike output packed (``pack_out``);
-      * max-pools are bitwise ORs of the words (pool of binary == OR);
-      * the QKFormer block chains five packed-in/packed-out fused passes,
-        with the Q operand's row sums taken by popcount in-kernel;
-      * metadata boundaries (im2col, pooling) rebuild vld_cnt by popcount
-        over the WORDS — 1/32nd of the bytes a dense re-read would touch;
-      * only the W2TTFS head unpacks (it needs dense window counts).
-
-    ``aux["spike_hbm_packed_bytes"]`` / ``aux["spike_hbm_dense_bytes"]``
-    account every spike tensor shipped between kernels in each format.
-    """
-    from ..core.events import packed_from_words
-    from ..kernels.fused_pe import fused_pe_layer
-    from ..kernels.packed import pack_spikes, unpack_spikes
-    from ..kernels.spike_matmul import spike_matmul
-
     layers = build_layers(cfg)
     t = cfg.timesteps
     x = jnp.broadcast_to(images[None], (t, *images.shape)).astype(cfg.dtype)
-    aux = {"spikes": {}, "vld_reused": 0,
-           "spike_hbm_packed_bytes": 0, "spike_hbm_dense_bytes": 0}
-    lifkw = dict(tau=cfg.lif.tau, v_th=cfg.lif.v_th,
-                 soft_reset=cfg.lif.soft_reset)
-    xps = None                  # PackedSpikes [T, B*H*W, C] once spiking
-    spatial = None              # (B, H, W, C)
+    aux = {"spikes": {}, "vld_reused": 0, "spike_hbm_bytes": 0}
+    if policy.packed:
+        aux["spike_hbm_packed_bytes"] = 0
+        aux["spike_hbm_dense_bytes"] = 0
+    st: Optional[SpikeTensor] = None   # [T, B*H*W, C] once the net spikes
+    spatial = None                     # (B, H, W, C)
     li = 0
 
-    def account(ps):
-        aux["spike_hbm_packed_bytes"] += ps.packed_bytes
-        aux["spike_hbm_dense_bytes"] += ps.dense_bytes
-        return ps
-
-    def spatial_words(ps, sp):
-        b, h, w_, _ = sp
-        cw = ps.words.shape[-1]
-        return ps.words[:, :b * h * w_].reshape(t * b, h, w_, cw)
-
-    def packed_patches(ps, sp, kh, kw, stride):
-        """im2col on the word tensor -> kernel-ready packed patch matrix."""
-        b = sp[0]
-        pat = nn.im2col_packed(spatial_words(ps, sp), kh, kw, stride)
-        _, ho, wo, kww = pat.shape
-        pat3 = pat.reshape(t, b * ho * wo, kww)
-        return packed_from_words(pat3, (t, b * ho * wo, kww * 32)), (ho, wo)
-
-    def conv_packed(pc, ps, sp, stride, residual=None):
-        """conv(packed spikes) + bias + LIF, packed in AND out."""
+    def conv_lif(pc: dict, s_in: SpikeTensor, sp: tuple, stride: int,
+                 residual=None) -> tuple[SpikeTensor, tuple]:
+        """conv(spikes) + bias + LIF as ONE fused PE pass (conv-as-matmul),
+        emitting in the policy's format."""
         kh, kw = pc["w"].shape[:2]
-        cw = ps.words.shape[-1]
-        ps_pat, (ho, wo) = packed_patches(ps, sp, kh, kw, stride)
-        w2d = nn.conv_weights_as_matmul_packed(pc["w"], cw * 32)
-        spikes, _ = fused_pe_layer(ps_pat, w2d, bias=pc.get("b"),
-                                   residual=residual, pack_out=True, **lifkw)
-        return account(spikes), (sp[0], ho, wo, w2d.shape[1])
+        pat, (ho, wo) = ops.im2col(s_in, sp, kh, kw, stride, t=t,
+                                   policy=policy)
+        w2d = ops.conv_matmul_weights(pc["w"], pat)
+        out = ops.fused_pe_layer(pat, w2d, bias=pc.get("b"),
+                                 residual=residual, lif_cfg=cfg.lif,
+                                 policy=policy)
+        return (_account(aux, out.spikes, policy.packed),
+                (sp[0], ho, wo, w2d.shape[1]))
 
-    def conv_current_packed(pc, ps, sp, stride):
-        """Shortcut conv: packed patches -> event matmul -> f32 current."""
+    def conv_current(pc: dict, s_in: SpikeTensor, sp: tuple,
+                     stride: int) -> Array:
+        """Shortcut conv: event-skipped matmul -> f32 membrane current
+        (no LIF — it joins conv2's fused pass as the residual operand)."""
         kh, kw = pc["w"].shape[:2]
-        cw = ps.words.shape[-1]
-        ps_pat, _ = packed_patches(ps, sp, kh, kw, stride)
-        w2d = nn.conv_weights_as_matmul_packed(pc["w"], cw * 32)
-        cur = jnp.stack([spike_matmul(ps_pat[ti], w2d) for ti in range(t)])
+        pat, _ = ops.im2col(s_in, sp, kh, kw, stride, t=t, policy=policy)
+        w2d = ops.conv_matmul_weights(pc["w"], pat)
+        cur = jnp.stack([ops.matmul(pat[ti], w2d, policy=policy)
+                         for ti in range(t)])
         return cur + pc["b"].astype(jnp.float32)
 
     for p, layer in zip(fused_params, layers):
         kind = layer[0]
         if kind == "conv_bn_lif":
             stride = layer[3]
-            if xps is not None:
-                xps, spatial = conv_packed(p["conv"], xps, spatial, stride)
+            if st is not None:
+                st, spatial = conv_lif(p["conv"], st, spatial, stride)
             else:
-                # analog input: dense conv + LIF, then enter the packed
-                # domain (the first binary map is the first compressible one)
+                # analog input: dense conv + LIF, then enter the spiking
+                # domain (the first binary map is the first event tensor)
                 cur = _per_step(lambda z: nn.conv_apply(p["conv"], z, stride),
                                 x)
                 spk = lif_multistep(cur, cfg.lif)
                 b, h, w_, c = spk.shape[1:]
-                xps = account(pack_spikes(
-                    spk.reshape(t, b * h * w_, c).astype(jnp.int8)))
+                flat = spk.reshape(t, b * h * w_, c).astype(jnp.int8)
+                st = _account(aux,
+                              ops.pack(flat) if policy.packed
+                              else SpikeTensor.dense(flat), policy.packed)
                 spatial = (b, h, w_, c)
         elif kind == "maxpool":
-            b, h, w_, c = spatial
-            pooled = nn.max_pool_packed(spatial_words(xps, spatial))
-            h2, w2 = pooled.shape[1], pooled.shape[2]
-            xps = account(packed_from_words(
-                pooled.reshape(t, b * h2 * w2, pooled.shape[3]),
-                (t, b * h2 * w2, c)))
-            spatial = (b, h2, w2, c)
+            st, (h2, w2) = ops.pool(st, spatial, t=t, policy=policy)
+            st = _account(aux, st, policy.packed)
+            spatial = (spatial[0], h2, w2, spatial[3])
         elif kind == "resblock":
             stride = layer[3]
-            s1, sp1 = conv_packed(p["conv1"], xps, spatial, stride)
+            s1, sp1 = conv_lif(p["conv1"], st, spatial, stride)
             if "conv_sc" in p:
-                sc = conv_current_packed(p["conv_sc"], xps, spatial, stride)
+                res = conv_current(p["conv_sc"], st, spatial, stride)
             else:
-                sc = xps            # identity: packed binary shortcut
-            xps, spatial = conv_packed(p["conv2"], s1, sp1, 1, residual=sc)
+                res = st            # identity: binary spike shortcut
+            st, spatial = conv_lif(p["conv2"], s1, sp1, 1, residual=res)
         elif kind == "qkformer":
-            # five packed-in/packed-out fused passes; every pass consumes
-            # the vld map its producer emitted in-kernel (and the packed Q
-            # operand's row sums are popcounts — no unpack anywhere)
-            tok = xps
-            q3, _ = fused_pe_layer(tok, p["q"]["w"], bias=p["q"]["b"],
-                                   pack_out=True, **lifkw)
-            attn3, _ = fused_pe_layer(tok, p["k"]["w"], bias=p["k"]["b"],
-                                      q=q3, qk_threshold=1.0,
-                                      pack_out=True, **lifkw)
-            y3, _ = fused_pe_layer(attn3, p["proj"]["w"], bias=p["proj"]["b"],
-                                   residual=tok, pack_out=True, **lifkw)
-            m13, _ = fused_pe_layer(y3, p["mlp1"]["w"], bias=p["mlp1"]["b"],
-                                    pack_out=True, **lifkw)
-            y23, _ = fused_pe_layer(m13, p["mlp2"]["w"], bias=p["mlp2"]["b"],
-                                    residual=y3, pack_out=True, **lifkw)
-            for ps in (q3, attn3, y3, m13, y23):
-                account(ps)
-            aux["vld_reused"] += 5
-            xps = y23
+            # five fused passes, format-agnostic: each consumes the vld map
+            # its producer emitted in-kernel (the on-the-fly dataflow), the
+            # K pass applies the QK token mask on write-back (Fig 5), and
+            # spike maps cross HBM in the policy's format throughout
+            tok = st
+            lifkw = dict(lif_cfg=cfg.lif, policy=policy)
+            q3 = ops.fused_pe_layer(tok, p["q"]["w"], bias=p["q"]["b"],
+                                    **lifkw).spikes
+            # atten_reg "or" mode == rowsum >= 1 on integer spike counts
+            attn3 = ops.fused_pe_layer(tok, p["k"]["w"], bias=p["k"]["b"],
+                                       q=q3, qk_threshold=1.0,
+                                       **lifkw).spikes
+            y3 = ops.fused_pe_layer(attn3, p["proj"]["w"],
+                                    bias=p["proj"]["b"], residual=tok,
+                                    **lifkw).spikes
+            m13 = ops.fused_pe_layer(y3, p["mlp1"]["w"], bias=p["mlp1"]["b"],
+                                     **lifkw).spikes
+            y23 = ops.fused_pe_layer(m13, p["mlp2"]["w"],
+                                     bias=p["mlp2"]["b"], residual=y3,
+                                     **lifkw).spikes
+            for s_ in (q3, attn3, y3, m13, y23):
+                _account(aux, s_, policy.packed)
+            aux["vld_reused"] += sum(
+                1 for s_ in (tok, tok, attn3, y3, m13)
+                if s_.vld_cnt is not None)
+            st = y23
         elif kind == "head":
             _, cin, size = layer
             b, h, w_, c = spatial
-            xd = unpack_spikes(xps).astype(cfg.dtype)
+            xd = ops.unpack(st, policy=policy).astype(cfg.dtype)
             xd = xd.reshape(t, b, h, w_, c)
             logits = jnp.mean(jax.vmap(
-                lambda st: w2ttfs_classifier(st, p["fc"]["w"], p["fc"]["b"],
-                                             size)
+                lambda s_t: w2ttfs_classifier(s_t, p["fc"]["w"],
+                                              p["fc"]["b"], size)
                 if cfg.head == "w2ttfs" else
-                avgpool_classifier(st, p["fc"]["w"], p["fc"]["b"], size))(xd),
-                axis=0)
+                avgpool_classifier(s_t, p["fc"]["w"], p["fc"]["b"],
+                                   size))(xd), axis=0)
         if kind != "head":
-            aux["spikes"][f"layer{li}"] = xps.vld_cnt.sum().astype(
-                jnp.float32)
+            aux["spikes"][f"layer{li}"] = st.count()
         li += 1
     aux["total_spikes"] = sum(aux["spikes"].values())
     return logits, aux
 
 
-def apply_fused(fused_params: list, images: Array, cfg: SNNCNNConfig) -> tuple[Array, dict]:
-    """Inference with the fused+quantized (deployment) model — conv+bias+LIF,
-    no BN. This is the computation NEURAL's EPA executes.
-
-    With ``cfg.use_event_kernels`` every binary-activation layer runs the
-    fused PE dataflow kernel (C3 + C4 in one Pallas pass): conv-as-matmul
-    spike matmul with vld_cnt block skipping, in-register LIF, QK token mask
-    on write-back, and on-the-fly emission of the NEXT layer's vld_cnt map.
-    The emitted metadata is chained layer-to-layer wherever the flattened
-    [tokens, channels] layout is preserved (resblock -> QKFormer -> QKFormer
-    chains); im2col and pooling reshuffle the layout, so those boundaries
-    recompute the map. ``aux["vld_reused"]`` counts the chained hand-offs.
-
-    With ``cfg.spike_format == "packed"`` (the default) the event path also
-    ships every inter-layer spike tensor bit-packed — see
-    ``_apply_fused_packed``; ``spike_format="dense"`` keeps int8 maps.
-    """
-    if cfg.use_event_kernels and cfg.spike_format == "packed":
-        return _apply_fused_packed(fused_params, images, cfg)
+def _apply_fused_reference(fused_params: list, images: Array,
+                           cfg: SNNCNNConfig) -> tuple[Array, dict]:
+    """Pure-jnp oracle for the deployed model (no Pallas kernels): the
+    numerics-debugging path and the parity baseline for the event body."""
     layers = build_layers(cfg)
     t = cfg.timesteps
-    ev = cfg.use_event_kernels
     x = jnp.broadcast_to(images[None], (t, *images.shape)).astype(cfg.dtype)
     aux = {"spikes": {}, "vld_reused": 0}
     li = 0
-    spiking_input = False       # first conv consumes the analog image
-    vld = None                  # on-the-fly metadata for x as [T, M, C]
     for p, layer in zip(fused_params, layers):
         kind = layer[0]
         if kind == "conv_bn_lif":
             stride = layer[3]
-            if ev and spiking_input:
-                x, vld = _fused_conv_lif(p, x, stride, cfg)
-            else:
-                cur = _per_step(lambda z: nn.conv_apply(p["conv"], z, stride), x)
-                x = lif_multistep(cur, cfg.lif)
-                vld = None
-            spiking_input = True
+            cur = _per_step(lambda z: nn.conv_apply(p["conv"], z, stride), x)
+            x = lif_multistep(cur, cfg.lif)
         elif kind == "maxpool":
             x = _per_step(nn.max_pool, x)
-            vld = None          # pooling reshuffles the token layout
         elif kind == "resblock":
             stride = layer[3]
-            if ev and spiking_input:
-                s1, _ = _fused_conv_lif({"conv": p["conv1"]}, x, stride, cfg)
-                if "conv_sc" in p:
-                    # 1x1 shortcut conv: binary input -> event matmul; its
-                    # output is a membrane CURRENT (no LIF), added as the
-                    # residual operand of conv2's fused pass
-                    from ..kernels.spike_matmul import spike_matmul
-                    tb_, h_, w_, c_ = x.shape[1:]
-                    scp = nn.im2col(
-                        x.reshape(t * tb_, h_, w_, c_).astype(jnp.int8),
-                        *p["conv_sc"]["w"].shape[:2], stride)
-                    sc = (spike_matmul(
-                        scp.reshape(-1, scp.shape[-1]),
-                        nn.conv_weights_as_matmul(p["conv_sc"]["w"]))
-                        + p["conv_sc"]["b"]).reshape(t, tb_, *scp.shape[1:3],
-                                                     -1)
-                else:
-                    sc = x
-                x, vld = _fused_conv_lif({"conv": p["conv2"]}, s1, 1, cfg,
-                                         residual=sc)
-            else:
-                cur1 = _per_step(lambda z: nn.conv_apply(p["conv1"], z, stride), x)
-                s1 = lif_multistep(cur1, cfg.lif)
-                cur2 = _per_step(lambda z: nn.conv_apply(p["conv2"], z, 1), s1)
-                sc = _per_step(lambda z: nn.conv_apply(p["conv_sc"], z, stride), x) if "conv_sc" in p else x
-                x = lif_multistep(cur2 + sc, cfg.lif)
-                vld = None
-            spiking_input = True
+            cur1 = _per_step(lambda z: nn.conv_apply(p["conv1"], z, stride),
+                             x)
+            s1 = lif_multistep(cur1, cfg.lif)
+            cur2 = _per_step(lambda z: nn.conv_apply(p["conv2"], z, 1), s1)
+            sc = _per_step(lambda z: nn.conv_apply(p["conv_sc"], z, stride),
+                           x) if "conv_sc" in p else x
+            x = lif_multistep(cur2 + sc, cfg.lif)
         elif kind == "qkformer":
             d = layer[1]
             tb = x.shape[:2]
             hw = x.shape[2] * x.shape[3]
             tok = x.reshape(*tb, hw, d)
-
-            if ev:
-                # fully fused event path (C3+C4): each linear+LIF is ONE
-                # fused PE pass; the K pass applies the QK token mask on
-                # write-back (Fig 5) and every pass emits the next pass's
-                # vld_cnt metadata — zero standalone reduction passes
-                from ..kernels.fused_pe import fused_pe_layer
-
-                tok3 = tok.reshape(t, tb[1] * hw, d).astype(jnp.int8)
-                tok_vld = vld   # previous layer's on-the-fly metadata
-                lifkw = dict(tau=cfg.lif.tau, v_th=cfg.lif.v_th,
-                             soft_reset=cfg.lif.soft_reset)
-
-                q3, _ = fused_pe_layer(tok3, p["q"]["w"], bias=p["q"]["b"],
-                                       vld_cnt=tok_vld, **lifkw)
-                # atten_reg "or" mode == rowsum >= 1 on integer spike counts
-                attn3, vld_a = fused_pe_layer(
-                    tok3, p["k"]["w"], bias=p["k"]["b"], vld_cnt=tok_vld,
-                    q=q3, qk_threshold=1.0, **lifkw)
-                y3, vld_y = fused_pe_layer(
-                    attn3, p["proj"]["w"], bias=p["proj"]["b"],
-                    residual=tok3, vld_cnt=vld_a, **lifkw)
-                m13, vld_m = fused_pe_layer(y3, p["mlp1"]["w"],
-                                            bias=p["mlp1"]["b"],
-                                            vld_cnt=vld_y, **lifkw)
-                y23, vld = fused_pe_layer(m13, p["mlp2"]["w"],
-                                          bias=p["mlp2"]["b"], residual=y3,
-                                          vld_cnt=vld_m, **lifkw)
-                # q+k consumed the inbound map; proj/mlp1/mlp2 consumed maps
-                # emitted by the pass right before them
-                aux["vld_reused"] += 3 + (2 if tok_vld is not None else 0)
-                x = y23.reshape(*tb, x.shape[2], x.shape[3], d
-                                ).astype(cfg.dtype)
-            else:
-                def smm(spk, w):
-                    return spk @ w
-
-                q = lif_multistep(smm(tok, p["q"]["w"]) + p["q"]["b"], cfg.lif)
-                k = lif_multistep(smm(tok, p["k"]["w"]) + p["k"]["b"], cfg.lif)
-                mask = qk_token_mask(q, "or")    # hardware atten_reg mode
-                attn = mask * k                  # still binary (mask x spikes)
-                y = lif_multistep(smm(attn, p["proj"]["w"]) + p["proj"]["b"] + tok,
-                                  cfg.lif)
-                m1 = lif_multistep(smm(y, p["mlp1"]["w"]) + p["mlp1"]["b"], cfg.lif)
-                y2 = lif_multistep(smm(m1, p["mlp2"]["w"]) + p["mlp2"]["b"] + y,
-                                   cfg.lif)
-                x = y2.reshape(*tb, x.shape[2], x.shape[3], d)
-                vld = None
+            q = lif_multistep(tok @ p["q"]["w"] + p["q"]["b"], cfg.lif)
+            k = lif_multistep(tok @ p["k"]["w"] + p["k"]["b"], cfg.lif)
+            mask = qk_token_mask(q, "or")    # hardware atten_reg mode
+            attn = mask * k                  # still binary (mask x spikes)
+            y = lif_multistep(attn @ p["proj"]["w"] + p["proj"]["b"] + tok,
+                              cfg.lif)
+            m1 = lif_multistep(y @ p["mlp1"]["w"] + p["mlp1"]["b"], cfg.lif)
+            y2 = lif_multistep(m1 @ p["mlp2"]["w"] + p["mlp2"]["b"] + y,
+                               cfg.lif)
+            x = y2.reshape(*tb, x.shape[2], x.shape[3], d)
         elif kind == "head":
             _, cin, size = layer
             logits = jnp.mean(jax.vmap(
-                lambda st: w2ttfs_classifier(st, p["fc"]["w"], p["fc"]["b"], size)
+                lambda s_t: w2ttfs_classifier(s_t, p["fc"]["w"],
+                                              p["fc"]["b"], size)
                 if cfg.head == "w2ttfs" else
-                avgpool_classifier(st, p["fc"]["w"], p["fc"]["b"], size))(x), axis=0)
+                avgpool_classifier(s_t, p["fc"]["w"], p["fc"]["b"],
+                                   size))(x), axis=0)
         if kind != "head":
             aux["spikes"][f"layer{li}"] = x.sum()
         li += 1
     aux["total_spikes"] = sum(aux["spikes"].values())
     return logits, aux
+
+
+def apply_fused(fused_params: list, images: Array, cfg: SNNCNNConfig,
+                policy=None) -> tuple[Array, dict]:
+    """Inference with the fused+quantized (deployment) model — conv+bias+LIF,
+    no BN. This is the computation NEURAL's EPA executes.
+
+    ``policy`` (or ``cfg.exec_policy`` when None) selects the execution
+    mode: "reference" runs the pure-jnp oracle; "fused_dense" runs every
+    binary-activation layer through the fused PE dataflow kernel (C3 + C4
+    in one Pallas pass: conv-as-matmul spike matmul with vld_cnt block
+    skipping, in-register LIF, QK token mask on write-back, on-the-fly
+    emission of the next layer's metadata); "fused_packed" additionally
+    ships every inter-layer spike tensor bit-packed. All three are
+    bit-identical in spikes and logits — the whole point of the hybrid
+    flow is one computation, many execution formats.
+    """
+    pol = ops.as_policy(policy, cfg.exec_policy)
+    if not pol.fused:
+        return _apply_fused_reference(fused_params, images, cfg)
+    return _apply_fused_event(fused_params, images, cfg, pol)

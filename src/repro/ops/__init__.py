@@ -1,0 +1,41 @@
+"""``repro.ops`` — the format-dispatching execution layer.
+
+NEURAL's core claim is ONE computing flow serving dense-data and
+sparse-event execution. This package is that flow's software API:
+
+  * ``SpikeTensor`` — the polymorphic spike-map currency (``dense`` |
+    ``packed`` variants, always carrying ``vld_cnt`` block metadata);
+  * ``ExecutionPolicy`` — one knob ("reference" | "fused_dense" |
+    "fused_packed") replacing the legacy per-call flag plumbing;
+  * entry points (``matmul``, ``lif``, ``fused_pe``, ``fused_pe_layer``,
+    ``pool``, ``im2col``, ``qk_mask``, ``pack``, ``unpack``,
+    ``attention``, ``dense_lif``, ``w2ttfs_head``) that dispatch on input
+    format and policy via a registry the kernel families plug into;
+  * ``repro.ops.compat`` — the ONLY home of the deprecated
+    ``use_event_kernels`` / ``spike_format`` / ``pack_out`` kwargs.
+
+See docs/ops_api.md for the full API and the old-flag -> policy migration
+table.
+"""
+from ..core.events import DEFAULT_BLOCKS, Blocks
+from .compat import (legacy_flags_policy, merge_engine_policy,
+                     resolve_out_format, with_policy)
+from .dispatch import (FusedOut, attention, conv_matmul_weights, dense_lif,
+                       fused_pe, fused_pe_layer, im2col, lif, matmul, pack,
+                       pool, qk_mask, unpack, w2ttfs_head)
+from .policy import (FUSED_DENSE, FUSED_PACKED, POLICIES, REFERENCE,
+                     ExecutionPolicy, as_policy)
+from .registry import implementations, lookup, register
+from .spike_tensor import SpikeTensor, Spikes
+
+__all__ = [
+    "DEFAULT_BLOCKS", "Blocks", "SpikeTensor", "Spikes",
+    "ExecutionPolicy", "POLICIES", "REFERENCE", "FUSED_DENSE",
+    "FUSED_PACKED", "as_policy",
+    "register", "lookup", "implementations",
+    "FusedOut", "matmul", "lif", "fused_pe", "fused_pe_layer", "pool",
+    "im2col", "conv_matmul_weights", "qk_mask", "pack", "unpack",
+    "attention", "dense_lif", "w2ttfs_head",
+    "legacy_flags_policy", "merge_engine_policy", "resolve_out_format",
+    "with_policy",
+]

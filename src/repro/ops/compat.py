@@ -1,0 +1,132 @@
+"""THE deprecation shim module for the pre-policy flag API.
+
+Every legacy knob — ``use_event_kernels=``, ``spike_format=``, and
+``pack_out=`` — funnels through here and ONLY here: the kwargs are still
+accepted at every call site that took them before the ``ExecutionPolicy``
+redesign, they emit a ``DeprecationWarning`` naming the replacement, and a
+CI grep guard (tools/check_no_legacy_flags.py) fails the build if any of
+those kwarg spellings appear as call sites outside this module and the
+test suite. New code passes ``policy=`` (an ``ExecutionPolicy`` or preset
+name) instead.
+
+Migration map (old flag combination -> policy):
+
+    (no flags)                                   -> "reference"
+    use_event_kernels=True                       -> "fused_dense"  [*]
+    use_event_kernels=True,  spike_format="packed" -> "fused_packed"
+    use_event_kernels=False, spike_format="packed" -> "reference_packed"
+    pack_out=True  (kernel-level)                -> out_format="packed"
+
+[*] SNNCNNConfig's historical default spike format was "packed", so its
+legacy translation maps a bare event-kernel flag to "fused_packed".
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Optional
+
+from .policy import ExecutionPolicy, PolicyLike, as_policy
+
+_SEEN: set = set()
+
+
+def _warn(msg: str) -> None:
+    """DeprecationWarning, de-duplicated per distinct message so config
+    rebuilds inside jit tracing / dataclasses.replace loops do not spam."""
+    if msg not in _SEEN:
+        _SEEN.add(msg)
+        warnings.warn(msg, DeprecationWarning, stacklevel=4)
+
+
+def reset_warning_dedup() -> None:
+    """Test hook: make the next legacy use warn again."""
+    _SEEN.clear()
+
+
+def legacy_flags_policy(owner: str,
+                        policy: PolicyLike,
+                        use_event_kernels: Optional[bool],
+                        spike_format: Optional[str],
+                        *, default_format: str = "dense",
+                        warn: bool = True) -> Optional[ExecutionPolicy]:
+    """Translate a config's legacy flag pair into an ExecutionPolicy.
+
+    Returns None when NOTHING was specified (policy and both flags unset),
+    so callers can distinguish "inherit/default" from an explicit choice.
+    An explicit ``policy`` always wins; mixing it with legacy flags is an
+    error (the flags would silently lose).
+    """
+    flags_set = use_event_kernels is not None or spike_format is not None
+    if policy is not None:
+        if flags_set:
+            raise ValueError(
+                f"{owner}: pass either policy= or the deprecated "
+                f"use_event_kernels/spike_format flags, not both")
+        return as_policy(policy)
+    if not flags_set:
+        return None
+    if warn:
+        named = [n for n, v in (("use_event_kernels", use_event_kernels),
+                                ("spike_format", spike_format))
+                 if v is not None]
+        verb = "is" if len(named) == 1 else "are"
+        _warn(f"{owner}: {' / '.join(named)} {verb} deprecated; pass "
+              f"policy=\"reference\" | \"fused_dense\" | \"fused_packed\" "
+              f"(repro.ops.ExecutionPolicy) instead")
+    if spike_format is not None and spike_format not in ("dense", "packed"):
+        raise ValueError(f"{owner}: unknown spike format {spike_format!r}")
+    fmt = spike_format if spike_format is not None else default_format
+    kernels = "fused" if use_event_kernels else "reference"
+    return ExecutionPolicy(kernels, fmt)
+
+
+def merge_engine_policy(model_policy: ExecutionPolicy,
+                        engine_policy: Optional[ExecutionPolicy],
+                        use_event_kernels: Optional[bool],
+                        spike_format: Optional[str]) -> ExecutionPolicy:
+    """Engine-over-model policy resolution, preserving the legacy per-flag
+    override semantics: an explicit engine ``policy`` replaces the model's
+    wholesale, while legacy flags ESCALATE only the axis they set (an
+    engine that asked for event kernels but said nothing about the format
+    keeps the model's format). Escalate-only matches the pre-policy engine
+    exactly — it could switch fused kernels ON and the packed format ON
+    but never turn either off, so a falsy legacy flag stays a no-op here
+    too; downgrading a model's policy per engine requires the explicit
+    ``policy`` form."""
+    if engine_policy is not None:
+        return engine_policy
+    kernels = model_policy.kernels
+    fmt = model_policy.format
+    if use_event_kernels:
+        kernels = "fused"
+    if spike_format is not None and spike_format != "dense":
+        fmt = spike_format
+    return ExecutionPolicy(kernels, fmt)
+
+
+def with_policy(cfg, policy: ExecutionPolicy):
+    """Config copy with ``policy`` set and the legacy flag pair cleared —
+    the ONLY sanctioned way to override a config that may still carry
+    legacy flags (a plain replace would trip the policy-vs-flags mixing
+    check)."""
+    import dataclasses
+
+    return dataclasses.replace(cfg, policy=policy, use_event_kernels=None,
+                               spike_format=None)
+
+
+def resolve_out_format(pack_out: Optional[bool], out_format: Optional[str],
+                       *, owner: str) -> str:
+    """Kernel-level shim: the old ``pack_out=`` boolean becomes
+    ``out_format="packed" | "dense"``."""
+    if pack_out is not None:
+        if out_format is not None:
+            raise ValueError(f"{owner}: pass either out_format= or the "
+                             f"deprecated pack_out flag, not both")
+        _warn(f"{owner}: pack_out is deprecated; pass "
+              f"out_format=\"packed\" (or a packed ExecutionPolicy) instead")
+        return "packed" if pack_out else "dense"
+    if out_format is None:
+        return "dense"
+    assert out_format in ("dense", "packed"), out_format
+    return out_format

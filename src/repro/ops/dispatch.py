@@ -1,0 +1,248 @@
+"""Format-dispatching entry points: the public surface of ``repro.ops``.
+
+Every op takes spike operands as ``SpikeTensor`` (raw arrays and
+``PackedSpikes`` are coerced via ``SpikeTensor.wrap``) plus an
+``ExecutionPolicy`` — preset name, ``ExecutionPolicy`` instance, or None —
+and dispatches to the implementation the kernel families registered in
+``repro.ops.registry``:
+
+  * ``policy.kernels`` selects the implementation ("reference" jnp oracles
+    vs the "fused" Pallas kernels);
+  * ``policy.format`` selects the HBM format of emitted spike maps (and
+    operands are converted as needed), so a chain of ``ops.*`` calls is
+    format-preserving end to end;
+  * ``policy=None`` infers the natural policy from the input: fused
+    kernels, format preserved from the operand.
+
+Spike-emitting ops return ``SpikeTensor`` with the ``vld_cnt`` metadata the
+next op's event skip consumes — the on-the-fly dataflow needs no explicit
+metadata plumbing at call sites.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.events import DEFAULT_BLOCKS
+from ..core.lif import LIFConfig
+from .policy import ExecutionPolicy, PolicyLike, as_policy
+from .registry import lookup
+from .spike_tensor import SpikeTensor, Spikes
+
+Array = jax.Array
+
+
+def _policy_for(policy: PolicyLike, *sts: Optional[SpikeTensor]
+                ) -> ExecutionPolicy:
+    """None -> fused kernels, format inherited from the first spike
+    operand (format preservation is the default behavior)."""
+    if policy is not None:
+        return as_policy(policy)
+    fmt = "dense"
+    for st in sts:
+        if st is not None and st.is_packed:
+            fmt = "packed"
+            break
+    return ExecutionPolicy("fused", fmt)
+
+
+class FusedOut(NamedTuple):
+    """``ops.fused_pe`` / ``ops.fused_pe_layer`` result: the emitted spike
+    map (format per policy, metadata attached), optional membrane state,
+    and the raw vld map (also carried by ``spikes.vld_cnt``)."""
+    spikes: SpikeTensor
+    v_next: Optional[Array]
+    vld_next: Optional[Array]
+
+
+# ------------------------------------------------------------------- matmul
+def matmul(x: Spikes, w: Array, *, policy: PolicyLike = None,
+           block_m: int = DEFAULT_BLOCKS.m, block_n: int = DEFAULT_BLOCKS.n,
+           block_k: int = DEFAULT_BLOCKS.k) -> Array:
+    """Event-driven spike matmul: [M, K] spikes @ [K, N] -> f32 current.
+    Fused mode skips silent blocks on the operand's ``vld_cnt`` (computing
+    it only if the SpikeTensor does not already carry one)."""
+    st = SpikeTensor.wrap(x)
+    pol = _policy_for(policy, st)
+    return lookup("matmul", pol.kernels)(st, w, block_m=block_m,
+                                         block_n=block_n, block_k=block_k)
+
+
+# ---------------------------------------------------------------------- lif
+def lif(current: Array, v_prev: Array, s_prev: Array, *,
+        lif_cfg: LIFConfig = LIFConfig(),
+        policy: PolicyLike = None) -> tuple[Array, Array]:
+    """One LIF membrane step over an arbitrary-shaped current tensor.
+    Returns (spikes int8, v_next f32)."""
+    pol = _policy_for(policy)
+    return lookup("lif", pol.kernels)(current, v_prev, s_prev, lif_cfg)
+
+
+# ----------------------------------------------------------------- fused_pe
+def fused_pe(x: Spikes, w: Array, *,
+             bias: Optional[Array] = None,
+             residual: Optional[Spikes] = None,
+             q: Optional[Spikes] = None,
+             v_prev: Optional[Array] = None,
+             s_prev: Optional[Array] = None,
+             qk_threshold: float = 1.0,
+             lif_cfg: LIFConfig = LIFConfig(),
+             policy: PolicyLike = None,
+             block_m: int = DEFAULT_BLOCKS.m,
+             block_n: int = DEFAULT_BLOCKS.n,
+             block_k: int = DEFAULT_BLOCKS.k) -> FusedOut:
+    """One fused PE layer over a 2-D spike operand: event-skipped matmul +
+    bias/residual + LIF threshold + optional QK write-back mask, emitting
+    the next layer's metadata on the fly. ``residual`` may be a spike map
+    (either format) or a raw f32 membrane current."""
+    st = SpikeTensor.wrap(x)
+    res = SpikeTensor.wrap(residual) if residual is not None else None
+    qs = SpikeTensor.wrap(q) if q is not None else None
+    pol = _policy_for(policy, st)
+    return lookup("fused_pe", pol.kernels)(
+        st, w, bias=bias, residual=res, q=qs, v_prev=v_prev, s_prev=s_prev,
+        qk_threshold=qk_threshold, lif_cfg=lif_cfg, fmt=pol.format,
+        block_m=block_m, block_n=block_n, block_k=block_k)
+
+
+def fused_pe_layer(x: Spikes, w: Array, *,
+                   bias: Optional[Array] = None,
+                   residual: Optional[Spikes] = None,
+                   q: Optional[Spikes] = None,
+                   qk_threshold: float = 1.0,
+                   lif_cfg: LIFConfig = LIFConfig(),
+                   policy: PolicyLike = None,
+                   block_m: int = DEFAULT_BLOCKS.m,
+                   block_n: int = DEFAULT_BLOCKS.n,
+                   block_k: int = DEFAULT_BLOCKS.k) -> FusedOut:
+    """Multi-timestep fused layer over [T, M, K] spike trains (T=1 is the
+    paper's stateless deployed mode; T>1 carries LIF state across steps)."""
+    st = SpikeTensor.wrap(x)
+    res = SpikeTensor.wrap(residual) if residual is not None else None
+    qs = SpikeTensor.wrap(q) if q is not None else None
+    pol = _policy_for(policy, st)
+    return lookup("fused_pe_layer", pol.kernels)(
+        st, w, bias=bias, residual=res, q=qs, qk_threshold=qk_threshold,
+        lif_cfg=lif_cfg, fmt=pol.format, block_m=block_m, block_n=block_n,
+        block_k=block_k)
+
+
+# --------------------------------------------------------- spatial reshapes
+def im2col(x: Spikes, spatial: tuple, kh: int, kw: int, stride: int, *,
+           t: int = 1, policy: PolicyLike = None
+           ) -> tuple[SpikeTensor, tuple[int, int]]:
+    """Conv patch extraction on a token-layout spike map.
+
+    ``x``: SpikeTensor with core [t, B*H*W, C]; ``spatial`` = (B, H, W, C).
+    Returns (patches [t, B*Ho*Wo, kh*kw*Cp] SpikeTensor in the input's
+    format, (Ho, Wo)). Patch extraction is channel-preserving, so the
+    packed variant im2cols the WORD tensor directly — the patches of a
+    packed map ARE the packing of the dense patches."""
+    st = SpikeTensor.wrap(x)
+    pol = _policy_for(policy, st)
+    return lookup("im2col", pol.kernels)(st, spatial, kh, kw, stride, t=t,
+                                         fmt=pol.format)
+
+
+def pool(x: Spikes, spatial: tuple, *, t: int = 1, window: int = 2,
+         policy: PolicyLike = None) -> tuple[SpikeTensor, tuple[int, int]]:
+    """Spatial max-pool of a binary spike map in token layout.
+
+    Max of binary == OR, so the packed variant pools by bitwise OR of the
+    words — the pooled map never exists dense. Returns (pooled SpikeTensor
+    [t, B*H2*W2, C], (H2, W2))."""
+    st = SpikeTensor.wrap(x)
+    pol = _policy_for(policy, st)
+    return lookup("pool", pol.kernels)(st, spatial, t=t, window=window,
+                                       fmt=pol.format)
+
+
+def conv_matmul_weights(w: Array, patches: Spikes) -> Array:
+    """[kh, kw, Cin, Cout] conv weight -> the [K, Cout] matmul weight
+    matching ``ops.im2col``'s feature ordering for EITHER format (packed
+    patches carry channel pad lanes; the matching weight rows are zero)."""
+    from ..models import nn
+
+    st = SpikeTensor.wrap(patches)
+    kh, kw = w.shape[:2]
+    c_padded = st.k // (kh * kw)
+    return nn.conv_weights_as_matmul_packed(w, c_padded)
+
+
+# ------------------------------------------------------------------ qk mask
+def qk_mask(q: Spikes, k: Spikes, *, threshold: float = 1.0,
+            policy: PolicyLike = None) -> SpikeTensor:
+    """QKFormer token attention (paper C4): mask K's spike rows by Q's
+    per-token row-sum threshold. Inputs [..., N, D]; output preserves the
+    policy's format."""
+    qs = SpikeTensor.wrap(q)
+    ks = SpikeTensor.wrap(k)
+    pol = _policy_for(policy, ks)
+    masked = lookup("qk_mask", pol.kernels)(qs.to_dense(),
+                                            ks.to_dense(), threshold)
+    out = SpikeTensor.dense(masked)
+    return pack(out, policy=pol) if pol.packed else out
+
+
+# ------------------------------------------------------------- pack / unpack
+def pack(x: Spikes, *, policy: PolicyLike = None,
+         block_m: int = DEFAULT_BLOCKS.m,
+         block_k: int = DEFAULT_BLOCKS.k) -> SpikeTensor:
+    """Convert to the event-compressed format (no-op if already packed)."""
+    st = SpikeTensor.wrap(x)
+    if st.is_packed:
+        return st
+    pol = as_policy(policy, ExecutionPolicy("fused", "packed"))
+    return lookup("pack", pol.kernels)(st, block_m=block_m, block_k=block_k)
+
+
+def unpack(x: Spikes, *, dtype=jnp.int8, policy: PolicyLike = None) -> Array:
+    """Materialize the dense spike map at the logical shape (no-op reshape
+    for dense input)."""
+    st = SpikeTensor.wrap(x)
+    if not st.is_packed:
+        return st.data.astype(dtype)
+    pol = as_policy(policy, ExecutionPolicy("fused", "packed"))
+    return lookup("unpack", pol.kernels)(st, dtype)
+
+
+# -------------------------------------------------------- softmax attention
+def attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+              q_block: int = 512, kv_block: int = 512,
+              policy: PolicyLike = None) -> Array:
+    """Streaming causal softmax attention ([B, S, H, Dh] operands) — the
+    non-spiking side of the hybrid flow, registered by the
+    ``flash_attention`` kernel family."""
+    pol = _policy_for(policy)
+    return lookup("attention", pol.kernels)(q, k, v, causal=causal,
+                                            q_block=q_block,
+                                            kv_block=kv_block)
+
+
+# -------------------------------------------------- dense -> LIF projection
+def dense_lif(p: dict, x: Array, lif_cfg: LIFConfig, *,
+              q: Optional[Spikes] = None, qk_threshold: float = 1.0,
+              policy: PolicyLike = None) -> SpikeTensor:
+    """dense(x) + LIF threshold as one fused PE pass (the LM projection
+    analogue of the PE dataflow): ``x`` is the dense residual stream, the
+    f32 pre-activation never round-trips HBM, and the emitted spikes leave
+    in the policy's format as a 2-D SpikeTensor over [tokens, Dout].
+    ``q`` (either format) applies the QK write-back mask."""
+    flat = x.reshape(-1, x.shape[-1])
+    qs = SpikeTensor.wrap(q) if q is not None else None
+    pol = _policy_for(policy)
+    return lookup("dense_lif", pol.kernels)(p, flat, lif_cfg, q=qs,
+                                            qk_threshold=qk_threshold,
+                                            fmt=pol.format)
+
+
+# ------------------------------------------------------------- W2TTFS head
+def w2ttfs_head(spikes: Array, fc_w: Array, fc_b: Array, *, window: int,
+                policy: PolicyLike = None) -> Array:
+    """W2TTFS classifier head (paper C2): window spike-count pooling +
+    unit-scale FC over a dense [B, H, W, C] spike map."""
+    pol = _policy_for(policy)
+    return lookup("w2ttfs_head", pol.kernels)(spikes, fc_w, fc_b,
+                                              window=window)

@@ -1,0 +1,396 @@
+"""Kernel-family registrations for the ops dispatch layer.
+
+Each of the seven kernel families binds its "fused" (Pallas) and
+"reference" (pure-jnp oracle) implementations here. Implementations take
+already-wrapped ``SpikeTensor`` operands from ``repro.ops.dispatch``,
+convert to whatever the kernel-level wrappers accept, and wrap spike
+outputs back into ``SpikeTensor`` — format selection (``fmt``) and operand
+coercion live HERE so neither the kernels nor the call sites fork on the
+spike format.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.events import (DEFAULT_BLOCKS, LANE_BITS, block_count_map_2d,
+                           pack_spikes_ref, packed_from_words, pad_to_blocks,
+                           unpack_spikes_ref)
+from ..core.lif import LIFConfig, lif_forward
+from .dispatch import FusedOut
+from .registry import register
+from .spike_tensor import SpikeTensor
+
+Array = jax.Array
+
+
+def _operand(st: Optional[SpikeTensor]):
+    """Kernel-level operand: PackedSpikes for packed, the raw payload (no
+    cast — dense residual currents stay f32) for dense."""
+    if st is None:
+        return None
+    return st.to_packed_spikes() if st.is_packed else st.data
+
+
+def _q_operand(q: Optional[SpikeTensor]):
+    """Q spikes for the write-back mask: packed stays packed (row sums are
+    popcounts); dense flattens to the [tokens, Dq] core."""
+    if q is None:
+        return None
+    if q.is_packed:
+        return q.to_packed_spikes()
+    return q.data.reshape(-1, q.data.shape[-1])
+
+
+def _wrap_spikes(spikes, vld, fmt: str, block_m: int, block_n: int
+                 ) -> SpikeTensor:
+    """Kernel output -> SpikeTensor (the emitted map's metadata grid tiles
+    on (block_m, block_n), so the output tensor's block_k IS block_n)."""
+    if fmt == "packed":
+        return SpikeTensor.from_packed(spikes)
+    return SpikeTensor.dense(spikes, vld, block_m=block_m, block_k=block_n)
+
+
+def _ref_wrap(spk: Array, vld, fmt: str, block_m: int, block_n: int
+              ) -> SpikeTensor:
+    if fmt == "packed":
+        return SpikeTensor.from_packed(
+            pack_spikes_ref(spk, block_m=block_m, block_k=block_n))
+    return SpikeTensor.dense(spk, vld, block_m=block_m, block_k=block_n)
+
+
+# =============================================================== spike_matmul
+@register("matmul", "fused")
+def _matmul_fused(st: SpikeTensor, w: Array, *, block_m, block_n, block_k):
+    from ..kernels.spike_matmul import spike_matmul
+
+    if st.is_packed:
+        return spike_matmul(st.to_packed_spikes(), w, block_m=block_m,
+                            block_n=block_n, block_k=block_k)
+    return spike_matmul(st.data, w, vld_cnt=st.vld_cnt, block_m=block_m,
+                        block_n=block_n, block_k=block_k)
+
+
+@register("matmul", "reference")
+def _matmul_ref(st: SpikeTensor, w: Array, *, block_m, block_n, block_k):
+    from ..kernels.spike_matmul import spike_matmul_ref
+
+    x = st.to_dense() if st.is_packed else st.data
+    return spike_matmul_ref(x, w)
+
+
+# ================================================================= lif_update
+@register("lif", "fused")
+def _lif_fused(current, v_prev, s_prev, cfg: LIFConfig):
+    from ..kernels.lif_update import lif_update
+
+    return lif_update(current, v_prev, s_prev, tau=cfg.tau, v_th=cfg.v_th,
+                      soft_reset=cfg.soft_reset)
+
+
+@register("lif", "reference")
+def _lif_ref(current, v_prev, s_prev, cfg: LIFConfig):
+    from ..kernels.lif_update import lif_update_ref
+
+    return lif_update_ref(current, v_prev, s_prev, tau=cfg.tau,
+                          v_th=cfg.v_th, soft_reset=cfg.soft_reset)
+
+
+# =================================================================== fused_pe
+@register("fused_pe", "fused")
+def _fused_pe_fused(st: SpikeTensor, w: Array, *, bias, residual, q, v_prev,
+                    s_prev, qk_threshold, lif_cfg: LIFConfig, fmt,
+                    block_m, block_n, block_k):
+    from ..kernels.fused_pe import fused_pe
+
+    out = fused_pe(
+        _operand(st), w, bias=bias, residual=_operand(residual),
+        v_prev=v_prev, s_prev=s_prev, q=_q_operand(q),
+        vld_cnt=None if st.is_packed else st.vld_cnt,
+        tau=lif_cfg.tau, v_th=lif_cfg.v_th, soft_reset=lif_cfg.soft_reset,
+        qk_threshold=qk_threshold, block_m=block_m, block_n=block_n,
+        block_k=block_k, out_format=fmt)
+    return FusedOut(_wrap_spikes(out.spikes, out.vld_next, fmt, block_m,
+                                 block_n), out.v_next, out.vld_next)
+
+
+@register("fused_pe", "reference")
+def _fused_pe_reference(st: SpikeTensor, w: Array, *, bias, residual, q,
+                        v_prev, s_prev, qk_threshold, lif_cfg: LIFConfig,
+                        fmt, block_m, block_n, block_k):
+    from ..kernels.fused_pe import fused_pe_ref
+
+    res = residual.to_dense(jnp.float32) if residual is not None else None
+    qd = q.to_dense().reshape(-1, q.shape[-1]) if q is not None else None
+    spk, v_next, vld = fused_pe_ref(
+        st.to_dense() if st.is_packed else st.data, w, bias=bias,
+        residual=res, v_prev=v_prev, s_prev=s_prev, q=qd, tau=lif_cfg.tau,
+        v_th=lif_cfg.v_th, soft_reset=lif_cfg.soft_reset,
+        qk_threshold=qk_threshold, block_m=block_m, block_n=block_n)
+    return FusedOut(_ref_wrap(spk, vld, fmt, block_m, block_n), v_next, vld)
+
+
+@register("fused_pe_layer", "fused")
+def _fused_pe_layer_fused(st: SpikeTensor, w: Array, *, bias, residual, q,
+                          qk_threshold, lif_cfg: LIFConfig, fmt,
+                          block_m, block_n, block_k):
+    from ..kernels.fused_pe import fused_pe_layer
+
+    spikes, vld = fused_pe_layer(
+        _operand(st), w, bias=bias, residual=_operand(residual),
+        q=None if q is None else _operand(q),
+        vld_cnt=None if st.is_packed else st.vld_cnt,
+        tau=lif_cfg.tau, v_th=lif_cfg.v_th, soft_reset=lif_cfg.soft_reset,
+        qk_threshold=qk_threshold, block_m=block_m, block_n=block_n,
+        block_k=block_k, out_format=fmt)
+    return FusedOut(_wrap_spikes(spikes, vld, fmt, block_m, block_n),
+                    None, vld)
+
+
+@register("fused_pe_layer", "reference")
+def _fused_pe_layer_reference(st: SpikeTensor, w: Array, *, bias, residual,
+                              q, qk_threshold, lif_cfg: LIFConfig, fmt,
+                              block_m, block_n, block_k):
+    from ..kernels.fused_pe import fused_pe_ref
+    from ..kernels.qk_attention import qk_attention_ref
+
+    x = st.to_dense() if st.is_packed else st.data
+    t, m, _ = x.shape
+    n = w.shape[1]
+    res = residual.to_dense(jnp.float32) if residual is not None else None
+    qd = q.to_dense() if q is not None else None
+    spikes_ts, vld_ts = [], []
+    v = jnp.zeros((m, n), jnp.float32)
+    s = jnp.zeros((m, n), jnp.int8)
+    for ti in range(t):
+        q_t = None if qd is None else qd[ti]
+        if t == 1:
+            spk, _, vld = fused_pe_ref(
+                x[ti], w, bias=bias,
+                residual=None if res is None else res[ti], q=q_t,
+                tau=lif_cfg.tau, v_th=lif_cfg.v_th,
+                soft_reset=lif_cfg.soft_reset, qk_threshold=qk_threshold,
+                block_m=block_m, block_n=block_n)
+        else:
+            # stateful form: LIF state carries the PRE-mask spikes, the QK
+            # mask gates outside — mirroring the kernel layer's T>1 path
+            spk, v, vld = fused_pe_ref(
+                x[ti], w, bias=bias,
+                residual=None if res is None else res[ti], v_prev=v,
+                s_prev=s, tau=lif_cfg.tau, v_th=lif_cfg.v_th,
+                soft_reset=lif_cfg.soft_reset, block_m=block_m,
+                block_n=block_n)
+            s = spk
+            if q_t is not None:
+                spk = qk_attention_ref(q_t, spk, threshold=qk_threshold)
+                vld = block_count_map_2d(
+                    pad_to_blocks(spk, block_m, block_n), block_m, block_n)
+        spikes_ts.append(spk)
+        vld_ts.append(vld)
+    spk3 = jnp.stack(spikes_ts)
+    vld3 = jnp.stack(vld_ts)
+    if fmt == "packed":
+        out = SpikeTensor.from_packed(
+            pack_spikes_ref(spk3, block_m=block_m, block_k=block_n))
+    else:
+        out = SpikeTensor.dense(spk3, vld3, block_m=block_m, block_k=block_n)
+    return FusedOut(out, None, vld3)
+
+
+# ======================================================== packed (pack/unpack)
+@register("pack", "fused")
+def _pack_fused(st: SpikeTensor, *, block_m, block_k):
+    from ..kernels.packed import pack_spikes
+
+    return SpikeTensor.from_packed(
+        pack_spikes(st.data, block_m=block_m, block_k=block_k))
+
+
+@register("pack", "reference")
+def _pack_ref(st: SpikeTensor, *, block_m, block_k):
+    return SpikeTensor.from_packed(
+        pack_spikes_ref(st.data, block_m=block_m, block_k=block_k))
+
+
+@register("unpack", "fused")
+def _unpack_fused(st: SpikeTensor, dtype):
+    from ..kernels.packed import unpack_spikes
+
+    return unpack_spikes(st.to_packed_spikes(), dtype=dtype)
+
+
+@register("unpack", "reference")
+def _unpack_ref(st: SpikeTensor, dtype):
+    return unpack_spikes_ref(st.to_packed_spikes(), dtype)
+
+
+# =============================================================== qk_attention
+@register("qk_mask", "fused")
+def _qk_mask_fused(q: Array, k: Array, threshold: float):
+    from ..kernels.qk_attention import qk_attention_fused
+
+    return qk_attention_fused(q, k, threshold=threshold)
+
+
+@register("qk_mask", "reference")
+def _qk_mask_ref(q: Array, k: Array, threshold: float):
+    from ..kernels.qk_attention import qk_attention_ref
+
+    return qk_attention_ref(q, k, threshold=threshold)
+
+
+# ============================================================ flash_attention
+@register("attention", "fused")
+def _attention_fused(q, k, v, *, causal, q_block, kv_block):
+    from ..kernels.flash_attention import flash_attention
+
+    return flash_attention(q, k, v, q_block=q_block, kv_block=kv_block,
+                           causal=causal)
+
+
+@register("attention", "reference")
+def _attention_ref(q, k, v, *, causal, q_block, kv_block):
+    from ..kernels.flash_attention import flash_attention_ref
+
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    if hkv != h:
+        k = jnp.repeat(k, h // hkv, axis=2)
+        v = jnp.repeat(v, h // hkv, axis=2)
+    out = flash_attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(b * h, s, d),
+        k.transpose(0, 2, 1, 3).reshape(b * h, s, d),
+        v.transpose(0, 2, 1, 3).reshape(b * h, s, d),
+        causal=causal, scale=d ** -0.5)
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+# ================================================== w2ttfs_pool + spatial ops
+# im2col / max-pool are pure data movement (no reference-vs-fused numeric
+# distinction) but ARE format-dispatched: the packed variants operate on
+# the word tensor and rebuild vld_cnt by popcount (1/32nd of the bytes a
+# dense re-read would touch). The "reference" registrations differ only in
+# HOW a format conversion (if one is needed) runs: via the pure-jnp
+# pack/unpack oracles instead of the Pallas kernels, honoring the
+# reference mode's no-Pallas contract.
+
+def _spatial_words(st: SpikeTensor, spatial: tuple, t: int) -> Array:
+    b, h, w_, _ = spatial
+    cw = st.data.shape[-1]
+    return st.data[:, :b * h * w_].reshape(t * b, h, w_, cw)
+
+
+def _to_fmt(st: SpikeTensor, fmt: str, use_kernels: bool) -> SpikeTensor:
+    pack = _pack_fused if use_kernels else _pack_ref
+    unpack = _unpack_fused if use_kernels else _unpack_ref
+    if fmt == "packed" and not st.is_packed:
+        return pack(st, block_m=st.block_m, block_k=st.block_k)
+    if fmt == "dense" and st.is_packed:
+        return SpikeTensor.dense(unpack(st, jnp.int8),
+                                 block_m=st.block_m, block_k=st.block_k)
+    return st
+
+
+def _im2col_impl(st: SpikeTensor, spatial: tuple, kh, kw, stride, *, t, fmt,
+                 use_kernels: bool = True):
+    from ..models import nn
+
+    st = _to_fmt(st, fmt, use_kernels)
+    b, h, w_, c = spatial
+    if st.is_packed:
+        pat = nn.im2col_packed(_spatial_words(st, spatial, t), kh, kw,
+                               stride)
+        _, ho, wo, kww = pat.shape
+        pat3 = pat.reshape(t, b * ho * wo, kww)
+        ps = packed_from_words(pat3, (t, b * ho * wo, kww * LANE_BITS),
+                               block_m=st.block_m, block_k=st.block_k)
+        return SpikeTensor.from_packed(ps), (ho, wo)
+    dense = st.data.reshape(t * b, h, w_, c).astype(jnp.int8)
+    pat = nn.im2col(dense, kh, kw, stride)
+    _, ho, wo, kdim = pat.shape
+    return (SpikeTensor.dense(pat.reshape(t, b * ho * wo, kdim),
+                              block_m=st.block_m, block_k=st.block_k),
+            (ho, wo))
+
+
+def _pool_impl(st: SpikeTensor, spatial: tuple, *, t, window, fmt,
+               use_kernels: bool = True):
+    from ..models import nn
+
+    st = _to_fmt(st, fmt, use_kernels)
+    b, h, w_, c = spatial
+    if st.is_packed:
+        pooled = nn.max_pool_packed(_spatial_words(st, spatial, t), window)
+        h2, w2 = pooled.shape[1], pooled.shape[2]
+        ps = packed_from_words(
+            pooled.reshape(t, b * h2 * w2, pooled.shape[3]),
+            (t, b * h2 * w2, c), block_m=st.block_m, block_k=st.block_k)
+        return SpikeTensor.from_packed(ps), (h2, w2)
+    x = st.data.reshape(t * b, h, w_, c).astype(jnp.float32)
+    pooled = nn.max_pool(x, window)
+    h2, w2 = pooled.shape[1], pooled.shape[2]
+    return (SpikeTensor.dense(
+        pooled.reshape(t, b * h2 * w2, c).astype(jnp.int8),
+        block_m=st.block_m, block_k=st.block_k), (h2, w2))
+
+
+register("im2col", "fused")(_im2col_impl)
+register("im2col", "reference")(functools.partial(_im2col_impl,
+                                                  use_kernels=False))
+register("pool", "fused")(_pool_impl)
+register("pool", "reference")(functools.partial(_pool_impl,
+                                                use_kernels=False))
+
+
+# =========================================================== dense -> LIF map
+@register("dense_lif", "fused")
+def _dense_lif_fused(p: dict, flat: Array, lif_cfg: LIFConfig, *, q,
+                     qk_threshold, fmt):
+    from ..kernels.fused_pe import fused_pe
+
+    m, k = flat.shape
+    bm, bk = DEFAULT_BLOCKS.m, DEFAULT_BLOCKS.k
+    # dense residual stream: a ones map — dense blocks are never silent,
+    # so no metadata pass is spent on the operand
+    ones_vld = jnp.ones((-(-m // bm), -(-k // bk)), jnp.int32)
+    out = fused_pe(flat, p["w"], bias=p.get("b"), vld_cnt=ones_vld,
+                   q=_q_operand(q), qk_threshold=qk_threshold,
+                   tau=lif_cfg.tau, v_th=lif_cfg.v_th,
+                   soft_reset=lif_cfg.soft_reset, out_format=fmt)
+    return _wrap_spikes(out.spikes, out.vld_next, fmt, DEFAULT_BLOCKS.m,
+                        DEFAULT_BLOCKS.n)
+
+
+@register("dense_lif", "reference")
+def _dense_lif_ref(p: dict, flat: Array, lif_cfg: LIFConfig, *, q,
+                   qk_threshold, fmt):
+    cur = flat.astype(jnp.float32) @ p["w"].astype(jnp.float32)
+    if "b" in p:
+        cur = cur + p["b"].astype(jnp.float32)
+    spk = lif_forward(cur, lif_cfg).astype(jnp.int8)
+    if q is not None:
+        rowsum = q.to_dense(jnp.float32).reshape(flat.shape[0], -1).sum(
+            axis=-1, keepdims=True)
+        spk = spk * (rowsum >= qk_threshold).astype(jnp.int8)
+    vld = block_count_map_2d(
+        pad_to_blocks(spk, DEFAULT_BLOCKS.m, DEFAULT_BLOCKS.n),
+        DEFAULT_BLOCKS.m, DEFAULT_BLOCKS.n)
+    return _ref_wrap(spk, vld, fmt, DEFAULT_BLOCKS.m, DEFAULT_BLOCKS.n)
+
+
+# =================================================================== w2ttfs
+@register("w2ttfs_head", "fused")
+def _w2ttfs_head_fused(spikes: Array, fc_w: Array, fc_b: Array, *, window):
+    from ..kernels.w2ttfs_pool import w2ttfs_pool_fc
+
+    return w2ttfs_pool_fc(spikes, fc_w, fc_b, window=window)
+
+
+@register("w2ttfs_head", "reference")
+def _w2ttfs_head_ref(spikes: Array, fc_w: Array, fc_b: Array, *, window):
+    from ..kernels.w2ttfs_pool import w2ttfs_pool_fc_ref
+
+    return w2ttfs_pool_fc_ref(spikes, fc_w, fc_b, window)

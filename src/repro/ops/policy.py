@@ -1,0 +1,92 @@
+"""ExecutionPolicy: ONE knob for how the hybrid data-event flow executes.
+
+The paper's claim is a single computing flow that serves dense-data and
+sparse-event execution; our reproduction previously encoded that choice as
+three booleans threaded by hand through every layer (``use_event_kernels``,
+``spike_format``, ``pack_out``). This module replaces them with a single
+policy value every ``ops.*`` entry point and model config understands:
+
+  * ``"reference"``    — pure-jnp oracle paths; no Pallas kernels. The
+                         training / numerics-debugging mode.
+  * ``"fused_dense"``  — the fused event-driven Pallas kernels with int8
+                         spike maps between layers.
+  * ``"fused_packed"`` — the fused kernels AND the bit-packed HBM
+                         interchange: spike tensors ship 32-per-int32-lane
+                         with popcount metadata (~8x fewer spike bytes).
+
+A policy is two orthogonal axes — which KERNELS run and which FORMAT spike
+tensors take in HBM — because the legacy flag space allowed the off-diagonal
+combination (reference compute + packed per-slot state caching in serving);
+the named presets above are the three supported diagonal points.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+KERNEL_MODES = ("reference", "fused")
+FORMATS = ("dense", "packed")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPolicy:
+    kernels: str = "reference"      # "reference" | "fused"
+    format: str = "dense"           # "dense" | "packed"
+
+    def __post_init__(self):
+        assert self.kernels in KERNEL_MODES, self.kernels
+        assert self.format in FORMATS, self.format
+
+    @property
+    def fused(self) -> bool:
+        """True when the event-driven Pallas kernels run (inference-only:
+        they carry no surrogate gradient)."""
+        return self.kernels == "fused"
+
+    @property
+    def packed(self) -> bool:
+        """True when spike tensors cross HBM bit-packed."""
+        return self.format == "packed"
+
+    @property
+    def name(self) -> str:
+        if self.kernels == "reference":
+            return ("reference" if self.format == "dense"
+                    else "reference_packed")
+        return f"fused_{self.format}"
+
+    def __str__(self) -> str:
+        return self.name
+
+
+REFERENCE = ExecutionPolicy("reference", "dense")
+FUSED_DENSE = ExecutionPolicy("fused", "dense")
+FUSED_PACKED = ExecutionPolicy("fused", "packed")
+
+POLICIES = {
+    "reference": REFERENCE,
+    "fused_dense": FUSED_DENSE,
+    "fused_packed": FUSED_PACKED,
+    # legacy off-diagonal point: jnp compute, packed spike-state caching
+    "reference_packed": ExecutionPolicy("reference", "packed"),
+}
+
+PolicyLike = Union[ExecutionPolicy, str, None]
+
+
+def as_policy(policy: PolicyLike,
+              default: Optional[ExecutionPolicy] = None) -> ExecutionPolicy:
+    """Normalize a policy spec (preset name, ExecutionPolicy, or None)."""
+    if policy is None:
+        return default if default is not None else REFERENCE
+    if isinstance(policy, ExecutionPolicy):
+        return policy
+    if isinstance(policy, str):
+        try:
+            return POLICIES[policy]
+        except KeyError:
+            raise ValueError(
+                f"unknown execution policy {policy!r}; expected one of "
+                f"{sorted(POLICIES)}") from None
+    raise TypeError(f"policy must be an ExecutionPolicy, a preset name, or "
+                    f"None — got {type(policy).__name__}")

@@ -1,0 +1,61 @@
+"""Implementation registry: kernel families plug into the ops dispatch.
+
+The registry maps ``(op, mode)`` — an entry-point name and an
+``ExecutionPolicy.kernels`` mode ("reference" | "fused") — to a callable.
+Each kernel family (``kernels/spike_matmul``, ``fused_pe``, ``packed``,
+``lif_update``, ``qk_attention``, ``w2ttfs_pool``, ``flash_attention``)
+registers its implementations in ``repro.ops.impls``; the dispatch layer
+(``repro.ops.dispatch``) normalizes operand formats per the policy and
+looks the implementation up here.
+
+Registrations are loaded lazily on first lookup so importing ``repro.ops``
+(e.g. from a config module) never drags the Pallas kernel suite in at
+import time — new backends register by importing this module and calling
+``register`` before their ops are dispatched.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+_REGISTRY: dict[tuple[str, str], Callable] = {}
+_LOADED = False
+
+
+def register(op: str, mode: str) -> Callable[[Callable], Callable]:
+    """Decorator: ``@register("matmul", "fused")`` binds an implementation.
+    Re-registering a key overrides it (last wins) — that is the extension
+    point for alternative backends."""
+
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY[(op, mode)] = fn
+        return fn
+
+    return deco
+
+
+def _ensure_loaded() -> None:
+    global _LOADED
+    if not _LOADED:
+        _LOADED = True
+        from . import impls  # noqa: F401  (registers the kernel families)
+
+
+def lookup(op: str, mode: str) -> Callable:
+    _ensure_loaded()
+    try:
+        return _REGISTRY[(op, mode)]
+    except KeyError:
+        have = sorted(m for o, m in _REGISTRY if o == op)
+        if have:
+            raise NotImplementedError(
+                f"op {op!r} has no {mode!r} implementation "
+                f"(registered modes: {have})") from None
+        raise NotImplementedError(f"unknown op {op!r}") from None
+
+
+def implementations(op: Optional[str] = None) -> dict:
+    """Introspection: the registered (op, mode) -> callable table."""
+    _ensure_loaded()
+    if op is None:
+        return dict(_REGISTRY)
+    return {k: v for k, v in _REGISTRY.items() if k[0] == op}

@@ -1,0 +1,177 @@
+"""SpikeTensor: the polymorphic spike-map currency of ``repro.ops``.
+
+NEURAL's hybrid data-event execution means the SAME logical tensor — a
+binary spike map — can live in two physical formats:
+
+  * ``dense``  — int8/float 0-1 entries, one unit per element;
+  * ``packed`` — the event-compressed HBM format (32 spikes per int32 lane
+    + the popcount-derived per-block ``vld_cnt`` map; previously the
+    standalone ``core.events.PackedSpikes`` container).
+
+Before this layer existed, every consumer threaded the format by hand
+(spike-format strings, pack-output booleans, explicit ``vld_cnt``
+arguments) and each model path forked on it. ``SpikeTensor`` makes the
+format a property of the VALUE instead of the call site: one pytree carries
+the payload, the format tag, the logical shape, and — for BOTH variants —
+the block-count metadata (``vld_cnt``) that the event-driven kernels use to
+skip silent tiles, so chaining layer L's output into layer L+1 never
+recomputes routing metadata regardless of format.
+
+Registered as a JAX pytree: jit/vmap/scan treat (data, vld_cnt) as leaves
+and (fmt, shape, blocks) as static aux data, so tracing through ``ops.*``
+preserves the format across transformations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from ..core.events import (DEFAULT_BLOCKS, LANE_BITS, PackedSpikes,
+                           unpack_words)
+
+Array = jax.Array
+
+FORMATS = ("dense", "packed")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SpikeTensor:
+    """A spike map in either physical format, always carrying its metadata.
+
+    data    : ``dense`` — [..., M, K] spikes (any dtype; nonzero == event),
+              at the LOGICAL (unpadded) shape.
+              ``packed`` — int32 [..., Mp, Kp/32] bit-packed words, core
+              dims padded to the (block_m, block_k) grid.
+    vld_cnt : int32 [..., Mp/block_m, Kp/block_k] per-block event counts
+              (PipeSDA FIFO-tail metadata) over the padded grid, or None
+              when no kernel has produced one yet (dense tensors fresh from
+              a non-event op). Packed tensors ALWAYS carry it — it is
+              derived by popcount at pack time.
+    fmt     : "dense" | "packed".
+    shape   : the logical (pre-padding) shape; last two dims are (m, k).
+    """
+    data: Array
+    vld_cnt: Optional[Array] = None
+    fmt: str = "dense"
+    shape: tuple = ()
+    block_m: int = DEFAULT_BLOCKS.m
+    block_k: int = DEFAULT_BLOCKS.k
+
+    def __post_init__(self):
+        assert self.fmt in FORMATS, self.fmt
+        if not self.shape:
+            assert self.fmt == "dense", "packed SpikeTensor needs its shape"
+            object.__setattr__(self, "shape", tuple(self.data.shape))
+        else:
+            object.__setattr__(self, "shape", tuple(self.shape))
+
+    # ------------------------------------------------------------- pytree
+    def tree_flatten(self):
+        return ((self.data, self.vld_cnt),
+                (self.fmt, self.shape, self.block_m, self.block_k))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        fmt, shape, bm, bk = aux
+        data, vld = children
+        return cls(data, vld, fmt, shape, bm, bk)
+
+    # ------------------------------------------------------- constructors
+    @classmethod
+    def dense(cls, x: Array, vld_cnt: Optional[Array] = None, *,
+              block_m: int = DEFAULT_BLOCKS.m,
+              block_k: int = DEFAULT_BLOCKS.k) -> "SpikeTensor":
+        return cls(x, vld_cnt, "dense", tuple(x.shape), block_m, block_k)
+
+    @classmethod
+    def from_packed(cls, ps: PackedSpikes) -> "SpikeTensor":
+        return cls(ps.words, ps.vld_cnt, "packed", tuple(ps.shape),
+                   ps.block_m, ps.block_k)
+
+    @classmethod
+    def wrap(cls, x: "Spikes") -> "SpikeTensor":
+        """Coerce any spike operand (raw array / PackedSpikes / SpikeTensor)
+        into the common currency — the adapter every ``ops.*`` entry point
+        runs on its spike inputs."""
+        if isinstance(x, SpikeTensor):
+            return x
+        if isinstance(x, PackedSpikes):
+            return cls.from_packed(x)
+        return cls.dense(x)
+
+    # -------------------------------------------------------------- views
+    @property
+    def is_packed(self) -> bool:
+        return self.fmt == "packed"
+
+    @property
+    def m(self) -> int:
+        return self.shape[-2]
+
+    @property
+    def k(self) -> int:
+        return self.shape[-1]
+
+    @property
+    def padded_shape(self) -> tuple:
+        if self.is_packed:
+            return (*self.shape[:-2], self.data.shape[-2],
+                    self.data.shape[-1] * LANE_BITS)
+        mp = -(-self.m // self.block_m) * self.block_m
+        kp = -(-self.k // self.block_k) * self.block_k
+        return (*self.shape[:-2], mp, kp)
+
+    @property
+    def hbm_bytes(self) -> int:
+        """Bytes this tensor ships over HBM in ITS format (payload + any
+        metadata map)."""
+        vld = (4 * math.prod(self.vld_cnt.shape)
+               if self.vld_cnt is not None else 0)
+        if self.is_packed:
+            return 4 * math.prod(self.data.shape) + vld
+        return (math.prod(self.shape) * self.data.dtype.itemsize) + vld
+
+    @property
+    def dense_bytes(self) -> int:
+        """Bytes of the padded int8 map the packed format replaces (the
+        denominator of the compression ratio)."""
+        return math.prod(self.padded_shape)
+
+    def to_packed_spikes(self) -> PackedSpikes:
+        """View a packed SpikeTensor as the kernel-level container."""
+        assert self.is_packed, "dense SpikeTensor has no packed view"
+        return PackedSpikes(self.data, self.vld_cnt, self.shape,
+                            self.block_m, self.block_k)
+
+    def to_dense(self, dtype=jnp.int8) -> Array:
+        """Materialize the dense spike map at the logical shape (pure-jnp;
+        use ``ops.unpack`` to route through the Pallas unpack kernel)."""
+        if not self.is_packed:
+            return self.data.astype(dtype)
+        dense = unpack_words(self.data, dtype)
+        sl = tuple(slice(0, d) for d in self.shape[-2:])
+        return dense[(..., *sl)]
+
+    def count(self) -> Array:
+        """Total event count (f32 scalar) — from the metadata map when
+        present (no pass over the payload), else a dense reduction."""
+        if self.vld_cnt is not None:
+            return self.vld_cnt.sum().astype(jnp.float32)
+        return (self.data != 0).astype(jnp.float32).sum()
+
+    def __getitem__(self, idx) -> "SpikeTensor":
+        """Index ONE leading (batch/time) dim; the 2-D core is preserved."""
+        assert isinstance(idx, int), idx
+        assert len(self.shape) > 2, "cannot index the core dims"
+        return SpikeTensor(self.data[idx],
+                           None if self.vld_cnt is None else self.vld_cnt[idx],
+                           self.fmt, self.shape[1:], self.block_m,
+                           self.block_k)
+
+
+Spikes = Union[Array, PackedSpikes, SpikeTensor]

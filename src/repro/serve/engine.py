@@ -57,6 +57,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import ops
+
 Array = jax.Array
 
 # Jitted engine step functions shared across Engine instances of the same
@@ -130,20 +132,33 @@ class EngineConfig:
     max_queue: int = 0                  # admission FIFO bound (0 = unbounded)
     submit_block_ticks: int = 10_000    # backpressure budget before QueueFull
     out_fifo_depth: int = 0             # per-slot output FIFO bound (0 = inf)
-    # deployed spiking path: route qk_spiking models' LIF projections and
+    # policy: how THIS engine executes qk_spiking models, overriding the
+    # model config's own policy (repro.ops.ExecutionPolicy or a preset
+    # name). "fused_dense"/"fused_packed" route the LIF projections and
     # binary-activation matmuls through the fused-PE / spike_matmul Pallas
-    # kernels (forward-exact; serving is inference, so the missing surrogate
-    # gradient is irrelevant here)
-    use_event_kernels: bool = False
-    # HBM format for the qk_spiking path's spike tensors: "packed" ships the
-    # masked attention spike maps bit-packed (32 spikes per int32 lane) and
-    # caches each slot's spike state packed — the engine then measures spike
-    # sparsity and packed bytes in flight every decode tick (see ``stats``)
-    spike_format: str = "dense"
+    # kernels (forward-exact; serving is inference, so the missing
+    # surrogate gradient is irrelevant); a packed policy additionally ships
+    # the masked attention spike maps bit-packed (32 spikes per int32
+    # lane), caches each slot's spike state packed, and measures spike
+    # sparsity + packed bytes in flight every decode tick (see ``stats``).
+    # None = inherit the model's policy unchanged.
+    policy: Optional[Any] = None
+    # deprecated flag pair -> policy (repro.ops.compat translates + warns);
+    # each flag ESCALATES only its own policy axis — exactly the pre-policy
+    # engine's semantics, which could switch features on but never off
+    use_event_kernels: Optional[bool] = None
+    spike_format: Optional[str] = None
     # measure spike telemetry every Nth decode tick (0 disables): each
     # measurement syncs the packed state pool to host, so latency-sensitive
     # deployments should sample sparsely
     spike_stats_every: int = 1
+
+    def __post_init__(self):
+        resolved = ops.legacy_flags_policy(
+            "EngineConfig", self.policy, self.use_event_kernels,
+            self.spike_format)
+        if self.policy is not None:
+            self.policy = resolved
 
 
 class Engine:
@@ -152,17 +167,18 @@ class Engine:
         self.params = params
         self.cfg = cfg
         spiking = getattr(model.cfg, "attention_kind", "") == "qk_spiking"
-        repl = {}
-        if spiking and cfg.use_event_kernels:
-            repl["use_event_kernels"] = True
-        if spiking and cfg.spike_format != "dense":
-            repl["spike_format"] = cfg.spike_format
-        if repl:
-            # run THIS engine's prefills/decodes on the fused event-kernel
-            # dataflow without mutating the caller's model (the flags are
-            # inference-only; a shared model may still be used for training)
-            self.model = type(model)(
-                dataclasses.replace(model.cfg, **repl))
+        self.policy = getattr(model.cfg, "exec_policy", ops.REFERENCE)
+        if spiking:
+            eff = ops.merge_engine_policy(
+                model.cfg.exec_policy, cfg.policy, cfg.use_event_kernels,
+                cfg.spike_format)
+            if eff != model.cfg.exec_policy:
+                # run THIS engine's prefills/decodes under the engine's
+                # policy without mutating the caller's model (fused
+                # policies are inference-only; a shared model may still be
+                # used for training under its own "reference" policy)
+                self.model = type(model)(ops.with_policy(model.cfg, eff))
+            self.policy = eff
         self.queue: deque[Request] = deque()
         self.prefill_fifo: deque[_PrefillJob] = deque()
         self.active: dict[int, Request] = {}
@@ -171,7 +187,7 @@ class Engine:
         self._rng = jax.random.PRNGKey(rng_seed)
         self._uid = itertools.count()
         # per-decode-tick spike telemetry (packed qk_spiking mode only)
-        self._track_spikes = (spiking and cfg.spike_format == "packed"
+        self._track_spikes = (spiking and self.policy.packed
                               and cfg.spike_stats_every > 0)
         self._spike_log: list[dict] = []
         self._tick = 0
@@ -507,7 +523,8 @@ class Engine:
                "tok_per_s": toks / max(span, 1e-9),
                "queue_depth": len(self.queue),
                "active": len(self.active),
-               "spike_format": self.cfg.spike_format,
+               "policy": self.policy.name,
+               "spike_format": self.policy.format,
                # elastic-FIFO telemetry: the software analogue of the
                # paper's FIFO-depth elasticity measurements
                "prefill_mode": ("chunked" if self.cfg.prefill_chunk > 0

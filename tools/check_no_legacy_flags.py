@@ -1,0 +1,56 @@
+#!/usr/bin/env python
+"""CI guard: the legacy flag kwargs must not reappear outside the shim.
+
+The ``repro.ops`` redesign replaced the ``use_event_kernels=`` /
+``spike_format=`` / ``pack_out=`` plumbing with ``ExecutionPolicy``; the
+only sanctioned home of those kwarg spellings is the deprecation shim
+module (``src/repro/ops/compat.py``) and the test suite (which exercises
+the shims on purpose). This script greps the code tree for call-site uses
+of the legacy kwargs — the pattern matches ``flag=value`` (PEP8 keyword
+arguments carry no spaces around ``=``), so annotated parameter
+declarations like ``pack_out: bool | None = None`` that merely ACCEPT the
+deprecated kwarg do not trip it — and fails the build on any hit.
+
+Usage: python tools/check_no_legacy_flags.py  (exit 0 = clean)
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "benchmarks", "examples", "docs")
+ALLOWED = {
+    REPO / "src" / "repro" / "ops" / "compat.py",   # THE deprecation shim
+    REPO / "docs" / "ops_api.md",                   # the migration table
+}
+# call-site kwarg spelling: name immediately followed by '=' but not '=='
+PATTERN = re.compile(r"\b(use_event_kernels|spike_format|pack_out)=(?!=)")
+
+
+def main() -> int:
+    hits: list[str] = []
+    targets = [p for d in SCAN_DIRS if (REPO / d).exists()
+               for p in sorted((REPO / d).rglob("*"))]
+    targets.append(REPO / "README.md")
+    for path in targets:
+        if path.suffix not in (".py", ".md") or path in ALLOWED:
+            continue
+        for ln, line in enumerate(
+                path.read_text(encoding="utf-8").splitlines(), 1):
+            if PATTERN.search(line):
+                hits.append(f"{path.relative_to(REPO)}:{ln}: "
+                            f"{line.strip()}")
+    if hits:
+        print("legacy flag kwargs found outside the deprecation shim "
+              "(use policy= / out_format= instead):")
+        print("\n".join(hits))
+        return 1
+    print(f"OK: no legacy flag call sites outside the shim "
+          f"({', '.join(SCAN_DIRS)} scanned)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
