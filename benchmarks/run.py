@@ -1,7 +1,7 @@
 """Benchmark harness entry point — one section per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run            # everything
-  BENCH_KD_STEPS=40 ... python -m benchmarks.run     # quick KD budget
+  python -m benchmarks.run --kd-steps 40             # quick KD budget
   python -m benchmarks.run --sections kernels,serve  # subset (CI artifacts)
 
 Writes a machine-readable run summary (section status + wall time) to
@@ -24,6 +24,10 @@ def main() -> None:
                     help="comma-separated section keys to run "
                          "(kd,resources,spikes,efficiency,timestep,"
                          "kernels,ops,serve); empty = all")
+    ap.add_argument("--kd-steps", type=int, default=None,
+                    help="training-step budget for the kd section "
+                         "(forwarded to fig8_kd_accuracy.run; default: "
+                         "fig8_kd_accuracy.DEFAULT_STEPS)")
     args = ap.parse_args()
 
     from benchmarks.common import artifact_path
@@ -33,7 +37,7 @@ def main() -> None:
                             timestep_ablation)
     sections = [
         ("kd", "Fig 8 — KD pipeline accuracy (KDT/F&Q/KD-QAT/W2TTFS)",
-         fig8_kd_accuracy.main),
+         lambda: fig8_kd_accuracy.main(steps=args.kd_steps)),
         ("resources", "Table I — per-module resources", table1_resources.main),
         ("spikes", "Table II — ResNet-11 vs QKFResNet-11 spikes/latency/energy",
          table2_spikes.main),

@@ -41,7 +41,7 @@ def module_accounting(arch: str = "vgg11") -> list[dict]:
     var = snn_cnn.init(jax.random.PRNGKey(0), cfg)
     ds = SyntheticImageDataset(image_size=32, seed=0)
     imgs, _ = ds.batch(0, 8)
-    _, _, aux = snn_cnn.apply(var, jnp.asarray(imgs), cfg, train=True)
+    _, _, aux = snn_cnn.forward(var, jnp.asarray(imgs), cfg, train=True)
 
     layers = snn_cnn.build_layers(cfg)
     rows = []

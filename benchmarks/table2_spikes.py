@@ -23,7 +23,7 @@ def measure(arch: str, width: float = 0.25, batch: int = 32) -> dict:
     var = snn_cnn.init(jax.random.PRNGKey(0), cfg)
     ds = SyntheticImageDataset(image_size=32, seed=0)
     imgs, _ = ds.batch(0, batch)
-    logits, _, aux = snn_cnn.apply(var, jnp.asarray(imgs), cfg, train=True)
+    logits, _, aux = snn_cnn.forward(var, jnp.asarray(imgs), cfg, train=True)
 
     total_spikes = float(aux["total_spikes"]) / batch
     rates = {k: float(v) for k, v in aux["rates"].items()}

@@ -26,7 +26,7 @@ def synaptic_ops_per_image(arch: str, width: float = 0.25,
     var = snn_cnn.init(jax.random.PRNGKey(0), cfg)
     ds = SyntheticImageDataset(image_size=32, seed=0)
     imgs, _ = ds.batch(0, batch)
-    _, _, aux = snn_cnn.apply(var, jnp.asarray(imgs), cfg, train=True)
+    _, _, aux = snn_cnn.forward(var, jnp.asarray(imgs), cfg, train=True)
 
     layers = snn_cnn.build_layers(cfg)
     # fanout of a spike at layer i = kernel volume of the NEXT conv layer

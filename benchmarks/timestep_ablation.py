@@ -31,7 +31,7 @@ def main() -> None:
         cfg = snn_cnn.SNNCNNConfig(arch="resnet11", width_mult=0.25,
                                    timesteps=t)
         var = snn_cnn.init(jax.random.PRNGKey(0), cfg)
-        _, _, aux = snn_cnn.apply(var, jnp.asarray(imgs), cfg, train=True)
+        _, _, aux = snn_cnn.forward(var, jnp.asarray(imgs), cfg, train=True)
         ts = float(aux["total_spikes"]) / 16
         est = RooflineEstimate(flops=dense_flops * t,
                                bytes=dense_flops / 10 * 0.25 * t)

@@ -7,7 +7,14 @@ Trains for a few hundred steps on synthetic CIFAR-like data and prints the
 stage-by-stage accuracy table (the paper's Fig 8) plus the Total-Spikes
 metric (Table II) of the final deployment artifact.
 
-  PYTHONPATH=src python examples/train_kd_cifar.py [--steps 220] [--arch vgg11]
+Every stage runs the ONE ``snn_cnn.forward`` body; ``--policy`` picks the
+execution policy of the student's TRAINING forward (e.g. ``fused_dense``
+trains on the event-driven Pallas kernels the model deploys on — the
+surrogate custom_vjp supplies the backward), and the deployment artifact
+runs the same graph under the same policy family.
+
+  PYTHONPATH=src python examples/train_kd_cifar.py [--steps 220]
+      [--arch vgg11] [--policy reference|fused_dense|fused_packed]
 """
 import argparse
 import os
@@ -21,12 +28,18 @@ def main():
     ap.add_argument("--steps", type=int, default=220)
     ap.add_argument("--arch", default="vgg11",
                     choices=["vgg11", "resnet11", "qkfresnet11"])
+    ap.add_argument("--policy", default=None,
+                    choices=["reference", "fused_dense", "fused_packed"],
+                    help="execution policy for the KD training forward "
+                         "(default: reference); deployment below uses the "
+                         "same choice")
     args = ap.parse_args()
-    os.environ["BENCH_KD_STEPS"] = str(args.steps)
 
-    # the benchmark module IS the pipeline implementation — reuse it
+    # the benchmark module IS the pipeline implementation — reuse it (the
+    # step budget is an explicit parameter, not an env side channel)
     from benchmarks import fig8_kd_accuracy
-    res = fig8_kd_accuracy.run(args.arch)
+    res = fig8_kd_accuracy.run(args.arch, steps=args.steps,
+                               policy=args.policy)
 
     import jax
     import jax.numpy as jnp
@@ -36,12 +49,13 @@ def main():
 
     # deployment artifact: BN-fused + quantized (what NEURAL's EPA executes)
     cfg = snn_cnn.SNNCNNConfig(arch=args.arch, width_mult=0.125, timesteps=1,
-                               quant=QuantConfig(enabled=True, bits=8))
+                               quant=QuantConfig(enabled=True, bits=8),
+                               policy=args.policy)
     var = snn_cnn.init(jax.random.PRNGKey(1), cfg)
     fused = snn_cnn.fuse_model(var, cfg)
     ds = SyntheticImageDataset(image_size=32, seed=0)
     imgs, _ = ds.batch(0, 16)
-    logits, aux = snn_cnn.apply_fused(fused, jnp.asarray(imgs), cfg)
+    logits, _, aux = snn_cnn.forward(fused, jnp.asarray(imgs), cfg)
     print(f"\ndeployment model: fused+int8, total_spikes/img = "
           f"{float(aux['total_spikes']) / 16:.0f} (paper Table II metric)")
     print("stage accuracies:", {k: round(v, 4) for k, v in res.items()})

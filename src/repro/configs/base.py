@@ -63,13 +63,16 @@ class ModelConfig:
     attention_kind: str = "softmax"  # softmax | qk_spiking (C4)
     # policy: how the qk_spiking path executes (repro.ops.ExecutionPolicy
     # or a preset name). "reference" (the None default) is the pure-jnp
-    # path — the only one with surrogate gradients, so training REQUIRES
-    # it; "fused_dense" routes the LIF projections and binary-activation
+    # path; "fused_dense" routes the LIF projections and binary-activation
     # matmuls through the fused-PE / spike_matmul Pallas kernels
     # (deployed inference); "fused_packed" additionally ships every spike
     # tensor bit-packed (32/int32 lane + popcount vld_cnt, ~8x fewer spike
     # bytes) and caches the per-token spike state packed — all three are
-    # bit-identical in emitted spikes. Read via ``cfg.exec_policy``.
+    # bit-identical in emitted spikes. Training works under ANY of them:
+    # a differentiable policy (``for_training()`` / a "+grad" preset, what
+    # launch/train.py --policy requests) keeps the chosen forward and
+    # swaps in the surrogate-gradient custom_vjp backward. Read via
+    # ``cfg.exec_policy``.
     policy: Optional[Any] = None     # ExecutionPolicy | preset name | None
     # deprecated flag pair -> policy (repro.ops.compat translates + warns)
     use_event_kernels: Optional[bool] = None

@@ -36,6 +36,13 @@ def main() -> None:
     ap.add_argument("--spiking", action="store_true")
     ap.add_argument("--qk-attention", action="store_true",
                     help="paper C4: spiking QKFormer attention")
+    ap.add_argument("--policy", default=None,
+                    choices=["reference", "fused_dense", "fused_packed"],
+                    help="execution policy for the spiking layers "
+                         "(repro.ops.ExecutionPolicy); the training step "
+                         "resolves it through its gradient axis, so "
+                         "--policy fused_dense trains the forward on the "
+                         "event-driven kernels it deploys on")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--simulate-failure", type=int, default=0,
@@ -60,6 +67,13 @@ def main() -> None:
         overrides["spiking"] = True
     if args.qk_attention:
         overrides["attention_kind"] = "qk_spiking"
+    if args.policy:
+        if not args.spiking:
+            ap.error("--policy requires --spiking (execution policies "
+                     "govern the spiking layers)")
+        # a training driver always wants the gradient axis: forward runs
+        # the chosen kernels, backward gets the surrogate custom_vjp
+        overrides["policy"] = args.policy + "+grad"
     cfg = get_config(args.arch, **overrides)
     if args.reduced:
         cfg = reduce_cfg(cfg, **overrides)

@@ -421,8 +421,11 @@ def _qk_spiking_apply(p: dict, cfg: ModelConfig, x: Array,
         K pass's write-back (the full Fig 5 fusion — per-head masks need
         per-head row sums, so multi-head models mask outside); the output
         projection consumes the masked spikes through the event-skipped
-        ``ops.matmul``. Forward-exact vs the reference path; inference
-        only (no surrogate gradient).
+        ``ops.matmul``. Forward-exact vs the reference path; a
+        differentiable policy (``policy.for_training()`` — what
+        ``launch/train.py --spiking --policy fused_dense`` requests)
+        additionally routes these ops through their surrogate-gradient
+        custom_vjp so the SAME fused forward trains with backprop.
       * a packed policy ships the spike maps between passes bit-packed:
         single-head models keep the whole chain packed (the Q operand's
         row sums are in-kernel popcounts and the K pass's output leaves
@@ -445,17 +448,29 @@ def _qk_spiking_apply(p: dict, cfg: ModelConfig, x: Array,
             out_st = ops.dense_lif(p["wk"], x, cfg.lif, q=q_st,
                                    qk_threshold=cfg.lif.v_th, policy=pol)
         else:
-            dense_pol = ops.ExecutionPolicy("fused", "dense")
+            dense_pol = ops.ExecutionPolicy("fused", "dense",
+                                            pol.differentiable)
             q = ops.dense_lif(p["wq"], x, cfg.lif, policy=dense_pol
                               ).data.reshape(b, s, h, dh)
             k = ops.dense_lif(p["wk"], x, cfg.lif, policy=dense_pol
                               ).data.reshape(b, s, hkv, dh)
             k = _expand_kv(k, h)
-            mask = (q.astype(jnp.float32).sum(axis=-1, keepdims=True)
-                    >= cfg.lif.v_th)
-            flat = (k * mask.astype(k.dtype)).reshape(b * s, h * dh)
-            out_st = (ops.pack(flat.astype(jnp.int8)) if pol.packed
-                      else SpikeTensor.dense(flat))
+            if pol.differentiable:
+                # surrogate through the row-sum Heaviside (forward-equal to
+                # the hard mask below) and NO int8/packed round-trip — the
+                # masked map must stay f32 for the gradient to reach wq/wk
+                mask = qk_token_mask(q, mode="threshold",
+                                     threshold=cfg.lif.v_th,
+                                     surrogate=cfg.lif.surrogate,
+                                     alpha=cfg.lif.alpha)
+                out_st = SpikeTensor.dense(
+                    (mask * k).reshape(b * s, h * dh))
+            else:
+                mask = (q.astype(jnp.float32).sum(axis=-1, keepdims=True)
+                        >= cfg.lif.v_th)
+                flat = (k * mask.astype(k.dtype)).reshape(b * s, h * dh)
+                out_st = (ops.pack(flat.astype(jnp.int8)) if pol.packed
+                          else SpikeTensor.dense(flat))
         proj = ops.matmul(out_st, p["wo"]["w"], policy=pol).astype(x.dtype)
         if return_spike_state:
             state = _token_state(out_st, b, s)

@@ -11,22 +11,28 @@ Execution contract (matches the NEURAL pipeline):
   * ``fuse_model`` folds BN into conv and applies fixed-point quantization —
     the paper's F&Q stage producing the hardware deployment artifact.
 
-Models are list-of-layer-descriptor driven so init / apply / fuse walk the
-same structure.
+Models are list-of-layer-descriptor driven so init / forward / fuse walk
+the same structure — and there is ONE forward (``forward``): a single
+layer-walk parameterized by the parameter graph (unfused conv+BN training
+variables vs the BN-folded deployment artifact from ``fuse_model``) and an
+``ExecutionPolicy``. The KD pipeline trains, evaluates, and deploys the
+SAME body; the policy's gradient axis decides whether the walk runs the
+surrogate-gradient ops (train-what-you-serve) or the event-driven
+inference kernels.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from .. import ops
-from ..core.lif import LIFConfig, lif_multistep
+from ..core.lif import LIFConfig
 from ..core.quant import QuantConfig, fake_quant, fuse_bn_into_conv, fuse_bn_into_linear, quantize_fixed
-from ..core.qk_attention import qk_token_mask, qk_channel_mask
-from ..core.w2ttfs import w2ttfs_classifier, avgpool_classifier
+from ..core.w2ttfs import avgpool_classifier
 from ..ops import SpikeTensor
 from . import nn
 
@@ -47,11 +53,12 @@ class SNNCNNConfig:
     qk_blocks: int = 1
     qk_mask_mode: str = "threshold"  # threshold | or  (Fig 5 atten_reg = "or")
     dtype: Any = jnp.float32
-    # policy: how apply_fused (the deployed-inference path) executes —
-    # "reference" (the None default; pure jnp), "fused_dense" (event-driven
-    # Pallas kernels, int8 maps between layers), or "fused_packed" (event
-    # kernels + bit-packed inter-layer spike tensors, ~8x fewer spike
-    # bytes). All three emit bit-identical spikes; see
+    # policy: how ``forward`` executes — "reference" (the None default;
+    # pure jnp), "fused_dense" (event-driven Pallas kernels, int8 maps
+    # between layers), or "fused_packed" (event kernels + bit-packed
+    # inter-layer spike tensors, ~8x fewer spike bytes). All three emit
+    # bit-identical spikes; on the unfused training graph the policy is
+    # resolved through its gradient axis (surrogate-vjp forward). See
     # repro.ops.ExecutionPolicy.
     policy: Optional[Any] = None    # ExecutionPolicy | preset name | None
     # deprecated flag pair -> policy (repro.ops.compat translates + warns);
@@ -193,105 +200,11 @@ def _conv_bn(p, s, x, cfg, train, stride=1):
     return y.reshape(t, b, *cur.shape[2:]), new_bn
 
 
-def apply(variables: dict, images: Array, cfg: SNNCNNConfig,
-          train: bool = False) -> tuple[Array, dict, dict]:
-    """Forward pass. images: [B, H, W, C] analog input (direct encoding:
-    repeated across T; the first conv+LIF converts it to spikes).
-
-    Returns (logits [B, classes], new_state, aux) where aux carries per-layer
-    spike counts (Total Spikes, paper Table II) and spike rates.
-    """
-    params, state = variables["params"], variables["state"]
-    layers = build_layers(cfg)
-    t = cfg.timesteps
-    x = jnp.broadcast_to(images[None], (t, *images.shape)).astype(cfg.dtype)
-    new_state: list = []
-    aux = {"spikes": {}, "rates": {}}
-    li = 0
-
-    for p, s, layer in zip(params, state, layers):
-        kind = layer[0]
-        if kind == "conv_bn_lif":
-            stride = layer[3]
-            cur, bn_s = _conv_bn({"conv": p["conv"], "bn": p["bn"]}, s["bn"], x, cfg, train, stride)
-            x = lif_multistep(cur, cfg.lif)
-            new_state.append({"bn": bn_s})
-        elif kind == "maxpool":
-            x = _per_step(nn.max_pool, x)
-            new_state.append({})
-        elif kind == "resblock":
-            _, cin, cout, stride = layer
-            cur1, bn1_s = _conv_bn({"conv": p["conv1"], "bn": p["bn1"]}, s["bn1"], x, cfg, train, stride)
-            s1 = lif_multistep(cur1, cfg.lif)
-            cur2, bn2_s = _conv_bn({"conv": p["conv2"], "bn": p["bn2"]}, s["bn2"], s1, cfg, train, 1)
-            ns = {"bn1": bn1_s, "bn2": bn2_s}
-            if "conv_sc" in p:
-                sc, bnsc_s = _conv_bn({"conv": p["conv_sc"], "bn": p["bn_sc"]}, s["bn_sc"], x, cfg, train, stride)
-                ns["bn_sc"] = bnsc_s
-            else:
-                sc = x
-            # MS-ResNet shortcut: add membrane currents, then fire
-            x = lif_multistep(cur2 + sc, cfg.lif)
-            aux["spikes"][f"res{li}_s1"] = s1.sum()
-            new_state.append(ns)
-        elif kind == "qkformer":
-            d = layer[1]
-            tb = x.shape[:2]
-            hw = x.shape[2] * x.shape[3]
-            tok = x.reshape(*tb, hw, d)
-
-            def _lin_bn(name, inp, st):
-                w = _qw(p[name]["w"], cfg)
-                cur = inp @ w
-                flat = cur.reshape(tb[0] * tb[1], hw, d)
-                y, bns = nn.bn_apply(p[f"bn_{name}"], st[f"bn_{name}"],
-                                     flat.reshape(-1, d), train)
-                return y.reshape(*tb, hw, d), bns
-
-            qc, bnq_s = _lin_bn("q", tok, s)
-            q = lif_multistep(qc, cfg.lif)
-            kc, bnk_s = _lin_bn("k", tok, s)
-            k = lif_multistep(kc, cfg.lif)
-            mask = qk_token_mask(q, cfg.qk_mask_mode, surrogate=cfg.lif.surrogate,
-                                 alpha=cfg.lif.alpha)
-            attn = mask * k                                 # QKTA (Fig 5 (4))
-            pc, bnp_s = _lin_bn("proj", attn, s)
-            y = lif_multistep(pc + tok, cfg.lif)            # membrane shortcut
-            m1c, bnm1_s = _lin_bn("mlp1", y, s)
-            m1 = lif_multistep(m1c, cfg.lif)
-            m2c, bnm2_s = _lin_bn("mlp2", m1, s)
-            y2 = lif_multistep(m2c + y, cfg.lif)
-            x = y2.reshape(*tb, x.shape[2], x.shape[3], d)
-            aux["spikes"][f"qkf{li}_q"] = q.sum()
-            aux["spikes"][f"qkf{li}_mask_on"] = mask.sum()
-            new_state.append({"bn_q": bnq_s, "bn_k": bnk_s, "bn_proj": bnp_s,
-                              "bn_mlp1": bnm1_s, "bn_mlp2": bnm2_s})
-        elif kind == "head":
-            _, cin, size = layer
-            fc_w = _qw(p["fc"]["w"], cfg)
-            fc_b = p["fc"]["b"]
-            window = size
-            # spatial-mean over channels: FC input dim == channels (global pool)
-            def head_one(spikes_t):
-                if cfg.head == "w2ttfs":
-                    return w2ttfs_classifier(spikes_t, fc_w, fc_b, window)
-                return avgpool_classifier(spikes_t, fc_w, fc_b, window)
-            logits = jnp.mean(jax.vmap(head_one)(x), axis=0)  # rate-decode over T
-            new_state.append({})
-        aux["spikes"][f"layer{li}"] = x.sum() if kind != "head" else aux["spikes"].get(f"layer{li}", jnp.array(0.0))
-        if kind != "head":
-            aux["rates"][f"layer{li}"] = x.mean()
-        li += 1
-
-    aux["total_spikes"] = sum(v for k, v in aux["spikes"].items() if k.startswith("layer"))
-    return logits, new_state, aux
-
-
 # ----------------------------------------------------------------- F&Q fusion
 def fuse_model(variables: dict, cfg: SNNCNNConfig) -> list:
     """Paper F&Q stage: fold BN into conv/linear, fixed-point-quantize weights.
 
-    Returns fused param list usable by ``apply_fused`` (inference only).
+    Returns the fused param list ``forward`` deploys (conv+bias, no BN).
     """
     params, state = variables["params"], variables["state"]
     layers = build_layers(cfg)
@@ -343,214 +256,300 @@ def _account(aux: dict, st: SpikeTensor, packed: bool) -> SpikeTensor:
     return st
 
 
-def _apply_fused_event(fused_params: list, images: Array, cfg: SNNCNNConfig,
-                       policy: "ops.ExecutionPolicy") -> tuple[Array, dict]:
-    """Deployed inference on the event-driven kernels — ONE format-agnostic
-    body for both HBM formats (this used to be two hand-maintained forks).
+def forward(variables, images: Array, cfg: SNNCNNConfig, *,
+            train: bool = False, policy=None
+            ) -> tuple[Array, Optional[list], dict]:
+    """THE forward pass — one layer-walk for the whole train/deploy matrix.
 
-    Every inter-layer activation is a ``SpikeTensor`` in token layout
-    [T, B*H*W, C]; the format (int8 maps vs bit-packed words) comes from
-    the policy and every format-sensitive step is an ``ops.*`` call:
+    ``variables`` selects the parameter GRAPH:
+      * the ``{"params", "state"}`` dict from ``init`` — the unfused
+        conv+BN graph (``train`` switches BN batch stats + running-stat
+        updates vs running stats). The policy is resolved through its
+        gradient axis (``policy.for_training()``), so ``jax.grad`` always
+        sees the surrogate pseudo-derivative — with the reference policy
+        this is the classic pure-jnp KD training forward, with a fused
+        policy the SAME graph runs its forward through the event-driven
+        Pallas kernels (train what you serve).
+      * the list from ``fuse_model`` — the BN-folded F&Q deployment
+        artifact (what NEURAL's EPA executes). "reference" runs the
+        pure-jnp oracle; "fused_dense"/"fused_packed" run every
+        binary-activation layer through the fused PE dataflow kernels
+        with int8 / bit-packed spike tensors between layers, bit-identical
+        logits across all three.
 
-      * convs are ``ops.im2col`` patches (channel-preserving, so the packed
-        variant im2cols the WORD tensor) driven through
-        ``ops.fused_pe_layer`` — conv + bias + LIF threshold in one fused
-        PE pass, with the emitted spikes leaving in the policy's format;
-      * max-pools are ``ops.pool`` (packed: bitwise OR of the words);
-      * the QKFormer block chains five fused passes; each consumes the
-        ``vld_cnt`` its producer emitted in-kernel (``aux["vld_reused"]``
-        counts the hand-offs) and the Q operand's row sums are popcounts
-        when packed;
-      * only the W2TTFS head materializes a dense map (``ops.unpack``).
+    ``policy`` (or ``cfg.exec_policy`` when None) is the
+    ``repro.ops.ExecutionPolicy``. images: [B, H, W, C] analog input
+    (direct encoding: repeated across T; the first conv+LIF enters the
+    spiking domain).
 
-    ``aux["spike_hbm_bytes"]`` accounts every spike tensor shipped between
-    kernels in its shipped format (plus the packed/dense pair of keys for
-    the compression ratio when the policy is packed). Bit-identical spikes
-    and logits across "fused_packed" / "fused_dense" / "reference".
+    Returns (logits [B, classes], new_state, aux): ``new_state`` is the
+    updated BN state list for the unfused graph and None for the deployed
+    graph; ``aux`` carries per-layer spike counts (Total Spikes, paper
+    Table II), spike rates, and — on the event path — the spike-HBM
+    accounting and on-the-fly metadata reuse counters.
     """
     layers = build_layers(cfg)
+    fused_graph = not (isinstance(variables, dict) and "params" in variables)
+    pol = ops.as_policy(policy, cfg.exec_policy)
+    if not fused_graph:
+        pol = pol.for_training()
+    event = fused_graph and pol.fused and not pol.differentiable
+
+    params = variables if fused_graph else variables["params"]
+    state = [None] * len(layers) if fused_graph else variables["state"]
     t = cfg.timesteps
-    x = jnp.broadcast_to(images[None], (t, *images.shape)).astype(cfg.dtype)
-    aux = {"spikes": {}, "vld_reused": 0, "spike_hbm_bytes": 0}
-    if policy.packed:
-        aux["spike_hbm_packed_bytes"] = 0
-        aux["spike_hbm_dense_bytes"] = 0
+    x0 = jnp.broadcast_to(images[None], (t, *images.shape)).astype(cfg.dtype)
+
+    aux: dict = {"spikes": {}, "rates": {}, "vld_reused": 0}
+    if event:
+        aux["spike_hbm_bytes"] = 0
+        if pol.packed:
+            aux["spike_hbm_packed_bytes"] = 0
+            aux["spike_hbm_dense_bytes"] = 0
+    # the hardware atten_reg ("or") gates the deployed graph; the unfused
+    # graph uses the config's (surrogate-trainable) mask mode
+    qk_mode = "or" if fused_graph else cfg.qk_mask_mode
+    new_state: list = []
     st: Optional[SpikeTensor] = None   # [T, B*H*W, C] once the net spikes
     spatial = None                     # (B, H, W, C)
+    logits = None
     li = 0
 
+    # ------------------------------------------------------ shared helpers
+    def account(s_: SpikeTensor) -> SpikeTensor:
+        return _account(aux, s_, pol.packed) if event else s_
+
+    def to_tokens(spk5: Array) -> tuple[SpikeTensor, tuple]:
+        """[T, B, H, W, C] spikes -> (token SpikeTensor, spatial); the
+        event path enters the policy's HBM format here."""
+        b, h, w_, c = spk5.shape[1:]
+        flat = spk5.reshape(t, b * h * w_, c)
+        if event:
+            flat = flat.astype(jnp.int8)
+            s_ = ops.pack(flat) if pol.packed else SpikeTensor.dense(flat)
+            return account(s_), (b, h, w_, c)
+        return SpikeTensor.dense(flat), (b, h, w_, c)
+
+    def lif_chain(cur: Array) -> Array:
+        """Multi-timestep LIF over [T, ...] currents through ``ops.lif``.
+        The carry holds post-reset state with ``s_prev = 0``, which makes
+        the chain bit- AND gradient-identical to ``core.lif.lif_multistep``
+        under the reference policy."""
+        v = jnp.zeros_like(cur[0])
+        z = jnp.zeros_like(cur[0])
+        outs = []
+        for ti in range(t):
+            s_, v = ops.lif(cur[ti], v, z, lif_cfg=cfg.lif, policy=pol)
+            outs.append(s_)
+        return jnp.stack(outs).astype(cur.dtype)
+
+    # ------------------------------------------ float-cell (non-event) ops
+    def conv_current(pc: dict, s_in: SpikeTensor, sp: tuple, stride: int
+                     ) -> tuple[Array, tuple]:
+        """conv current over token spikes -> ([T, B, Ho, Wo, Cout] f32,
+        (Ho, Wo)): lax.conv under reference kernels (the classic training
+        numerics), conv-as-matmul through the differentiable ``ops.matmul``
+        when the policy runs the fused kernels."""
+        b, h, w_, c = sp
+        if pol.fused:
+            kh, kw = pc["w"].shape[:2]
+            pat, (ho, wo) = ops.im2col(s_in, sp, kh, kw, stride, t=t,
+                                       policy=pol)
+            w2d = ops.conv_matmul_weights(pc["w"], pat)
+            cur = ops.matmul(pat.data.reshape(t, b, ho * wo, -1), w2d,
+                             policy=pol).reshape(t, b, ho, wo, -1)
+            if "b" in pc:
+                cur = cur + pc["b"].astype(cur.dtype)
+            return cur, (ho, wo)
+        x5 = s_in.data.reshape(t * b, h, w_, c).astype(cfg.dtype)
+        y = nn.conv_apply(pc, x5, stride)
+        ho, wo = y.shape[1], y.shape[2]
+        return y.reshape(t, b, ho, wo, y.shape[3]), (ho, wo)
+
+    def bn5(cur: Array, p_l: dict, s_l: dict, key: str, ns: dict) -> Array:
+        """BN over [T, B, Ho, Wo, C] currents (stats pooled over T*B, the
+        unfused graph only); records the updated running stats in ``ns``."""
+        yb, ns[key] = nn.bn_apply(p_l[key], s_l[key],
+                                  cur.reshape(cur.shape[0] * cur.shape[1],
+                                              *cur.shape[2:]), train)
+        return yb.reshape(cur.shape)
+
+    def conv_block(names: tuple, p_l, s_l, s_in, sp, stride, ns) -> tuple:
+        """One conv (+BN on the unfused graph) current."""
+        conv_name, bn_name = names
+        if fused_graph:
+            return conv_current(p_l[conv_name], s_in, sp, stride)
+        cur, hw2 = conv_current({"w": _qw(p_l[conv_name]["w"], cfg)},
+                                s_in, sp, stride)
+        return bn5(cur, p_l, s_l, bn_name, ns), hw2
+
+    # ------------------------------------------------- event-cell ops (C3)
     def conv_lif(pc: dict, s_in: SpikeTensor, sp: tuple, stride: int,
                  residual=None) -> tuple[SpikeTensor, tuple]:
         """conv(spikes) + bias + LIF as ONE fused PE pass (conv-as-matmul),
         emitting in the policy's format."""
         kh, kw = pc["w"].shape[:2]
         pat, (ho, wo) = ops.im2col(s_in, sp, kh, kw, stride, t=t,
-                                   policy=policy)
+                                   policy=pol)
         w2d = ops.conv_matmul_weights(pc["w"], pat)
         out = ops.fused_pe_layer(pat, w2d, bias=pc.get("b"),
                                  residual=residual, lif_cfg=cfg.lif,
-                                 policy=policy)
-        return (_account(aux, out.spikes, policy.packed),
-                (sp[0], ho, wo, w2d.shape[1]))
+                                 policy=pol)
+        return account(out.spikes), (sp[0], ho, wo, w2d.shape[1])
 
-    def conv_current(pc: dict, s_in: SpikeTensor, sp: tuple,
-                     stride: int) -> Array:
+    def conv_cur_event(pc: dict, s_in: SpikeTensor, sp: tuple,
+                       stride: int) -> Array:
         """Shortcut conv: event-skipped matmul -> f32 membrane current
         (no LIF — it joins conv2's fused pass as the residual operand)."""
         kh, kw = pc["w"].shape[:2]
-        pat, _ = ops.im2col(s_in, sp, kh, kw, stride, t=t, policy=policy)
+        pat, _ = ops.im2col(s_in, sp, kh, kw, stride, t=t, policy=pol)
         w2d = ops.conv_matmul_weights(pc["w"], pat)
-        cur = jnp.stack([ops.matmul(pat[ti], w2d, policy=policy)
+        cur = jnp.stack([ops.matmul(pat[ti], w2d, policy=pol)
                          for ti in range(t)])
         return cur + pc["b"].astype(jnp.float32)
 
-    for p, layer in zip(fused_params, layers):
+    # ----------------------------------------------------- the layer walk
+    for p, s, layer in zip(params, state, layers):
         kind = layer[0]
+        ns: dict = {}
         if kind == "conv_bn_lif":
             stride = layer[3]
-            if st is not None:
+            if st is None:
+                # analog input: dense conv (+BN on the unfused graph), then
+                # the first LIF enters the spiking domain
+                if fused_graph:
+                    cur = _per_step(
+                        lambda z: nn.conv_apply(p["conv"], z, stride), x0)
+                else:
+                    cur, bn_s = _conv_bn({"conv": p["conv"], "bn": p["bn"]},
+                                         s["bn"], x0, cfg, train, stride)
+                    ns["bn"] = bn_s
+                st, spatial = to_tokens(lif_chain(cur))
+            elif event:
                 st, spatial = conv_lif(p["conv"], st, spatial, stride)
             else:
-                # analog input: dense conv + LIF, then enter the spiking
-                # domain (the first binary map is the first event tensor)
-                cur = _per_step(lambda z: nn.conv_apply(p["conv"], z, stride),
-                                x)
-                spk = lif_multistep(cur, cfg.lif)
-                b, h, w_, c = spk.shape[1:]
-                flat = spk.reshape(t, b * h * w_, c).astype(jnp.int8)
-                st = _account(aux,
-                              ops.pack(flat) if policy.packed
-                              else SpikeTensor.dense(flat), policy.packed)
-                spatial = (b, h, w_, c)
+                cur, (ho, wo) = conv_block(("conv", "bn"), p, s, st,
+                                           spatial, stride, ns)
+                st, spatial = to_tokens(lif_chain(cur))
         elif kind == "maxpool":
-            st, (h2, w2) = ops.pool(st, spatial, t=t, policy=policy)
-            st = _account(aux, st, policy.packed)
+            st, (h2, w2) = ops.pool(st, spatial, t=t, policy=pol)
+            st = account(st)
             spatial = (spatial[0], h2, w2, spatial[3])
         elif kind == "resblock":
             stride = layer[3]
-            s1, sp1 = conv_lif(p["conv1"], st, spatial, stride)
-            if "conv_sc" in p:
-                res = conv_current(p["conv_sc"], st, spatial, stride)
+            if event:
+                s1, sp1 = conv_lif(p["conv1"], st, spatial, stride)
+                if "conv_sc" in p:
+                    res = conv_cur_event(p["conv_sc"], st, spatial, stride)
+                else:
+                    res = st            # identity: binary spike shortcut
+                aux["spikes"][f"res{li}_s1"] = s1.count()
+                st, spatial = conv_lif(p["conv2"], s1, sp1, 1, residual=res)
             else:
-                res = st            # identity: binary spike shortcut
-            st, spatial = conv_lif(p["conv2"], s1, sp1, 1, residual=res)
+                cur1, hw1 = conv_block(("conv1", "bn1"), p, s, st, spatial,
+                                       stride, ns)
+                s1 = lif_chain(cur1)
+                st1, sp1 = to_tokens(s1)
+                cur2, _ = conv_block(("conv2", "bn2"), p, s, st1, sp1, 1,
+                                     ns)
+                if "conv_sc" in p:
+                    sc, _ = conv_block(("conv_sc", "bn_sc"), p, s, st,
+                                       spatial, stride, ns)
+                else:
+                    b, h, w_, c = spatial
+                    sc = st.data.reshape(t, b, h, w_, c).astype(cur2.dtype)
+                # MS-ResNet shortcut: add membrane currents, then fire
+                aux["spikes"][f"res{li}_s1"] = s1.sum()
+                st, spatial = to_tokens(lif_chain(cur2 + sc))
         elif kind == "qkformer":
-            # five fused passes, format-agnostic: each consumes the vld map
-            # its producer emitted in-kernel (the on-the-fly dataflow), the
-            # K pass applies the QK token mask on write-back (Fig 5), and
-            # spike maps cross HBM in the policy's format throughout
-            tok = st
-            lifkw = dict(lif_cfg=cfg.lif, policy=policy)
-            q3 = ops.fused_pe_layer(tok, p["q"]["w"], bias=p["q"]["b"],
-                                    **lifkw).spikes
-            # atten_reg "or" mode == rowsum >= 1 on integer spike counts
-            attn3 = ops.fused_pe_layer(tok, p["k"]["w"], bias=p["k"]["b"],
-                                       q=q3, qk_threshold=1.0,
-                                       **lifkw).spikes
-            y3 = ops.fused_pe_layer(attn3, p["proj"]["w"],
-                                    bias=p["proj"]["b"], residual=tok,
-                                    **lifkw).spikes
-            m13 = ops.fused_pe_layer(y3, p["mlp1"]["w"], bias=p["mlp1"]["b"],
-                                     **lifkw).spikes
-            y23 = ops.fused_pe_layer(m13, p["mlp2"]["w"],
-                                     bias=p["mlp2"]["b"], residual=y3,
-                                     **lifkw).spikes
-            for s_ in (q3, attn3, y3, m13, y23):
-                _account(aux, s_, policy.packed)
-            aux["vld_reused"] += sum(
-                1 for s_ in (tok, tok, attn3, y3, m13)
-                if s_.vld_cnt is not None)
-            st = y23
+            d = layer[1]
+            if event:
+                # five fused passes, format-agnostic: each consumes the vld
+                # map its producer emitted in-kernel (the on-the-fly
+                # dataflow), the K pass applies the QK token mask on
+                # write-back (Fig 5), and spike maps cross HBM in the
+                # policy's format throughout
+                tok = st
+                lifkw = dict(lif_cfg=cfg.lif, policy=pol)
+                q3 = ops.fused_pe_layer(tok, p["q"]["w"], bias=p["q"]["b"],
+                                        **lifkw).spikes
+                # atten_reg "or" mode == rowsum >= 1 on integer counts
+                attn3 = ops.fused_pe_layer(tok, p["k"]["w"],
+                                           bias=p["k"]["b"], q=q3,
+                                           qk_threshold=1.0, **lifkw).spikes
+                y3 = ops.fused_pe_layer(attn3, p["proj"]["w"],
+                                        bias=p["proj"]["b"], residual=tok,
+                                        **lifkw).spikes
+                m13 = ops.fused_pe_layer(y3, p["mlp1"]["w"],
+                                         bias=p["mlp1"]["b"], **lifkw).spikes
+                y23 = ops.fused_pe_layer(m13, p["mlp2"]["w"],
+                                         bias=p["mlp2"]["b"], residual=y3,
+                                         **lifkw).spikes
+                for s_ in (q3, attn3, y3, m13, y23):
+                    account(s_)
+                aux["vld_reused"] += sum(
+                    1 for s_ in (tok, tok, attn3, y3, m13)
+                    if s_.vld_cnt is not None)
+                aux["spikes"][f"qkf{li}_q"] = q3.count()
+                st = y23
+            else:
+                b, h, w_, _ = spatial
+                hw = h * w_
+                tok4 = st.data.reshape(t, b, hw, d)
+
+                def lin_bn(name, inp4):
+                    """linear (+bias on the fused graph / +BN on the
+                    unfused graph) -> [T, B, hw, d] current."""
+                    if fused_graph:
+                        cur = ops.matmul(inp4, p[name]["w"], policy=pol)
+                        return cur + p[name]["b"].astype(cur.dtype)
+                    cur = ops.matmul(inp4, _qw(p[name]["w"], cfg),
+                                     policy=pol)
+                    yb, bns = nn.bn_apply(p[f"bn_{name}"], s[f"bn_{name}"],
+                                          cur.reshape(-1, d), train)
+                    ns[f"bn_{name}"] = bns
+                    return yb.reshape(t, b, hw, d)
+
+                q4 = lif_chain(lin_bn("q", tok4))
+                k4 = lif_chain(lin_bn("k", tok4))
+                attn4 = ops.qk_mask(q4, k4, mode=qk_mode,
+                                    surrogate=cfg.lif.surrogate,
+                                    alpha=cfg.lif.alpha,
+                                    policy=pol).data            # QKTA
+                y4 = lif_chain(lin_bn("proj", attn4.astype(cfg.dtype))
+                               + tok4)          # membrane shortcut
+                m1 = lif_chain(lin_bn("mlp1", y4))
+                y2 = lif_chain(lin_bn("mlp2", m1) + y4)
+                aux["spikes"][f"qkf{li}_q"] = q4.sum()
+                aux["spikes"][f"qkf{li}_mask_on"] = \
+                    (q4.sum(axis=-1) > 0).sum()
+                st = SpikeTensor.dense(y2.reshape(t, b * hw, d))
         elif kind == "head":
             _, cin, size = layer
             b, h, w_, c = spatial
-            xd = ops.unpack(st, policy=policy).astype(cfg.dtype)
-            xd = xd.reshape(t, b, h, w_, c)
-            logits = jnp.mean(jax.vmap(
-                lambda s_t: w2ttfs_classifier(s_t, p["fc"]["w"],
-                                              p["fc"]["b"], size)
-                if cfg.head == "w2ttfs" else
-                avgpool_classifier(s_t, p["fc"]["w"], p["fc"]["b"],
-                                   size))(xd), axis=0)
+            if fused_graph:
+                fc_w, fc_b = p["fc"]["w"], p["fc"]["b"]
+            else:
+                fc_w, fc_b = _qw(p["fc"]["w"], cfg), p["fc"]["b"]
+            xd = ops.unpack(st, policy=pol) if event else st.data
+            xd = xd.astype(cfg.dtype).reshape(t, b, h, w_, c)
+
+            def head_one(s_t):
+                if cfg.head == "w2ttfs":
+                    return ops.w2ttfs_head(s_t, fc_w, fc_b, window=size,
+                                           policy=pol)
+                return avgpool_classifier(s_t, fc_w, fc_b, size)
+
+            # rate-decode over T
+            logits = jnp.mean(jnp.stack([head_one(xd[ti])
+                                         for ti in range(t)]), axis=0)
         if kind != "head":
             aux["spikes"][f"layer{li}"] = st.count()
+            aux["rates"][f"layer{li}"] = st.count() / math.prod(st.shape)
+        if not fused_graph:
+            new_state.append(ns)
         li += 1
-    aux["total_spikes"] = sum(aux["spikes"].values())
-    return logits, aux
 
-
-def _apply_fused_reference(fused_params: list, images: Array,
-                           cfg: SNNCNNConfig) -> tuple[Array, dict]:
-    """Pure-jnp oracle for the deployed model (no Pallas kernels): the
-    numerics-debugging path and the parity baseline for the event body."""
-    layers = build_layers(cfg)
-    t = cfg.timesteps
-    x = jnp.broadcast_to(images[None], (t, *images.shape)).astype(cfg.dtype)
-    aux = {"spikes": {}, "vld_reused": 0}
-    li = 0
-    for p, layer in zip(fused_params, layers):
-        kind = layer[0]
-        if kind == "conv_bn_lif":
-            stride = layer[3]
-            cur = _per_step(lambda z: nn.conv_apply(p["conv"], z, stride), x)
-            x = lif_multistep(cur, cfg.lif)
-        elif kind == "maxpool":
-            x = _per_step(nn.max_pool, x)
-        elif kind == "resblock":
-            stride = layer[3]
-            cur1 = _per_step(lambda z: nn.conv_apply(p["conv1"], z, stride),
-                             x)
-            s1 = lif_multistep(cur1, cfg.lif)
-            cur2 = _per_step(lambda z: nn.conv_apply(p["conv2"], z, 1), s1)
-            sc = _per_step(lambda z: nn.conv_apply(p["conv_sc"], z, stride),
-                           x) if "conv_sc" in p else x
-            x = lif_multistep(cur2 + sc, cfg.lif)
-        elif kind == "qkformer":
-            d = layer[1]
-            tb = x.shape[:2]
-            hw = x.shape[2] * x.shape[3]
-            tok = x.reshape(*tb, hw, d)
-            q = lif_multistep(tok @ p["q"]["w"] + p["q"]["b"], cfg.lif)
-            k = lif_multistep(tok @ p["k"]["w"] + p["k"]["b"], cfg.lif)
-            mask = qk_token_mask(q, "or")    # hardware atten_reg mode
-            attn = mask * k                  # still binary (mask x spikes)
-            y = lif_multistep(attn @ p["proj"]["w"] + p["proj"]["b"] + tok,
-                              cfg.lif)
-            m1 = lif_multistep(y @ p["mlp1"]["w"] + p["mlp1"]["b"], cfg.lif)
-            y2 = lif_multistep(m1 @ p["mlp2"]["w"] + p["mlp2"]["b"] + y,
-                               cfg.lif)
-            x = y2.reshape(*tb, x.shape[2], x.shape[3], d)
-        elif kind == "head":
-            _, cin, size = layer
-            logits = jnp.mean(jax.vmap(
-                lambda s_t: w2ttfs_classifier(s_t, p["fc"]["w"],
-                                              p["fc"]["b"], size)
-                if cfg.head == "w2ttfs" else
-                avgpool_classifier(s_t, p["fc"]["w"], p["fc"]["b"],
-                                   size))(x), axis=0)
-        if kind != "head":
-            aux["spikes"][f"layer{li}"] = x.sum()
-        li += 1
-    aux["total_spikes"] = sum(aux["spikes"].values())
-    return logits, aux
-
-
-def apply_fused(fused_params: list, images: Array, cfg: SNNCNNConfig,
-                policy=None) -> tuple[Array, dict]:
-    """Inference with the fused+quantized (deployment) model — conv+bias+LIF,
-    no BN. This is the computation NEURAL's EPA executes.
-
-    ``policy`` (or ``cfg.exec_policy`` when None) selects the execution
-    mode: "reference" runs the pure-jnp oracle; "fused_dense" runs every
-    binary-activation layer through the fused PE dataflow kernel (C3 + C4
-    in one Pallas pass: conv-as-matmul spike matmul with vld_cnt block
-    skipping, in-register LIF, QK token mask on write-back, on-the-fly
-    emission of the next layer's metadata); "fused_packed" additionally
-    ships every inter-layer spike tensor bit-packed. All three are
-    bit-identical in spikes and logits — the whole point of the hybrid
-    flow is one computation, many execution formats.
-    """
-    pol = ops.as_policy(policy, cfg.exec_policy)
-    if not pol.fused:
-        return _apply_fused_reference(fused_params, images, cfg)
-    return _apply_fused_event(fused_params, images, cfg, pol)
+    aux["total_spikes"] = sum(v for k_, v in aux["spikes"].items()
+                              if k_.startswith("layer"))
+    return logits, (None if fused_graph else new_state), aux

@@ -17,6 +17,13 @@ and dispatches to the implementation the kernel families registered in
 Spike-emitting ops return ``SpikeTensor`` with the ``vld_cnt`` metadata the
 next op's event skip consumes — the on-the-fly dataflow needs no explicit
 metadata plumbing at call sites.
+
+The policy's third axis — ``differentiable`` (``policy.for_training()`` /
+a ``"+grad"`` preset suffix) — resolves the same ``(op, mode)`` registry
+to the surrogate-gradient implementations in ``repro.ops.grad``: forward
+still runs this policy's kernels, backward substitutes the registered
+surrogate pseudo-derivative for every Heaviside. Differentiable spike
+outputs are dense f32 (autodiff connectivity) and skip the metadata maps.
 """
 from __future__ import annotations
 
@@ -66,7 +73,7 @@ def matmul(x: Spikes, w: Array, *, policy: PolicyLike = None,
     it only if the SpikeTensor does not already carry one)."""
     st = SpikeTensor.wrap(x)
     pol = _policy_for(policy, st)
-    return lookup("matmul", pol.kernels)(st, w, block_m=block_m,
+    return lookup("matmul", pol.mode)(st, w, block_m=block_m,
                                          block_n=block_n, block_k=block_k)
 
 
@@ -77,7 +84,7 @@ def lif(current: Array, v_prev: Array, s_prev: Array, *,
     """One LIF membrane step over an arbitrary-shaped current tensor.
     Returns (spikes int8, v_next f32)."""
     pol = _policy_for(policy)
-    return lookup("lif", pol.kernels)(current, v_prev, s_prev, lif_cfg)
+    return lookup("lif", pol.mode)(current, v_prev, s_prev, lif_cfg)
 
 
 # ----------------------------------------------------------------- fused_pe
@@ -101,7 +108,7 @@ def fused_pe(x: Spikes, w: Array, *,
     res = SpikeTensor.wrap(residual) if residual is not None else None
     qs = SpikeTensor.wrap(q) if q is not None else None
     pol = _policy_for(policy, st)
-    return lookup("fused_pe", pol.kernels)(
+    return lookup("fused_pe", pol.mode)(
         st, w, bias=bias, residual=res, q=qs, v_prev=v_prev, s_prev=s_prev,
         qk_threshold=qk_threshold, lif_cfg=lif_cfg, fmt=pol.format,
         block_m=block_m, block_n=block_n, block_k=block_k)
@@ -123,7 +130,7 @@ def fused_pe_layer(x: Spikes, w: Array, *,
     res = SpikeTensor.wrap(residual) if residual is not None else None
     qs = SpikeTensor.wrap(q) if q is not None else None
     pol = _policy_for(policy, st)
-    return lookup("fused_pe_layer", pol.kernels)(
+    return lookup("fused_pe_layer", pol.mode)(
         st, w, bias=bias, residual=res, q=qs, qk_threshold=qk_threshold,
         lif_cfg=lif_cfg, fmt=pol.format, block_m=block_m, block_n=block_n,
         block_k=block_k)
@@ -142,7 +149,7 @@ def im2col(x: Spikes, spatial: tuple, kh: int, kw: int, stride: int, *,
     packed map ARE the packing of the dense patches."""
     st = SpikeTensor.wrap(x)
     pol = _policy_for(policy, st)
-    return lookup("im2col", pol.kernels)(st, spatial, kh, kw, stride, t=t,
+    return lookup("im2col", pol.mode)(st, spatial, kh, kw, stride, t=t,
                                          fmt=pol.format)
 
 
@@ -155,7 +162,7 @@ def pool(x: Spikes, spatial: tuple, *, t: int = 1, window: int = 2,
     [t, B*H2*W2, C], (H2, W2))."""
     st = SpikeTensor.wrap(x)
     pol = _policy_for(policy, st)
-    return lookup("pool", pol.kernels)(st, spatial, t=t, window=window,
+    return lookup("pool", pol.mode)(st, spatial, t=t, window=window,
                                        fmt=pol.format)
 
 
@@ -173,13 +180,27 @@ def conv_matmul_weights(w: Array, patches: Spikes) -> Array:
 
 # ------------------------------------------------------------------ qk mask
 def qk_mask(q: Spikes, k: Spikes, *, threshold: float = 1.0,
-            policy: PolicyLike = None) -> SpikeTensor:
+            mode: str = "threshold", surrogate: str = "atan",
+            alpha: float = 2.0, policy: PolicyLike = None) -> SpikeTensor:
     """QKFormer token attention (paper C4): mask K's spike rows by Q's
     per-token row-sum threshold. Inputs [..., N, D]; output preserves the
-    policy's format."""
+    policy's format.
+
+    ``mode`` / ``surrogate`` / ``alpha`` shape the GRADIENT under a
+    differentiable policy: ``"threshold"`` backpropagates the registered
+    surrogate pseudo-derivative through the row-sum Heaviside into Q,
+    ``"or"`` (the hardware atten_reg) is forward-identical on integer
+    spike counts at threshold 1 but passes no gradient into Q. Inference
+    policies ignore them (the kernels compute the row-sum threshold)."""
     qs = SpikeTensor.wrap(q)
     ks = SpikeTensor.wrap(k)
     pol = _policy_for(policy, ks)
+    if pol.differentiable:
+        masked = lookup("qk_mask", pol.mode)(
+            qs.to_dense(jnp.float32) if qs.is_packed else qs.data,
+            ks.to_dense(jnp.float32) if ks.is_packed else ks.data,
+            threshold, mode=mode, surrogate=surrogate, alpha=alpha)
+        return SpikeTensor.dense(masked)
     masked = lookup("qk_mask", pol.kernels)(qs.to_dense(),
                                             ks.to_dense(), threshold)
     out = SpikeTensor.dense(masked)
@@ -233,7 +254,7 @@ def dense_lif(p: dict, x: Array, lif_cfg: LIFConfig, *,
     flat = x.reshape(-1, x.shape[-1])
     qs = SpikeTensor.wrap(q) if q is not None else None
     pol = _policy_for(policy)
-    return lookup("dense_lif", pol.kernels)(p, flat, lif_cfg, q=qs,
+    return lookup("dense_lif", pol.mode)(p, flat, lif_cfg, q=qs,
                                             qk_threshold=qk_threshold,
                                             fmt=pol.format)
 
@@ -244,5 +265,5 @@ def w2ttfs_head(spikes: Array, fc_w: Array, fc_b: Array, *, window: int,
     """W2TTFS classifier head (paper C2): window spike-count pooling +
     unit-scale FC over a dense [B, H, W, C] spike map."""
     pol = _policy_for(policy)
-    return lookup("w2ttfs_head", pol.kernels)(spikes, fc_w, fc_b,
+    return lookup("w2ttfs_head", pol.mode)(spikes, fc_w, fc_b,
                                               window=window)

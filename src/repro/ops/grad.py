@@ -1,0 +1,468 @@
+"""The gradient axis of ``repro.ops``: surrogate-gradient implementations.
+
+The paper's algorithm-level contribution (C1) trains single-timestep SNNs
+with plain backprop by substituting a smooth pseudo-derivative for the
+Heaviside (§III.B).  This module is that substitution expressed as
+``(op, mode)`` registry entries, so the SAME policy-driven forward the
+deployment stack runs is what the KD pipeline differentiates:
+
+  * ``(op, "reference+grad")`` — the pure-jnp surrogate body, differentiable
+    end to end through ``core.surrogate.spike`` (whose own ``custom_vjp``
+    carries the registered pseudo-derivative).  This is the autodiff
+    baseline every other mode is parity-tested against.
+  * ``(op, "fused+grad")`` — a ``jax.custom_vjp`` whose FORWARD runs the
+    fused Pallas kernel (dense or packed, per the policy's format) and
+    whose BACKWARD is the vjp of the matching surrogate body: the surrogate
+    pseudo-derivative replaces every Heaviside, and the matmuls transpose
+    as usual.  Forward numerics are the deployment kernels'; gradients are
+    the training graph's — "train what you serve" in one registry key.
+
+Residual/recompute policy: the backward pass re-linearizes the pure-jnp
+body from the saved INPUTS (``jax.vjp`` at cotangent time) instead of
+saving kernel intermediates — the standard surrogate-training trade, and
+the only correct option since the fused kernels never materialize their
+membrane pre-activations in HBM.
+
+Spike operands arrive as dense f32 arrays (the dispatch layer materializes
+SpikeTensors before calling in); spike outputs leave dense f32 so autodiff
+connectivity survives the op chain.  Packed-policy forwards round-trip
+through the pack/unpack kernels inside the primal only.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.lif import LIFConfig
+from ..core.surrogate import spike
+from .registry import register
+
+Array = jax.Array
+
+GRAD_MODES = ("reference+grad", "fused+grad")
+
+
+# --------------------------------------------------------------- machinery
+def _surrogate_vjp(kernel_fwd, ref_fwd):
+    """custom_vjp pair: primal = ``kernel_fwd`` (the policy's kernels),
+    backward = vjp of ``ref_fwd`` (the pure-jnp surrogate body).  Both take
+    ONE pytree of f32 arrays and must return structurally identical f32
+    outputs (enforced by the grad-parity tests)."""
+
+    @jax.custom_vjp
+    def f(operands):
+        return kernel_fwd(operands)
+
+    def fwd(operands):
+        return kernel_fwd(operands), operands
+
+    def bwd(operands, g):
+        _, vjp = jax.vjp(ref_fwd, operands)
+        return vjp(g)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def _f32(x: Optional[Array]) -> Optional[Array]:
+    return None if x is None else x.astype(jnp.float32)
+
+
+def _dense_operand(st) -> Array:
+    """SpikeTensor -> dense float operand, preserving autodiff connectivity
+    (a dense f32 payload passes through untouched)."""
+    from .spike_tensor import SpikeTensor
+
+    if isinstance(st, SpikeTensor):
+        return st.to_dense(jnp.float32) if st.is_packed \
+            else st.data.astype(jnp.float32)
+    return st.astype(jnp.float32)
+
+
+def _emitted_dense(st) -> Array:
+    """A kernel-emitted SpikeTensor (either format) -> dense f32 primal."""
+    return _f32(st.to_dense(jnp.float32) if st.is_packed else st.data)
+
+
+def _lif_step(cur: Array, v_prev: Optional[Array], s_prev: Optional[Array],
+              cfg: LIFConfig) -> tuple[Array, Array]:
+    """The surrogate LIF body in the KERNEL's state convention (reset by
+    ``s_prev`` on entry, reset by the emitted spike on exit — idempotent,
+    so chaining with ``s_prev=0`` over already-reset state reproduces
+    ``core.lif.lif_single_step`` exactly, gradient included)."""
+    v = cur if v_prev is None else \
+        cfg.tau * v_prev * (1.0 - (0.0 if s_prev is None else s_prev)) + cur
+    s = spike(v - cfg.v_th, cfg.surrogate, cfg.alpha)
+    v_next = v - cfg.v_th * s if cfg.soft_reset else v * (1.0 - s)
+    return s, v_next
+
+
+def _qk_rowmask(q: Array, threshold: float, mode: str, surrogate: str,
+                alpha: float) -> Array:
+    """Per-token write-back mask — ``core.qk_attention.qk_token_mask``
+    (ONE definition of the row-sum semantics): the surrogate flows through
+    the threshold Heaviside; ``mode="or"`` is the hardware atten_reg,
+    forward-identical on integer spike counts with threshold 1 but with
+    zero gradient into Q."""
+    from ..core.qk_attention import qk_token_mask
+
+    return qk_token_mask(q, mode, threshold, surrogate, alpha)
+
+
+# ------------------------------------------------------------------- matmul
+@functools.lru_cache(maxsize=None)
+def _matmul_grad(kernels: str, block_m: int, block_n: int, block_k: int):
+    # unlike the 2-D inference entry point, the differentiable matmul takes
+    # leading batch/time dims (the training body feeds [T, B, N, K] token
+    # stacks); the reference body contracts batched exactly like the jnp
+    # graph it replaces, the kernel form flattens for the Pallas call
+    def ref_fwd(ops):
+        return ops["x"] @ ops["w"]
+
+    if kernels == "reference":
+        return ref_fwd
+
+    def kernel_fwd(ops):
+        from ..kernels.spike_matmul import spike_matmul
+
+        x, w = ops["x"], ops["w"]
+        out = spike_matmul(x.reshape(-1, x.shape[-1]), w, block_m=block_m,
+                           block_n=block_n, block_k=block_k)
+        return out.reshape(*x.shape[:-1], w.shape[-1])
+
+    return _surrogate_vjp(kernel_fwd, ref_fwd)
+
+
+def _matmul_impl(kernels):
+    def impl(st, w, *, block_m, block_n, block_k):
+        f = _matmul_grad(kernels, block_m, block_n, block_k)
+        return f({"x": _dense_operand(st), "w": _f32(w)})
+    return impl
+
+
+# ---------------------------------------------------------------------- lif
+@functools.lru_cache(maxsize=None)
+def _lif_grad(kernels: str, cfg: LIFConfig):
+    def ref_fwd(ops):
+        return _lif_step(ops["current"], ops["v_prev"], ops["s_prev"], cfg)
+
+    if kernels == "reference":
+        return ref_fwd
+
+    def kernel_fwd(ops):
+        from ..kernels.lif_update import lif_update
+
+        s, v = lif_update(ops["current"], ops["v_prev"], ops["s_prev"],
+                          tau=cfg.tau, v_th=cfg.v_th,
+                          soft_reset=cfg.soft_reset)
+        return _f32(s), _f32(v)
+
+    return _surrogate_vjp(kernel_fwd, ref_fwd)
+
+
+def _lif_impl(kernels):
+    def impl(current, v_prev, s_prev, cfg: LIFConfig):
+        f = _lif_grad(kernels, cfg)
+        return f({"current": _f32(current), "v_prev": _f32(v_prev),
+                  "s_prev": _f32(s_prev)})
+    return impl
+
+
+# ----------------------------------------------------------------- fused_pe
+def _pe_current(ops: dict) -> Array:
+    cur = ops["x"] @ ops["w"]
+    if ops.get("bias") is not None:
+        cur = cur + ops["bias"].reshape(1, -1)
+    if ops.get("residual") is not None:
+        cur = cur + ops["residual"]
+    return cur
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_pe_grad(kernels: str, cfg: LIFConfig, qk_threshold: float,
+                   fmt: str, block_m: int, block_n: int, block_k: int,
+                   stateful: bool):
+    def ref_fwd(ops):
+        s, v_next = _lif_step(_pe_current(ops),
+                              ops.get("v_prev"), ops.get("s_prev"), cfg)
+        if ops.get("q") is not None:
+            s = s * _qk_rowmask(ops["q"].reshape(s.shape[0], -1),
+                                qk_threshold, "threshold", cfg.surrogate,
+                                cfg.alpha)
+        return (s, v_next) if stateful else (s,)
+
+    if kernels == "reference":
+        return ref_fwd
+
+    def kernel_fwd(ops):
+        from ..kernels.fused_pe import fused_pe
+
+        out = fused_pe(ops["x"], ops["w"], bias=ops.get("bias"),
+                       residual=ops.get("residual"),
+                       v_prev=ops.get("v_prev"), s_prev=ops.get("s_prev"),
+                       q=ops.get("q"), tau=cfg.tau, v_th=cfg.v_th,
+                       soft_reset=cfg.soft_reset, qk_threshold=qk_threshold,
+                       block_m=block_m, block_n=block_n, block_k=block_k,
+                       out_format=fmt)
+        spk = out.spikes
+        if fmt == "packed":
+            from ..kernels.packed import unpack_spikes
+
+            spk = unpack_spikes(spk)
+        return (_f32(spk), _f32(out.v_next)) if stateful else (_f32(spk),)
+
+    return _surrogate_vjp(kernel_fwd, ref_fwd)
+
+
+def _fused_pe_impl(kernels):
+    def impl(st, w, *, bias, residual, q, v_prev, s_prev, qk_threshold,
+             lif_cfg, fmt, block_m, block_n, block_k):
+        from .dispatch import FusedOut
+        from .spike_tensor import SpikeTensor
+
+        stateful = v_prev is not None
+        f = _fused_pe_grad(kernels, lif_cfg, qk_threshold, fmt,
+                           block_m, block_n, block_k, stateful)
+        ops = {"x": _dense_operand(st), "w": _f32(w), "bias": _f32(bias)}
+        if residual is not None:
+            ops["residual"] = _dense_operand(residual)
+        if q is not None:
+            ops["q"] = _dense_operand(q)
+        if stateful:
+            ops["v_prev"] = _f32(v_prev)
+            ops["s_prev"] = _f32(s_prev) if s_prev is not None \
+                else jnp.zeros_like(ops["v_prev"])
+        out = f(ops)
+        spk = out[0]
+        return FusedOut(SpikeTensor.dense(spk, block_m=block_m,
+                                          block_k=block_n),
+                        out[1] if stateful else None, None)
+    return impl
+
+
+# ----------------------------------------------------------- fused_pe_layer
+@functools.lru_cache(maxsize=None)
+def _fused_pe_layer_grad(kernels: str, cfg: LIFConfig, qk_threshold: float,
+                         fmt: str, block_m: int, block_n: int, block_k: int,
+                         t: int):
+    def ref_fwd(ops):
+        x, w = ops["x"], ops["w"]
+        spikes_ts = []
+        v = s = None
+        for ti in range(t):
+            res_t = None if ops.get("residual") is None \
+                else ops["residual"][ti]
+            cur = _pe_current({"x": x[ti], "w": w, "bias": ops.get("bias"),
+                               "residual": res_t})
+            if t == 1:
+                spk, _ = _lif_step(cur, None, None, cfg)
+            else:
+                # stateful form: the LIF carry holds the PRE-mask spikes;
+                # the QK mask gates outside (the kernel layer's T>1 path)
+                spk, v = _lif_step(cur, v, s, cfg)
+                s = spk
+            if ops.get("q") is not None:
+                spk = spk * _qk_rowmask(
+                    ops["q"][ti].reshape(spk.shape[0], -1), qk_threshold,
+                    "threshold", cfg.surrogate, cfg.alpha)
+            spikes_ts.append(spk)
+        return jnp.stack(spikes_ts)
+
+    if kernels == "reference":
+        return ref_fwd
+
+    def kernel_fwd(ops):
+        from ..kernels.fused_pe import fused_pe_layer
+        from ..kernels.packed import unpack_spikes
+
+        spikes, _ = fused_pe_layer(
+            ops["x"], ops["w"], bias=ops.get("bias"),
+            residual=ops.get("residual"), q=ops.get("q"),
+            tau=cfg.tau, v_th=cfg.v_th, soft_reset=cfg.soft_reset,
+            qk_threshold=qk_threshold, block_m=block_m, block_n=block_n,
+            block_k=block_k, out_format=fmt)
+        if fmt == "packed":
+            spikes = unpack_spikes(spikes)
+        return _f32(spikes)
+
+    return _surrogate_vjp(kernel_fwd, ref_fwd)
+
+
+def _fused_pe_layer_impl(kernels):
+    def impl(st, w, *, bias, residual, q, qk_threshold, lif_cfg, fmt,
+             block_m, block_n, block_k):
+        from .dispatch import FusedOut
+        from .spike_tensor import SpikeTensor
+
+        x = _dense_operand(st)
+        f = _fused_pe_layer_grad(kernels, lif_cfg, qk_threshold, fmt,
+                                 block_m, block_n, block_k, x.shape[0])
+        ops = {"x": x, "w": _f32(w), "bias": _f32(bias)}
+        if residual is not None:
+            ops["residual"] = _dense_operand(residual)
+        if q is not None:
+            ops["q"] = _dense_operand(q)
+        spk = f(ops)
+        return FusedOut(SpikeTensor.dense(spk, block_m=block_m,
+                                          block_k=block_n), None, None)
+    return impl
+
+
+# ------------------------------------------------------------------ qk_mask
+@functools.lru_cache(maxsize=None)
+def _qk_mask_grad(kernels: str, threshold: float, mode: str, surrogate: str,
+                  alpha: float):
+    def ref_fwd(ops):
+        return _qk_rowmask(ops["q"], threshold, mode, surrogate, alpha) \
+            * ops["k"]
+
+    if kernels == "reference":
+        return ref_fwd
+
+    def kernel_fwd(ops):
+        from ..kernels.qk_attention import qk_attention_fused
+
+        # "or" on non-negative integer spike counts == rowsum >= 1
+        thr = 1.0 if mode == "or" else threshold
+        return _f32(qk_attention_fused(ops["q"], ops["k"], threshold=thr))
+
+    return _surrogate_vjp(kernel_fwd, ref_fwd)
+
+
+def _qk_mask_impl(kernels):
+    def impl(q, k, threshold, *, mode="threshold", surrogate="atan",
+             alpha=2.0):
+        f = _qk_mask_grad(kernels, threshold, mode, surrogate, alpha)
+        return f({"q": _f32(q), "k": _f32(k)})
+    return impl
+
+
+# ---------------------------------------------------------------- dense_lif
+@functools.lru_cache(maxsize=None)
+def _dense_lif_grad(kernels: str, cfg: LIFConfig, qk_threshold: float,
+                    fmt: str, has_bias: bool):
+    def ref_fwd(ops):
+        cur = ops["x"] @ ops["w"]
+        if has_bias:
+            cur = cur + ops["b"]
+        s = spike(cur - cfg.v_th, cfg.surrogate, cfg.alpha)
+        if ops.get("q") is not None:
+            s = s * _qk_rowmask(ops["q"].reshape(s.shape[0], -1),
+                                qk_threshold, "threshold", cfg.surrogate,
+                                cfg.alpha)
+        return s
+
+    if kernels == "reference":
+        return ref_fwd
+
+    def kernel_fwd(ops):
+        from .impls import _dense_lif_fused
+
+        p = {"w": ops["w"]}
+        if has_bias:
+            p["b"] = ops["b"]
+        q = ops.get("q")
+        from .spike_tensor import SpikeTensor
+
+        st = _dense_lif_fused(p, ops["x"], cfg,
+                              q=None if q is None else SpikeTensor.dense(q),
+                              qk_threshold=qk_threshold, fmt=fmt)
+        return _emitted_dense(st)
+
+    return _surrogate_vjp(kernel_fwd, ref_fwd)
+
+
+def _dense_lif_impl(kernels):
+    def impl(p, flat, cfg, *, q, qk_threshold, fmt):
+        from .spike_tensor import SpikeTensor
+
+        f = _dense_lif_grad(kernels, cfg, qk_threshold, fmt, "b" in p)
+        ops = {"x": _f32(flat), "w": _f32(p["w"])}
+        if "b" in p:
+            ops["b"] = _f32(p["b"])
+        if q is not None:
+            ops["q"] = _dense_operand(q)
+        return SpikeTensor.dense(f(ops))
+    return impl
+
+
+# -------------------------------------------------------------- w2ttfs_head
+@functools.lru_cache(maxsize=None)
+def _w2ttfs_grad(kernels: str, window: int):
+    from ..core.w2ttfs import w2ttfs_classifier
+
+    def ref_fwd(ops):
+        return w2ttfs_classifier(ops["spikes"], ops["fc_w"], ops["fc_b"],
+                                 window)
+
+    if kernels == "reference":
+        return ref_fwd
+
+    def kernel_fwd(ops):
+        from ..kernels.w2ttfs_pool import w2ttfs_pool_fc
+
+        return _f32(w2ttfs_pool_fc(ops["spikes"], ops["fc_w"], ops["fc_b"],
+                                   window=window))
+
+    return _surrogate_vjp(kernel_fwd, ref_fwd)
+
+
+def _w2ttfs_impl(kernels):
+    def impl(spikes, fc_w, fc_b, *, window):
+        f = _w2ttfs_grad(kernels, window)
+        return f({"spikes": _f32(spikes), "fc_w": _f32(fc_w),
+                  "fc_b": _f32(fc_b)})
+    return impl
+
+
+# ------------------------------------------- differentiable data movement
+# im2col / max-pool are pure data movement with native vjps (slicing and
+# reduce_window); the grad-mode registrations only differ from the
+# inference ones by PRESERVING the float dtype (the int8 casts in the
+# inference impls are exact on {0,1} values but sever autodiff).
+
+def _im2col_diff(st, spatial, kh, kw, stride, *, t, fmt):
+    from ..models import nn
+    from .spike_tensor import SpikeTensor
+
+    b, h, w_, c = spatial
+    x = _dense_operand(st)[:, :b * h * w_].reshape(t * b, h, w_, c)
+    pat = nn.im2col(x, kh, kw, stride)
+    _, ho, wo, kdim = pat.shape
+    return (SpikeTensor.dense(pat.reshape(t, b * ho * wo, kdim),
+                              block_m=st.block_m, block_k=st.block_k),
+            (ho, wo))
+
+
+def _pool_diff(st, spatial, *, t, window, fmt):
+    from ..models import nn
+    from .spike_tensor import SpikeTensor
+
+    b, h, w_, c = spatial
+    x = _dense_operand(st)[:, :b * h * w_].reshape(t * b, h, w_, c)
+    pooled = nn.max_pool(x, window)
+    h2, w2 = pooled.shape[1], pooled.shape[2]
+    return (SpikeTensor.dense(pooled.reshape(t, b * h2 * w2, c),
+                              block_m=st.block_m, block_k=st.block_k),
+            (h2, w2))
+
+
+# ------------------------------------------------------------ registration
+def _register_all() -> None:
+    for kernels in ("reference", "fused"):
+        mode = f"{kernels}+grad"
+        register("matmul", mode)(_matmul_impl(kernels))
+        register("lif", mode)(_lif_impl(kernels))
+        register("fused_pe", mode)(_fused_pe_impl(kernels))
+        register("fused_pe_layer", mode)(_fused_pe_layer_impl(kernels))
+        register("qk_mask", mode)(_qk_mask_impl(kernels))
+        register("dense_lif", mode)(_dense_lif_impl(kernels))
+        register("w2ttfs_head", mode)(_w2ttfs_impl(kernels))
+        register("im2col", mode)(_im2col_diff)
+        register("pool", mode)(_pool_diff)
+
+
+_register_all()

@@ -394,3 +394,9 @@ def _w2ttfs_head_ref(spikes: Array, fc_w: Array, fc_b: Array, *, window):
     from ..kernels.w2ttfs_pool import w2ttfs_pool_fc_ref
 
     return w2ttfs_pool_fc_ref(spikes, fc_w, fc_b, window)
+
+
+# ============================================================= gradient axis
+# the "+grad" modes (surrogate-gradient custom_vjp over these forwards)
+# register on import alongside the inference modes
+from . import grad as _grad  # noqa: E402,F401

@@ -14,10 +14,21 @@ policy value every ``ops.*`` entry point and model config understands:
                          interchange: spike tensors ship 32-per-int32-lane
                          with popcount metadata (~8x fewer spike bytes).
 
-A policy is two orthogonal axes — which KERNELS run and which FORMAT spike
-tensors take in HBM — because the legacy flag space allowed the off-diagonal
-combination (reference compute + packed per-slot state caching in serving);
-the named presets above are the three supported diagonal points.
+A policy is three orthogonal axes — which KERNELS run, which FORMAT spike
+tensors take in HBM, and whether the graph is DIFFERENTIABLE (the legacy
+flag space allowed the off-diagonal reference+packed combination used by
+serving's per-slot state caching); the named presets above are the three
+supported inference points.
+
+The ``differentiable`` axis is the training story (paper §III.B, C1): a
+differentiable policy routes every ``ops.*`` entry point through the
+surrogate-gradient implementations registered in ``repro.ops.grad`` —
+forward still runs THIS policy's kernels (reference jnp or the fused
+Pallas passes, dense or packed), backward substitutes the registered
+surrogate pseudo-derivative for every Heaviside and the standard
+transposes for the matmuls. Request it with ``policy.for_training()`` (or
+a ``"<preset>+grad"`` spelling such as ``"fused_dense+grad"``), so
+"train on the fused kernel, deploy the same graph" is one axis flip.
 """
 from __future__ import annotations
 
@@ -26,12 +37,14 @@ from typing import Optional, Union
 
 KERNEL_MODES = ("reference", "fused")
 FORMATS = ("dense", "packed")
+GRAD_SUFFIX = "+grad"
 
 
 @dataclasses.dataclass(frozen=True)
 class ExecutionPolicy:
     kernels: str = "reference"      # "reference" | "fused"
     format: str = "dense"           # "dense" | "packed"
+    differentiable: bool = False    # surrogate-gradient custom_vjp graph
 
     def __post_init__(self):
         assert self.kernels in KERNEL_MODES, self.kernels
@@ -39,8 +52,7 @@ class ExecutionPolicy:
 
     @property
     def fused(self) -> bool:
-        """True when the event-driven Pallas kernels run (inference-only:
-        they carry no surrogate gradient)."""
+        """True when the event-driven Pallas kernels run the forward."""
         return self.kernels == "fused"
 
     @property
@@ -49,11 +61,28 @@ class ExecutionPolicy:
         return self.format == "packed"
 
     @property
+    def mode(self) -> str:
+        """The ``(op, mode)`` registry key axis: the kernel mode, suffixed
+        ``+grad`` when this policy asks for the differentiable graph."""
+        return self.kernels + (GRAD_SUFFIX if self.differentiable else "")
+
+    def for_training(self) -> "ExecutionPolicy":
+        """The same execution point with the gradient axis ON: identical
+        forward numerics, surrogate-gradient backward."""
+        return dataclasses.replace(self, differentiable=True)
+
+    def for_inference(self) -> "ExecutionPolicy":
+        """The same execution point with the gradient axis OFF."""
+        return dataclasses.replace(self, differentiable=False)
+
+    @property
     def name(self) -> str:
         if self.kernels == "reference":
-            return ("reference" if self.format == "dense"
+            base = ("reference" if self.format == "dense"
                     else "reference_packed")
-        return f"fused_{self.format}"
+        else:
+            base = f"fused_{self.format}"
+        return base + (GRAD_SUFFIX if self.differentiable else "")
 
     def __str__(self) -> str:
         return self.name
@@ -76,17 +105,23 @@ PolicyLike = Union[ExecutionPolicy, str, None]
 
 def as_policy(policy: PolicyLike,
               default: Optional[ExecutionPolicy] = None) -> ExecutionPolicy:
-    """Normalize a policy spec (preset name, ExecutionPolicy, or None)."""
+    """Normalize a policy spec (preset name, optionally ``+grad``-suffixed,
+    an ExecutionPolicy, or None)."""
     if policy is None:
         return default if default is not None else REFERENCE
     if isinstance(policy, ExecutionPolicy):
         return policy
     if isinstance(policy, str):
+        base, grad = policy, False
+        if policy.endswith(GRAD_SUFFIX):
+            base, grad = policy[:-len(GRAD_SUFFIX)], True
         try:
-            return POLICIES[policy]
+            pol = POLICIES[base]
         except KeyError:
             raise ValueError(
                 f"unknown execution policy {policy!r}; expected one of "
-                f"{sorted(POLICIES)}") from None
+                f"{sorted(POLICIES)} (optionally suffixed "
+                f"'{GRAD_SUFFIX}')") from None
+        return pol.for_training() if grad else pol
     raise TypeError(f"policy must be an ExecutionPolicy, a preset name, or "
                     f"None — got {type(policy).__name__}")

@@ -96,7 +96,8 @@ def make_kd_train_step(student_apply: Callable, teacher_apply: Callable,
                        kd: KDConfig = KDConfig(),
                        schedule: Callable[[Array], Array],
                        optimizer: str = "sgd", momentum: float = 0.9,
-                       weight_decay: float = 5e-4) -> Callable:
+                       weight_decay: float = 5e-4,
+                       policy: Any = None) -> Callable:
     """The paper's KD training step (Fig 2(b)).
 
     ``student_apply(params, state, images) -> (logits, new_state)`` — the
@@ -104,10 +105,28 @@ def make_kd_train_step(student_apply: Callable, teacher_apply: Callable,
     params must already encode quantization (KD-QAT stage) when enabled.
     ``teacher_apply(teacher_params, images) -> logits`` (frozen, eval mode).
 
+    ``policy``: an optional ``repro.ops.ExecutionPolicy`` (or preset name)
+    for the student's training forward. When given, it is resolved through
+    its gradient axis (``for_training()``) and passed to ``student_apply``
+    as a ``policy=`` kwarg — so a policy-driven student (e.g.
+    ``snn_cnn.forward``) trains through the SAME kernels it deploys on
+    ("train what you serve"); the surrogate custom_vjp supplies the
+    backward. When None, ``student_apply`` keeps its 3-arg signature and
+    its own execution default.
+
     Returns step((params, opt, state), batch={'images','labels'}) ->
     ((params, opt, new_state), metrics). SGD-momentum per paper §V.A.
     """
     from ..optim import sgd_update, adamw_update
+
+    if policy is not None:
+        from .. import ops
+
+        pol = ops.as_policy(policy).for_training()
+        _student = student_apply
+
+        def student_apply(params, state, images):  # noqa: F811
+            return _student(params, state, images, policy=pol)
 
     def loss_fn(params, state, batch):
         s_logits, new_state = student_apply(params, state, batch["images"])

@@ -178,7 +178,7 @@ def test_lif_update_pallas_non_multiple_block():
 
 
 # --------------------------------------------- model wiring (deployed paths)
-def test_snn_cnn_apply_fused_event_path_parity():
+def test_snn_cnn_forward_event_path_parity():
     """QKFResNet-11 deployed inference: fused-PE event path == dense path,
     and the on-the-fly metadata is chained through the QKFormer block."""
     from repro.models import snn_cnn
@@ -188,9 +188,9 @@ def test_snn_cnn_apply_fused_event_path_parity():
     var = snn_cnn.init(jax.random.PRNGKey(0), cfg)
     fused = snn_cnn.fuse_model(var, cfg)
     img = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
-    l_ref, aux_ref = snn_cnn.apply_fused(fused, img, cfg)
+    l_ref, _, aux_ref = snn_cnn.forward(fused, img, cfg)
     cfg_ev = dataclasses.replace(cfg, use_event_kernels=True)
-    l_ev, aux_ev = snn_cnn.apply_fused(fused, img, cfg_ev)
+    l_ev, _, aux_ev = snn_cnn.forward(fused, img, cfg_ev)
     np.testing.assert_allclose(np.asarray(l_ev), np.asarray(l_ref),
                                rtol=1e-4, atol=1e-4)
     assert float(aux_ev["total_spikes"]) == float(aux_ref["total_spikes"])

@@ -308,8 +308,8 @@ def test_legacy_apply_fused_kwargs_equal_policy_results():
     img = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
     legacy_cfg = dataclasses.replace(cfg, **_legacy_kwargs(ev=True,
                                                            fmt="packed"))
-    l_old, _ = snn_cnn.apply_fused(fused, img, legacy_cfg)
-    l_new, _ = snn_cnn.apply_fused(fused, img, cfg, policy="fused_packed")
+    l_old, _, _ = snn_cnn.forward(fused, img, legacy_cfg)
+    l_new, _, _ = snn_cnn.forward(fused, img, cfg, policy="fused_packed")
     np.testing.assert_array_equal(np.asarray(l_old), np.asarray(l_new))
 
 

@@ -203,13 +203,13 @@ def test_snn_cnn_packed_event_path_bit_identical_to_dense_event_path():
     var = snn_cnn.init(jax.random.PRNGKey(0), cfg)
     fused = snn_cnn.fuse_model(var, cfg)
     img = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
-    l_ref, aux_ref = snn_cnn.apply_fused(fused, img, cfg)
+    l_ref, _, aux_ref = snn_cnn.forward(fused, img, cfg)
     cfg_pk = dataclasses.replace(cfg, use_event_kernels=True,
                                  spike_format="packed")
-    l_pk, aux_pk = snn_cnn.apply_fused(fused, img, cfg_pk)
+    l_pk, _, aux_pk = snn_cnn.forward(fused, img, cfg_pk)
     cfg_dn = dataclasses.replace(cfg, use_event_kernels=True,
                                  spike_format="dense")
-    l_dn, aux_dn = snn_cnn.apply_fused(fused, img, cfg_dn)
+    l_dn, _, aux_dn = snn_cnn.forward(fused, img, cfg_dn)
     np.testing.assert_allclose(np.asarray(l_pk), np.asarray(l_dn),
                                rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(np.asarray(l_pk), np.asarray(l_ref),

@@ -25,7 +25,7 @@ def _imgs(b=2, key=0):
 def test_forward_shapes_and_finite(arch):
     cfg = _cfg(arch)
     var = snn_cnn.init(jax.random.PRNGKey(0), cfg)
-    logits, _, aux = snn_cnn.apply(var, _imgs(), cfg, train=False)
+    logits, _, aux = snn_cnn.forward(var, _imgs(), cfg, train=False)
     assert logits.shape == (2, 10)
     assert np.isfinite(np.asarray(logits)).all()
     assert float(aux["total_spikes"]) > 0
@@ -37,7 +37,7 @@ def test_full_spike_execution(arch):
     claim (C2/C3): spike rates in [0,1] and integer spike counts."""
     cfg = _cfg(arch)
     var = snn_cnn.init(jax.random.PRNGKey(0), cfg)
-    _, _, aux = snn_cnn.apply(var, _imgs(), cfg, train=False)
+    _, _, aux = snn_cnn.forward(var, _imgs(), cfg, train=False)
     for name, rate in aux["rates"].items():
         r = float(rate)
         assert 0.0 <= r <= 1.0, (name, r)
@@ -52,9 +52,9 @@ def test_train_gradients_flow():
     imgs, labels = _imgs(4), jnp.array([0, 1, 2, 3])
 
     def loss_fn(params):
-        logits, _, _ = snn_cnn.apply({"params": params,
-                                      "state": var["state"]}, imgs, cfg,
-                                     train=True)
+        logits, _, _ = snn_cnn.forward({"params": params,
+                                        "state": var["state"]}, imgs, cfg,
+                                       train=True)
         logp = jax.nn.log_softmax(logits)
         return -jnp.take_along_axis(logp, labels[:, None], 1).mean()
 
@@ -74,9 +74,9 @@ def test_fuse_model_close_to_eval(arch):
         lambda s: s + 0.1 * jax.random.uniform(jax.random.PRNGKey(1),
                                                s.shape), var["state"])
     imgs = _imgs()
-    ref, _, _ = snn_cnn.apply(var, imgs, cfg, train=False)
+    ref, _, _ = snn_cnn.forward(var, imgs, cfg, train=False)
     fused = snn_cnn.fuse_model(var, cfg)
-    out, aux = snn_cnn.apply_fused(fused, imgs, cfg)
+    out, _, aux = snn_cnn.forward(fused, imgs, cfg)
     np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
                                rtol=1e-3, atol=1e-3)
 
@@ -89,8 +89,8 @@ def test_event_kernel_path_bit_exact():
     var = snn_cnn.init(jax.random.PRNGKey(0), cfg)
     fused = snn_cnn.fuse_model(var, cfg)
     imgs = _imgs()[:, :16, :16, :]
-    ref, _ = snn_cnn.apply_fused(fused, imgs, cfg)
-    ev, _ = snn_cnn.apply_fused(fused, imgs, cfg_ev)
+    ref, _, _ = snn_cnn.forward(fused, imgs, cfg)
+    ev, _, _ = snn_cnn.forward(fused, imgs, cfg_ev)
     np.testing.assert_allclose(np.asarray(ref), np.asarray(ev),
                                rtol=1e-4, atol=1e-4)
 
@@ -99,7 +99,7 @@ def test_quantized_fused_model_runs():
     cfg = _cfg("vgg11", quant=QuantConfig(enabled=True, bits=8))
     var = snn_cnn.init(jax.random.PRNGKey(0), cfg)
     fused = snn_cnn.fuse_model(var, cfg)
-    out, _ = snn_cnn.apply_fused(fused, _imgs(), cfg)
+    out, _, _ = snn_cnn.forward(fused, _imgs(), cfg)
     assert np.isfinite(np.asarray(out)).all()
 
 
@@ -108,8 +108,8 @@ def test_multi_timestep_baseline():
     cfg1 = _cfg("resnet11", timesteps=1)
     cfg4 = _cfg("resnet11", timesteps=4)
     var = snn_cnn.init(jax.random.PRNGKey(0), cfg1)
-    _, _, aux1 = snn_cnn.apply(var, _imgs(), cfg1, train=False)
-    _, _, aux4 = snn_cnn.apply(var, _imgs(), cfg4, train=False)
+    _, _, aux1 = snn_cnn.forward(var, _imgs(), cfg1, train=False)
+    _, _, aux4 = snn_cnn.forward(var, _imgs(), cfg4, train=False)
     assert float(aux4["total_spikes"]) > float(aux1["total_spikes"])
 
 
@@ -119,7 +119,7 @@ def test_w2ttfs_head_equals_avgpool_head():
     cfg_w = _cfg("vgg11", head="w2ttfs")
     cfg_a = _cfg("vgg11", head="avgpool")
     var = snn_cnn.init(jax.random.PRNGKey(0), cfg_w)
-    lw, _, _ = snn_cnn.apply(var, _imgs(), cfg_w, train=False)
-    la, _, _ = snn_cnn.apply(var, _imgs(), cfg_a, train=False)
+    lw, _, _ = snn_cnn.forward(var, _imgs(), cfg_w, train=False)
+    la, _, _ = snn_cnn.forward(var, _imgs(), cfg_a, train=False)
     np.testing.assert_allclose(np.asarray(lw), np.asarray(la),
                                rtol=1e-4, atol=1e-4)

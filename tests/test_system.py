@@ -37,8 +37,8 @@ def test_paper_pipeline_end_to_end(tmp_path):
         return d / 100.0
 
     def student_apply(p, s, x):
-        logits, new_s, _ = snn_cnn.apply({"params": p, "state": s}, x, cfg,
-                                         train=True)
+        logits, new_s, _ = snn_cnn.forward({"params": p, "state": s}, x,
+                                           cfg, train=True)
         return logits, new_s
 
     step = jax.jit(make_kd_train_step(
@@ -54,7 +54,7 @@ def test_paper_pipeline_end_to_end(tmp_path):
     # deployment: fuse BN + quantize -> full-spike inference, W2TTFS head
     fused = snn_cnn.fuse_model({"params": params, "state": state}, cfg)
     imgs, labels = ds.batch(9999, 64)
-    logits, aux = snn_cnn.apply_fused(fused, jnp.asarray(imgs), cfg)
+    logits, _, aux = snn_cnn.forward(fused, jnp.asarray(imgs), cfg)
     acc = float((np.argmax(np.asarray(logits), -1) == labels).mean())
     assert acc > 0.5, f"deployed spiking model accuracy {acc}"
     assert float(aux["total_spikes"]) > 0
