@@ -34,8 +34,10 @@ def emit(kernel: str, case: str, flops: float, bytes_: float,
     est = RooflineEstimate(flops, bytes_)
     bound = "compute" if est.compute_s > est.memory_s else "memory"
     row = {"kernel": kernel, "case": case, "flops": flops, "bytes": bytes_,
-           "tpu_time_us": est.time_s * 1e6, "tpu_bound": bound,
-           "cpu_ref_us": cpu_ref_us, **extra}
+           "tpu_time_us": est.time_s * 1e6, "tpu_bound": bound, **extra}
+    # modeled-only rows simply have no cpu_ref_us key (no null spam)
+    if cpu_ref_us is not None:
+        row["cpu_ref_us"] = cpu_ref_us
     ROWS.append(row)
     cpu = "-" if cpu_ref_us is None else f"{cpu_ref_us:.0f}"
     print(f"{kernel},{case},{flops:.3e},{bytes_:.3e},"
@@ -101,7 +103,82 @@ def packed_spike_bytes(m: int, k: int, n: int, dq: int) -> dict:
     return {"dense": dense, "packed": packed, "reduction": dense / packed}
 
 
-def main(json_path: str | None = None) -> None:
+# -------------------------------------------------------- sparsity sweep
+SWEEP_LEVELS = (0.0, 0.5, 0.9, 0.99)
+SWEEP_SKIPS = ("dense", "gated", "two_level")
+
+
+def _k_structured(m, k, frac_silent, seed=1, rate=0.2):
+    """Spikes with a SILENT K-RANGE: the last ``frac_silent`` of the
+    feature axis carries no events, so (block_m x block_k) metadata blocks
+    over that range are silent for EVERY m-row — the pattern the vld-gated
+    grid compacts away."""
+    k_on = int(round(k * (1 - frac_silent)))
+    x = jnp.zeros((m, k), jnp.int8)
+    if k_on:
+        x = x.at[:, :k_on].set(
+            (jax.random.uniform(jax.random.PRNGKey(seed), (m, k_on))
+             < rate).astype(jnp.int8))
+    return x
+
+
+def sparsity_sweep() -> dict:
+    """The byte-skip sweep: per sparsity level, modeled HBM bytes AND
+    measured wall-clock for the gated kernels vs the ungated (dense-skip)
+    streaming kernel.
+
+    Modeled rows use the streaming-traffic cost model the autotuner prices
+    plans with (``repro.launch.roofline.spike_matmul_traffic``) at the
+    1024^3 roofline shape. Wall-clock rows run the REAL kernels at a
+    CPU-tractable 512x512x512; in interpret mode the gated grid still
+    executes every (predicated-off) step in Python, so wall-clock there
+    tracks the skipped COMPUTE, not the skipped DMA — the byte column is
+    the TPU-relevant signal.
+    """
+    from repro.launch import roofline
+
+    print("# sparsity sweep: modeled HBM bytes + measured wall-clock, "
+          "gated vs ungated")
+    sweep: list[dict] = []
+    m = k = n = 1024
+    for frac_silent in SWEEP_LEVELS:
+        active = 1.0 - frac_silent
+        for skip in SWEEP_SKIPS:
+            t = roofline.spike_matmul_traffic(
+                m, k, n, active_frac=active, occ_frac=1.0, packed=False,
+                skip=skip, kernels="fused")
+            emit("spike_matmul_sweep",
+                 f"1024^3 {skip} silent={frac_silent:.0%}",
+                 t["flops"], t["hbm_bytes"],
+                 modeled_time_us=roofline.kernel_time_s(t) * 1e6,
+                 skip=skip, frac_silent=frac_silent)
+            sweep.append(ROWS[-1])
+
+    # measured wall-clock at a CPU-tractable size (8x8x8 block grid)
+    ms = ks = ns = 512
+    bm = bn = bk = 64
+    ws = jax.random.normal(jax.random.PRNGKey(11), (ks, ns), jnp.float32)
+    blocks = dict(block_m=bm, block_n=bn, block_k=bk)
+    ref = None
+    for frac_silent in SWEEP_LEVELS:
+        xs = _k_structured(ms, ks, frac_silent, seed=12)
+        ref = spike_matmul_ref(xs, ws)
+        for skip in SWEEP_SKIPS:
+            t_us = time_call(
+                lambda a, w_, s=skip: spike_matmul(a, w_, skip=s, **blocks),
+                xs, ws) * 1e6
+            out = spike_matmul(xs, ws, skip=skip, **blocks)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=1e-5, atol=1e-4)
+            emit("spike_matmul_sweep",
+                 f"{ms}^3 {skip} silent={frac_silent:.0%} (measured)",
+                 0.0, 0.0, t_us, skip=skip, frac_silent=frac_silent)
+            sweep.append(ROWS[-1])
+    return {"levels": list(SWEEP_LEVELS), "skips": list(SWEEP_SKIPS),
+            "rows": sweep}
+
+
+def main(json_path: str | None = None, with_sweep: bool = False) -> None:
     print("# kernel roofline model (TPU v5e) + measured CPU oracle time")
     print("kernel,case,flops,bytes,tpu_time_us,tpu_bound,cpu_ref_us")
 
@@ -242,6 +319,9 @@ def main(json_path: str | None = None) -> None:
     emit("lif_update", f"fused {mm}x{dd}", 5.0 * n_el, fused_bytes, t_cpu)
     emit("lif_update", "(unfused 3-pass)", 5.0 * n_el, unfused_bytes)
 
+    # ------------------------------------------------------- sparsity sweep
+    sweep = sparsity_sweep() if with_sweep else None
+
     # ----------------------------------------------------------- JSON output
     json_path = artifact_path(json_path or "BENCH_kernels.json")
     deployed = fused_chain_bytes(1024, 1024, 1024, 1024, stateful=False)
@@ -257,9 +337,12 @@ def main(json_path: str | None = None) -> None:
         "spike_matmul_dense_us_256": t_dense_mm,
         "spike_matmul_packed_us_256": t_packed_mm,
     }
+    payload = {"rows": ROWS, "fused_pe_hbm_model": summary,
+               "packed_spike_hbm_model": packed_summary}
+    if sweep is not None:
+        payload["sparsity_sweep"] = sweep
     with open(json_path, "w") as f:
-        json.dump({"rows": ROWS, "fused_pe_hbm_model": summary,
-                   "packed_spike_hbm_model": packed_summary}, f, indent=1)
+        json.dump(payload, f, indent=1)
     print(f"# wrote {json_path}: fused-PE modeled HBM reduction "
           f"{deployed['reduction']:.2f}x (deployed, 1024^3); packed spike "
           f"tensors {packed_deployed['reduction']:.2f}x fewer spike bytes")
@@ -270,5 +353,9 @@ if __name__ == "__main__":
     ap.add_argument("--out", default="BENCH_kernels.json",
                     help="machine-readable output path (relative paths "
                          "resolve to the repo root)")
+    ap.add_argument("--sparsity-sweep", action="store_true",
+                    help="also run the byte-skip sparsity sweep: modeled "
+                         "HBM bytes + measured wall-clock per sparsity "
+                         "level for the gated vs ungated kernels")
     args = ap.parse_args()
-    main(args.out)
+    main(args.out, with_sweep=args.sparsity_sweep)

@@ -45,8 +45,9 @@ def main() -> None:
          table3_efficiency.main),
         ("timestep", "Timestep ablation — single- vs multi-timestep execution",
          timestep_ablation.main),
-        ("kernels", "Kernel bench — Pallas kernels roofline + oracle timing",
-         kernel_bench.main),
+        ("kernels", "Kernel bench — Pallas kernels roofline + oracle timing "
+         "+ byte-skip sparsity sweep",
+         lambda: kernel_bench.main(with_sweep=True)),
         ("ops", "ops dispatch — repro.ops entry-point overhead vs direct "
          "kernel calls (< 1% bar)", ops_dispatch.main),
         ("serve", "Serving throughput — continuous batching + elastic-FIFO "

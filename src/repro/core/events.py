@@ -85,8 +85,43 @@ def vld_or_compute(x: Array, vld_cnt: Array | None,
     expect = (m // block_m, k // block_k)
     if vld_cnt is None:
         return block_count_map_2d(x, block_m, block_k)
-    assert vld_cnt.shape == expect, (vld_cnt.shape, expect)
+    if tuple(vld_cnt.shape) != expect:
+        raise ValueError(
+            f"vld_cnt grid {tuple(vld_cnt.shape)} does not match the "
+            f"[{m}, {k}] operand tiled on (block_m={block_m}, "
+            f"block_k={block_k}) — expected {expect}. A chained vld map "
+            f"must come from a producer using the SAME block sizes.")
     return vld_cnt.astype(jnp.int32)
+
+
+def compact_kmap(vld_cnt: Array) -> tuple[Array, Array]:
+    """CSR-of-blocks routing for vld-gated tile streaming.
+
+    ``vld_cnt``: int32 [Gm, Gk] per-block event counts. Returns
+
+      nact [Gm] int32    — number of NON-silent k-blocks in each m-row
+      kmap [Gm, Gk] int32 — for each m-row, the active k-block indices
+                            compacted (ascending) to the front; tail
+                            entries REPEAT the last active index.
+
+    The gated kernels iterate step ``s`` over ``kmap[i, s]`` and gate
+    compute on ``s < nact[i]``. Because Pallas only issues a DMA when a
+    BlockSpec index map's result CHANGES between consecutive grid steps,
+    the repeated tail index means silent blocks' weight tiles and spike
+    words are never fetched from HBM — the byte-level counterpart of the
+    ``@pl.when(vld_cnt > 0)`` FLOP skip. A fully-silent row maps to block 0
+    (one inert fetch, compute still skipped).
+    """
+    gm, gk = vld_cnt.shape
+    active = vld_cnt > 0
+    nact = jnp.sum(active, axis=1, dtype=jnp.int32)
+    # stable argsort of (inactive-last) compacts active indices, ascending
+    kmap = jnp.argsort(jnp.logical_not(active), axis=1).astype(jnp.int32)
+    last = jnp.take_along_axis(kmap, jnp.maximum(nact - 1, 0)[:, None],
+                               axis=1)
+    s_idx = jnp.arange(gk, dtype=jnp.int32)[None, :]
+    kmap = jnp.where(s_idx < nact[:, None], kmap, last)
+    return nact, kmap.astype(jnp.int32)
 
 
 def pad_to_blocks(x: Array, block_m: int, block_k: int) -> Array:
@@ -181,6 +216,43 @@ def popcount_block_map(words: Array, block_m: int, block_k: int) -> Array:
     return jnp.sum(pc, axis=(-3, -1), dtype=jnp.int32)
 
 
+def word_occupancy_map(words: Array, block_m: int, block_k: int) -> Array:
+    """Second-level event metadata: per-block WORD-COLUMN occupancy bitmap.
+
+    For each (block_m x block_k) tile, bit ``c`` of the returned int32 is set
+    iff word-column ``c`` of the tile — dense columns
+    [c*32, (c+1)*32) — holds ANY nonzero word across the tile's rows.
+    Returns int32 [..., Mp/block_m, Kp/block_k]. This is the irregular-
+    sparsity level beyond ``vld_cnt`` (ExSpike): the MXU feed iterates the
+    tile's 32-column stripes and skips the silent ones. Requires
+    block_k <= 1024 so the per-tile word count fits the 32 bits (bit 31
+    wraps to the sign bit, same modular arithmetic as ``pack_words``).
+    """
+    *lead, m, w = words.shape
+    wpb = block_k // LANE_BITS
+    assert wpb <= LANE_BITS, (block_k, "word bitmap needs block_k <= 1024")
+    assert m % block_m == 0 and w % wpb == 0, (words.shape, block_m, block_k)
+    nz = (words != 0).reshape(*lead, m // block_m, block_m, w // wpb, wpb)
+    col = jnp.any(nz, axis=-3).astype(jnp.int32)         # [..., Gm, Gk, wpb]
+    shifts = jnp.arange(wpb, dtype=jnp.int32)
+    return jnp.sum(jnp.left_shift(col, shifts), axis=-1, dtype=jnp.int32)
+
+
+def word_occupancy_map_dense(x: Array, block_m: int, block_k: int) -> Array:
+    """``word_occupancy_map`` computed straight from a dense [..., Mp, Kp]
+    operand (no packing required): columns are grouped into 32-wide stripes
+    and a stripe counts as occupied when any entry is nonzero."""
+    *lead, m, k = x.shape
+    wpb = block_k // LANE_BITS
+    assert wpb <= LANE_BITS, (block_k, "word bitmap needs block_k <= 1024")
+    assert m % block_m == 0 and k % block_k == 0, (x.shape, block_m, block_k)
+    nz = (x != 0).reshape(*lead, m // block_m, block_m,
+                          k // block_k, wpb, LANE_BITS)
+    col = jnp.any(nz, axis=(-4, -1)).astype(jnp.int32)   # [..., Gm, Gk, wpb]
+    shifts = jnp.arange(wpb, dtype=jnp.int32)
+    return jnp.sum(jnp.left_shift(col, shifts), axis=-1, dtype=jnp.int32)
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class PackedSpikes:
@@ -197,23 +269,40 @@ class PackedSpikes:
     so handing a layer's packed output to the next layer's kernel needs no
     recomputation of either. ~8x fewer HBM bytes than int8 spikes (32x vs
     f32), minus the tiny count map.
+
+    ``occ`` is the OPTIONAL second compression level (ExSpike's irregular
+    sparsity): the per-block word-column occupancy bitmap from
+    ``word_occupancy_map``, emitted in the same pack pass as ``vld_cnt``.
+    Kernels running ``skip="two_level"`` use it to elide silent 32-column
+    stripes inside otherwise-active blocks. ``None`` means "not computed";
+    consumers fall back to computing it on demand.
     """
     words: Array
     vld_cnt: Array
     shape: tuple
     block_m: int = 128
     block_k: int = 128
+    occ: Optional[Array] = None
 
     # ------------------------------------------------------------- pytree
     def tree_flatten(self):
-        return (self.words, self.vld_cnt), (tuple(self.shape), self.block_m,
-                                            self.block_k)
+        return (self.words, self.vld_cnt, self.occ), (
+            tuple(self.shape), self.block_m, self.block_k)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         shape, bm, bk = aux
-        words, vld = children
-        return cls(words, vld, shape, bm, bk)
+        words, vld, occ = children
+        return cls(words, vld, shape, bm, bk, occ)
+
+    def with_occ(self) -> "PackedSpikes":
+        """Return self with the word-occupancy bitmap populated (no-op when
+        the pack pass already emitted it)."""
+        if self.occ is not None:
+            return self
+        occ = word_occupancy_map(self.words, self.block_m, self.block_k)
+        return PackedSpikes(self.words, self.vld_cnt, self.shape,
+                            self.block_m, self.block_k, occ)
 
     # -------------------------------------------------------------- views
     @property
@@ -232,8 +321,27 @@ class PackedSpikes:
     @property
     def packed_bytes(self) -> int:
         """HBM bytes this tensor occupies (words + metadata)."""
-        return (4 * math.prod(self.words.shape)
-                + 4 * math.prod(self.vld_cnt.shape))
+        n = (4 * math.prod(self.words.shape)
+             + 4 * math.prod(self.vld_cnt.shape))
+        if self.occ is not None:
+            n += 4 * math.prod(self.occ.shape)
+        return n
+
+    def two_level_bytes(self) -> int:
+        """HBM bytes under two-level compression: only OCCUPIED word-columns
+        of each block ship (a consumer honouring ``occ`` never reads the
+        silent stripes), plus both metadata maps. Concrete-value helper for
+        the byte model — forces the arrays to host."""
+        import numpy as np
+        ps = self.with_occ()
+        wpb = ps.block_k // LANE_BITS
+        occ = np.asarray(ps.occ).astype(np.uint32)
+        occupied_cols = sum(int(((occ >> c) & 1).sum())
+                            for c in range(wpb))
+        word_bytes = 4 * occupied_cols * ps.block_m
+        meta = (4 * math.prod(ps.vld_cnt.shape)
+                + 4 * math.prod(ps.occ.shape))
+        return word_bytes + meta
 
     @property
     def dense_bytes(self) -> int:
@@ -250,17 +358,21 @@ class PackedSpikes:
         shape rewritten, which this deliberately does not support."""
         assert isinstance(idx, int), idx
         assert len(self.shape) > 2, "cannot index the packed core dims"
+        occ = None if self.occ is None else self.occ[idx]
         return PackedSpikes(self.words[idx], self.vld_cnt[idx],
-                            self.shape[1:], self.block_m, self.block_k)
+                            self.shape[1:], self.block_m, self.block_k, occ)
 
 
 def packed_from_words(words: Array, shape: tuple, *, block_m: int = 128,
                       block_k: int = 128,
-                      vld_cnt: Optional[Array] = None) -> PackedSpikes:
+                      vld_cnt: Optional[Array] = None,
+                      occ: Optional[Array] = None,
+                      with_occ: bool = False) -> PackedSpikes:
     """Wrap an existing word tensor (e.g. im2col patches of packed maps or a
     bitwise-OR pooled map) into a kernel-ready PackedSpikes: pads rows to the
     block_m grid and derives vld_cnt by popcount over the WORDS — never the
-    dense tensor — unless the producer already emitted it."""
+    dense tensor — unless the producer already emitted it. Pass
+    ``with_occ=True`` to also emit the word-occupancy bitmap."""
     assert words.dtype == jnp.int32
     assert block_k % LANE_BITS == 0
     *lead, m, w = words.shape
@@ -272,19 +384,24 @@ def packed_from_words(words: Array, shape: tuple, *, block_m: int = 128,
         words = jnp.pad(words, pad)
     if vld_cnt is None:
         vld_cnt = popcount_block_map(words, block_m, block_k)
-    return PackedSpikes(words, vld_cnt, tuple(shape), block_m, block_k)
+    if occ is None and with_occ:
+        occ = word_occupancy_map(words, block_m, block_k)
+    return PackedSpikes(words, vld_cnt, tuple(shape), block_m, block_k, occ)
 
 
 def pack_spikes_ref(x: Array, *, block_m: int = 128,
-                    block_k: int = 128) -> PackedSpikes:
-    """Pure-jnp reference pack: pad -> pack_words -> popcount vld. The
-    Pallas version (``repro.kernels.packed``) does all three in one grid
-    pass; this is its oracle and the portable fallback."""
+                    block_k: int = 128,
+                    with_occ: bool = False) -> PackedSpikes:
+    """Pure-jnp reference pack: pad -> pack_words -> popcount vld (+ the
+    word-occupancy bitmap when ``with_occ``). The Pallas version
+    (``repro.kernels.packed``) does all of it in one grid pass; this is its
+    oracle and the portable fallback."""
     assert block_k % LANE_BITS == 0
     xp = pad_to_blocks(x, block_m, block_k)
     words = pack_words(xp)
     vld = popcount_block_map(words, block_m, block_k)
-    return PackedSpikes(words, vld, tuple(x.shape), block_m, block_k)
+    occ = word_occupancy_map(words, block_m, block_k) if with_occ else None
+    return PackedSpikes(words, vld, tuple(x.shape), block_m, block_k, occ)
 
 
 def unpack_spikes_ref(ps: PackedSpikes, dtype=jnp.int8) -> Array:

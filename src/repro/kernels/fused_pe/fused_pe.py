@@ -66,7 +66,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ...core.events import LANE_BITS, pack_words, unpack_words
+from ...core.events import (LANE_BITS, compact_kmap, pack_words,
+                            unpack_words)
+from ..gating import accum_tile
 
 Array = jax.Array
 
@@ -76,8 +78,17 @@ def _make_kernel(*, tau: float, v_th: float, soft_reset: bool,
                  with_state: bool, apply_qk: bool, emit_vld: bool,
                  m_valid: int, n_valid: int, block_m: int, block_n: int,
                  packed_in: bool, packed_q: bool, packed_residual: bool,
-                 packed_out: bool):
-    def kernel(vld_ref, *refs):
+                 packed_out: bool, skip: str = "dense"):
+    def kernel(*allrefs):
+        # scalar-prefetch block: vld map (dense) or the compacted routing
+        # tables (gated / two_level) from core.events.compact_kmap
+        occ_ref = None
+        if skip == "dense":
+            vld_ref, *refs = allrefs
+        elif skip == "gated":
+            nact_ref, kmap_ref, *refs = allrefs
+        else:
+            nact_ref, kmap_ref, occ_ref, *refs = allrefs
         it = iter(refs)
         x_ref = next(it)
         w_ref = next(it)
@@ -99,16 +110,20 @@ def _make_kernel(*, tau: float, v_th: float, soft_reset: bool,
         def _init():
             acc_ref[...] = jnp.zeros_like(acc_ref)
 
-        cnt = vld_ref[i, k]
+        if skip == "dense":
+            # event skip: silent block -> no MXU (bytes still stream)
+            gate = vld_ref[i, k] > 0
+        else:
+            # steps past nact[i] revisit the last active block index, so
+            # the BlockSpec never changes -> no DMA; this skips the MXU
+            gate = k < nact_ref[i]
 
-        @pl.when(cnt > 0)            # event skip: silent block -> no MXU
+        @pl.when(gate)
         def _accum():
-            if packed_in:            # decompress the K-tile in VMEM
-                x = unpack_words(x_ref[...], jnp.float32)
-            else:
-                x = x_ref[...].astype(jnp.float32)
-            w = w_ref[...].astype(jnp.float32)
-            acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+            occ_bits = (occ_ref[i, kmap_ref[i, k]]
+                        if skip == "two_level" else None)
+            accum_tile(acc_ref, x_ref, w_ref, packed_in=packed_in,
+                       occ_bits=occ_bits)
 
         @pl.when(k == pl.num_programs(2) - 1)
         def _writeback():
@@ -164,13 +179,14 @@ def _make_kernel(*, tau: float, v_th: float, soft_reset: bool,
                                     "block_k", "emit_vld", "m_valid",
                                     "n_valid", "packed_in", "packed_q",
                                     "packed_residual", "packed_out",
-                                    "interpret"))
+                                    "skip", "interpret"))
 def fused_pe_pallas(x: Array, w: Array, vld_cnt: Array,
                     bias: Array | None = None,
                     residual: Array | None = None,
                     v_prev: Array | None = None,
                     s_prev: Array | None = None,
-                    q: Array | None = None, *,
+                    q: Array | None = None,
+                    occ: Array | None = None, *,
                     tau: float = 0.5, v_th: float = 1.0,
                     soft_reset: bool = False, qk_threshold: float = 1.0,
                     block_m: int = 128, block_n: int = 128,
@@ -178,6 +194,7 @@ def fused_pe_pallas(x: Array, w: Array, vld_cnt: Array,
                     m_valid: int | None = None, n_valid: int | None = None,
                     packed_in: bool = False, packed_q: bool = False,
                     packed_residual: bool = False, packed_out: bool = False,
+                    skip: str = "dense",
                     interpret: bool = False):
     """Block-aligned core. All shapes must already be padded to the blocks;
     use ``repro.kernels.fused_pe.ops.fused_pe`` for the padding wrapper.
@@ -186,6 +203,12 @@ def fused_pe_pallas(x: Array, w: Array, vld_cnt: Array,
     fire pad rows). The ``packed_*`` flags select the bit-packed layout for
     the corresponding spike operand / output (int32 words along the packed
     axis, 32 spikes per lane).
+
+    ``skip`` selects the byte-skip strategy: ``"dense"`` streams every tile
+    and gates the MXU on ``vld_cnt``; ``"gated"`` walks the compacted
+    non-silent block list (silent x/w tiles never DMA'd); ``"two_level"``
+    additionally elides silent 32-column stripes inside active tiles via
+    the ``occ`` word-occupancy bitmap (required for that mode).
 
     Returns (spikes, v_next | None, vld_next | None).
     """
@@ -198,6 +221,7 @@ def fused_pe_pallas(x: Array, w: Array, vld_cnt: Array,
         assert block_k % LANE_BITS == 0 and block_n % LANE_BITS == 0
     with_state = v_prev is not None
     assert (s_prev is not None) == with_state
+    assert skip in ("dense", "gated", "two_level"), skip
     grid = (m // block_m, n // block_n, k // block_k)
 
     kern = _make_kernel(
@@ -207,55 +231,79 @@ def fused_pe_pallas(x: Array, w: Array, vld_cnt: Array,
         m_valid=m_valid or m, n_valid=n_valid or n,
         block_m=block_m, block_n=block_n, packed_in=packed_in,
         packed_q=packed_q, packed_residual=packed_residual,
-        packed_out=packed_out)
+        packed_out=packed_out, skip=skip)
 
-    # index maps receive the prefetched scalar ref as a trailing arg
+    # scalar-prefetch set: vld map (dense) or the compacted routing tables
+    # (gated / two_level); index maps receive the refs as trailing args
+    if skip == "dense":
+        scalars = (vld_cnt,)
+
+        def x_idx(i, j, kk, *refs):
+            return (i, kk)
+
+        def w_idx(i, j, kk, *refs):
+            return (kk, j)
+    else:
+        nact, kmap = compact_kmap(vld_cnt)
+        if skip == "two_level":
+            assert occ is not None, "two_level gating needs the occ bitmap"
+            scalars = (nact, kmap, occ)
+        else:
+            scalars = (nact, kmap)
+
+        def x_idx(i, j, s, nact_ref, kmap_ref, *rest):
+            return (i, kmap_ref[i, s])
+
+        def w_idx(i, j, s, nact_ref, kmap_ref, *rest):
+            return (kmap_ref[i, s], j)
+
     x_bk = block_k // LANE_BITS if packed_in else block_k
     in_specs = [
-        pl.BlockSpec((block_m, x_bk), lambda i, j, kk, vld: (i, kk)),
-        pl.BlockSpec((block_k, block_n), lambda i, j, kk, vld: (kk, j)),
+        pl.BlockSpec((block_m, x_bk), x_idx),
+        pl.BlockSpec((block_k, block_n), w_idx),
     ]
     operands = [x, w]
     if bias is not None:
         in_specs.append(pl.BlockSpec((1, block_n),
-                                     lambda i, j, kk, vld: (0, j)))
+                                     lambda i, j, kk, *refs: (0, j)))
         operands.append(bias.reshape(1, n))
     if residual is not None:
         r_bn = block_n // LANE_BITS if packed_residual else block_n
         in_specs.append(pl.BlockSpec((block_m, r_bn),
-                                     lambda i, j, kk, vld: (i, j)))
+                                     lambda i, j, kk, *refs: (i, j)))
         operands.append(residual)
     if with_state:
         in_specs += [pl.BlockSpec((block_m, block_n),
-                                  lambda i, j, kk, vld: (i, j))] * 2
+                                  lambda i, j, kk, *refs: (i, j))] * 2
         operands += [v_prev, s_prev]
     if q is not None:
         dq = q.shape[1]
         in_specs.append(pl.BlockSpec((block_m, dq),
-                                     lambda i, j, kk, vld: (i, 0)))
+                                     lambda i, j, kk, *refs: (i, 0)))
         operands.append(q)
 
     if packed_out:
         out_shape = [jax.ShapeDtypeStruct((m, n // LANE_BITS), jnp.int32)]
         out_specs = [pl.BlockSpec((block_m, block_n // LANE_BITS),
-                                  lambda i, j, kk, vld: (i, j))]
+                                  lambda i, j, kk, *refs: (i, j))]
     else:
         out_shape = [jax.ShapeDtypeStruct((m, n), jnp.int8)]
         out_specs = [pl.BlockSpec((block_m, block_n),
-                                  lambda i, j, kk, vld: (i, j))]
+                                  lambda i, j, kk, *refs: (i, j))]
     if with_state:
         out_shape.append(jax.ShapeDtypeStruct((m, n), jnp.float32))
         out_specs.append(pl.BlockSpec((block_m, block_n),
-                                      lambda i, j, kk, vld: (i, j)))
+                                      lambda i, j, kk, *refs: (i, j)))
     if emit_vld:
         out_shape.append(jax.ShapeDtypeStruct(
             (m // block_m, n // block_n), jnp.int32))
-        out_specs.append(pl.BlockSpec((1, 1), lambda i, j, kk, vld: (i, j)))
+        out_specs.append(pl.BlockSpec((1, 1),
+                                      lambda i, j, kk, *refs: (i, j)))
 
     outs = pl.pallas_call(
         kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=len(scalars),
             grid=grid,
             in_specs=in_specs,
             out_specs=out_specs,
@@ -263,7 +311,7 @@ def fused_pe_pallas(x: Array, w: Array, vld_cnt: Array,
         ),
         out_shape=out_shape,
         interpret=interpret,
-    )(vld_cnt, *operands)
+    )(*scalars, *operands)
 
     outs = list(outs)
     spikes = outs.pop(0)

@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from ...core.events import (LANE_BITS, PackedSpikes, pad_to_blocks,
-                            vld_or_compute)
+                            vld_or_compute, word_occupancy_map_dense)
+from ..spike_matmul.ops import check_block_contract, check_skip
 from .fused_pe import fused_pe_pallas
 
 Array = jax.Array
@@ -69,7 +70,7 @@ def fused_pe(x: Spikes, w: Array, *,
              qk_threshold: float = 1.0,
              block_m: int = 128, block_n: int = 128, block_k: int = 128,
              emit_vld: bool = True, out_format: str | None = None,
-             pack_out: bool | None = None,
+             pack_out: bool | None = None, skip: str = "dense",
              interpret: bool | None = None) -> FusedPEOut:
     """One fused PE layer: spikes/v_next/vld_next = PE(x, w, ...).
 
@@ -83,20 +84,23 @@ def fused_pe(x: Spikes, w: Array, *,
     dataflow; leave None to compute it here (a PackedSpikes x already
     carries it). ``out_format="packed"`` emits the spike map bit-packed
     (the deprecated boolean form routes through ``repro.ops.compat``).
+    ``skip`` selects the byte-skip strategy ("dense" | "gated" |
+    "two_level" — see ``repro.kernels.spike_matmul.ops.SKIP_MODES``).
     """
     fmt = _out_format(pack_out, out_format, "fused_pe")
     return _fused_pe(x, w, bias=bias, residual=residual, v_prev=v_prev,
                      s_prev=s_prev, q=q, vld_cnt=vld_cnt, tau=tau, v_th=v_th,
                      soft_reset=soft_reset, qk_threshold=qk_threshold,
                      block_m=block_m, block_n=block_n, block_k=block_k,
-                     emit_vld=emit_vld, out_format=fmt, interpret=interpret)
+                     emit_vld=emit_vld, out_format=fmt, skip=skip,
+                     interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("tau", "v_th", "soft_reset",
                                              "qk_threshold", "block_m",
                                              "block_n", "block_k",
                                              "emit_vld", "out_format",
-                                             "interpret"))
+                                             "skip", "interpret"))
 def _fused_pe(x: Spikes, w: Array, *,
               bias: Array | None = None,
               residual: Spikes | None = None,
@@ -108,17 +112,23 @@ def _fused_pe(x: Spikes, w: Array, *,
               qk_threshold: float = 1.0,
               block_m: int = 128, block_n: int = 128, block_k: int = 128,
               emit_vld: bool = True, out_format: str = "dense",
+              skip: str = "dense",
               interpret: bool | None = None) -> FusedPEOut:
     """Jitted core of ``fused_pe`` (all shims resolved: ``out_format`` is a
     plain static string here)."""
+    check_skip(skip)
     pack_out = out_format == "packed"
     if interpret is None:
         interpret = not _on_tpu()
     packed_in = isinstance(x, PackedSpikes)
+    occ = None
     if packed_in:
-        assert (x.block_m, x.block_k) == (block_m, block_k)
+        check_block_contract(x, block_m, block_k, "fused_pe x")
         assert len(x.shape) == 2, "fused_pe takes a 2-D packed operand"
         m0, k0 = x.shape
+        if skip == "two_level":
+            x = x.with_occ()
+            occ = x.occ
         xi = x.words
         vld = x.vld_cnt if vld_cnt is None else vld_cnt.astype(jnp.int32)
         kp = xi.shape[1] * LANE_BITS
@@ -127,6 +137,8 @@ def _fused_pe(x: Spikes, w: Array, *,
         xi = pad_to_blocks(x.astype(jnp.int8) if x.dtype == jnp.bool_ else x,
                            block_m, block_k)
         vld = vld_or_compute(xi, vld_cnt, block_m, block_k)
+        if skip == "two_level":
+            occ = word_occupancy_map_dense(xi, block_m, block_k)
         kp = xi.shape[1]
     n0 = w.shape[1]
     wp = pad_to_blocks(w, block_k, block_n)
@@ -143,7 +155,7 @@ def _fused_pe(x: Spikes, w: Array, *,
                      ((0, 0), (0, (-n0) % block_n)))
     packed_res = isinstance(residual, PackedSpikes)
     if packed_res:
-        assert (residual.block_m, residual.block_k) == (block_m, block_n)
+        check_block_contract(residual, block_m, block_n, "fused_pe residual")
         assert tuple(residual.shape) == (m0, n0), (residual.shape, m0, n0)
         rp = residual.words
     else:
@@ -152,7 +164,12 @@ def _fused_pe(x: Spikes, w: Array, *,
     sp = pad_mn(s_prev, jnp.int8) if s_prev is not None else None
     packed_q = isinstance(q, PackedSpikes)
     if packed_q:
-        assert q.block_m == block_m and q.shape[-2] == m0
+        if q.block_m != block_m:
+            raise ValueError(
+                f"fused_pe q was packed on block_m={q.block_m} but the "
+                f"kernel is tiling on block_m={block_m}; its row blocks "
+                f"must match the output tiling.")
+        assert q.shape[-2] == m0, (q.shape, m0)
         qp = q.words
     elif q is not None:
         # pad Q rows to the M grid and channels to the lane width; zero
@@ -162,12 +179,12 @@ def _fused_pe(x: Spikes, w: Array, *,
         qp = None
 
     spikes, v_next, vld_next = fused_pe_pallas(
-        xi, wp, vld, bp, rp, vp, sp, qp,
+        xi, wp, vld, bp, rp, vp, sp, qp, occ,
         tau=tau, v_th=v_th, soft_reset=soft_reset, qk_threshold=qk_threshold,
         block_m=block_m, block_n=block_n, block_k=block_k,
         emit_vld=emit_vld or pack_out, m_valid=m0, n_valid=n0,
         packed_in=packed_in, packed_q=packed_q, packed_residual=packed_res,
-        packed_out=pack_out, interpret=interpret)
+        packed_out=pack_out, skip=skip, interpret=interpret)
     if pack_out:
         spikes = PackedSpikes(spikes, vld_next, (m0, n0), block_m, block_n)
     else:
@@ -194,7 +211,7 @@ def fused_pe_layer(spk: Spikes, w: Array, *,
                    soft_reset: bool = False, qk_threshold: float = 1.0,
                    block_m: int = 128, block_n: int = 128,
                    block_k: int = 128, out_format: str | None = None,
-                   pack_out: bool | None = None,
+                   pack_out: bool | None = None, skip: str = "dense",
                    interpret: bool | None = None
                    ) -> tuple[Spikes, Optional[Array]]:
     """Multi-timestep fused layer over [T, M, K] inputs (dense or packed).
@@ -217,7 +234,7 @@ def fused_pe_layer(spk: Spikes, w: Array, *,
     n = w.shape[1]
     kw = dict(bias=bias, tau=tau, v_th=v_th, soft_reset=soft_reset,
               qk_threshold=qk_threshold, block_m=block_m, block_n=block_n,
-              block_k=block_k, interpret=interpret)
+              block_k=block_k, skip=skip, interpret=interpret)
 
     if t == 1:
         out = fused_pe(spk[0], w, residual=None if residual is None

@@ -1,0 +1,60 @@
+"""Shared in-kernel tile accumulation for the sparsity-adaptive kernels.
+
+Both vld-gated kernels (``spike_matmul`` and ``fused_pe``) land on the same
+inner step: accumulate one (block_m x block_k) x-tile against one
+(block_k x block_n) w-tile into a f32 accumulator — either the whole tile
+in one MXU issue, or (two-level compression, ExSpike's irregular-sparsity
+layer) stripe-by-stripe, where a "stripe" is one packed int32 word-column =
+32 dense k-columns, and silent stripes are elided via the ``occ`` bitmap
+from ``core.events.word_occupancy_map``.
+
+The stripe loop is a PYTHON loop over the tile's word-columns (block_k/32
+iterations, unrolled at trace time) with a ``pl.when`` per stripe, so the
+skip is a predicated branch — cheap on silent stripes, and the sub-dots
+stay MXU-shaped at (block_m, 32) @ (32, block_n).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.events import LANE_BITS, unpack_words
+
+
+def accum_tile(o_ref, x_ref, w_ref, *, packed_in: bool,
+               occ_bits=None) -> None:
+    """o_ref += x_tile @ w_tile.
+
+    ``x_ref``: (block_m, block_k) dense spikes or (block_m, block_k/32)
+    int32 words when ``packed_in``. ``w_ref``: (block_k, block_n).
+    ``occ_bits``: optional int32 scalar — the word-occupancy bitmap for THIS
+    tile; when given, only occupied 32-column stripes touch the MXU.
+    """
+    if occ_bits is None:
+        if packed_in:                  # decompress the K-tile in VMEM
+            x = unpack_words(x_ref[...], jnp.float32)
+        else:
+            x = x_ref[...].astype(jnp.float32)
+        w = w_ref[...].astype(jnp.float32)
+        o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+        return
+
+    if packed_in:
+        wpb = x_ref.shape[-1]
+    else:
+        assert x_ref.shape[-1] % LANE_BITS == 0, x_ref.shape
+        wpb = x_ref.shape[-1] // LANE_BITS
+    assert wpb <= LANE_BITS, (wpb, "occ bitmap covers <= 32 word-columns")
+
+    for c in range(wpb):
+        # arithmetic >> keeps bit 31 extractable (the &1 masks the sign fill)
+        @pl.when(jnp.bitwise_and(jnp.right_shift(occ_bits, c), 1) != 0)
+        def _stripe(c=c):
+            if packed_in:
+                xs = unpack_words(x_ref[:, c:c + 1], jnp.float32)
+            else:
+                xs = x_ref[:, c * LANE_BITS:(c + 1) * LANE_BITS]
+                xs = xs.astype(jnp.float32)
+            ws = w_ref[c * LANE_BITS:(c + 1) * LANE_BITS, :]
+            o_ref[...] += jnp.dot(xs, ws.astype(jnp.float32),
+                                  preferred_element_type=jnp.float32)

@@ -43,10 +43,10 @@ def pack_spikes(x: Array, *, block_m: int = 128, block_k: int = 128,
     if interpret is None:
         interpret = not _on_tpu()
     xp = pad_to_blocks(x, block_m, block_k)
-    words, vld = _over_leading(
+    words, vld, occ = _over_leading(
         lambda t: pack_spikes_pallas(t, block_m=block_m, block_k=block_k,
                                      interpret=interpret), xp)
-    return PackedSpikes(words, vld, tuple(x.shape), block_m, block_k)
+    return PackedSpikes(words, vld, tuple(x.shape), block_m, block_k, occ)
 
 
 @functools.partial(jax.jit, static_argnames=("dtype", "interpret"))

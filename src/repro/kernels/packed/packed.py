@@ -27,7 +27,7 @@ from ...core.events import LANE_BITS, pack_words, unpack_words
 Array = jax.Array
 
 
-def _pack_kernel(x_ref, w_ref, cnt_ref):
+def _pack_kernel(x_ref, w_ref, cnt_ref, occ_ref):
     x = x_ref[...]
     words = pack_words(x)
     w_ref[...] = words
@@ -35,6 +35,12 @@ def _pack_kernel(x_ref, w_ref, cnt_ref):
     # already in VMEM — no second HBM pass ever builds it
     cnt_ref[0, 0] = jnp.sum(
         jax.lax.population_count(words), dtype=jnp.int32)
+    # second compression level, same pass: word-COLUMN occupancy bitmap
+    # (bit c set iff any row's word c is nonzero) — the two_level kernels
+    # use it to elide silent 32-column stripes inside active blocks
+    col = jnp.any(words != 0, axis=0, keepdims=True).astype(jnp.int32)
+    shifts = jax.lax.broadcasted_iota(jnp.int32, col.shape, 1)
+    occ_ref[0, 0] = jnp.sum(jnp.left_shift(col, shifts), dtype=jnp.int32)
 
 
 def _unpack_kernel(w_ref, o_ref):
@@ -44,15 +50,18 @@ def _unpack_kernel(w_ref, o_ref):
 @functools.partial(jax.jit,
                    static_argnames=("block_m", "block_k", "interpret"))
 def pack_spikes_pallas(x: Array, *, block_m: int = 128, block_k: int = 128,
-                       interpret: bool = False) -> tuple[Array, Array]:
+                       interpret: bool = False
+                       ) -> tuple[Array, Array, Array]:
     """x: [M, K] spikes (any dtype; nonzero == event), block-aligned.
 
-    Returns (words int32 [M, K/32], vld_cnt int32 [M/bm, K/bk]) from ONE
-    grid pass.
+    Returns (words int32 [M, K/32], vld_cnt int32 [M/bm, K/bk], occ int32
+    [M/bm, K/bk] word-occupancy bitmaps) from ONE grid pass.
     """
     m, k = x.shape
     assert m % block_m == 0 and k % block_k == 0, (x.shape, block_m, block_k)
     assert block_k % LANE_BITS == 0, block_k
+    assert block_k // LANE_BITS <= LANE_BITS, \
+        (block_k, "occ bitmap needs block_k <= 1024")
     grid = (m // block_m, k // block_k)
     return pl.pallas_call(
         _pack_kernel,
@@ -62,9 +71,11 @@ def pack_spikes_pallas(x: Array, *, block_m: int = 128, block_k: int = 128,
             pl.BlockSpec((block_m, block_k // LANE_BITS),
                          lambda i, j: (i, j)),
             pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((m, k // LANE_BITS), jnp.int32),
+            jax.ShapeDtypeStruct((m // block_m, k // block_k), jnp.int32),
             jax.ShapeDtypeStruct((m // block_m, k // block_k), jnp.int32),
         ],
         interpret=interpret,

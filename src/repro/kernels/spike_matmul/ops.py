@@ -6,23 +6,50 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ...core.events import (PackedSpikes, block_count_map_2d, pad_to_blocks,
-                            vld_or_compute)
-from .spike_matmul import spike_matmul_pallas
+from ...core.events import (PackedSpikes, block_count_map_2d, compact_kmap,
+                            pad_to_blocks, vld_or_compute,
+                            word_occupancy_map_dense)
+from .spike_matmul import spike_matmul_gated_pallas, spike_matmul_pallas
 
 Array = jax.Array
+
+# byte-skip strategies shared by spike_matmul and fused_pe:
+#   dense     — full streaming, @pl.when skips MXU only (the PR-5 behaviour)
+#   gated     — compacted-grid tile streaming: silent blocks never DMA'd
+#   two_level — gated + word-occupancy bitmap elides silent 32-col stripes
+SKIP_MODES = ("dense", "gated", "two_level")
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def check_block_contract(ps: PackedSpikes, block_m: int, block_k: int,
+                         what: str = "packed operand") -> None:
+    """The packed-operand block-shape contract: a PackedSpikes pins its tile
+    grid at pack time; the consuming kernel must tile identically or its
+    vld_cnt map is routing garbage."""
+    if (ps.block_m, ps.block_k) != (block_m, block_k):
+        raise ValueError(
+            f"{what} was packed on (block_m={ps.block_m}, "
+            f"block_k={ps.block_k}) but the kernel is tiling on "
+            f"(block_m={block_m}, block_k={block_k}). A packed tensor's "
+            f"vld_cnt/occ maps are only valid at its own block sizes — "
+            f"re-pack it, or pass matching block sizes.")
+
+
+def check_skip(skip: str) -> None:
+    if skip not in SKIP_MODES:
+        raise ValueError(f"skip={skip!r} not in {SKIP_MODES}")
+
+
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
-                                             "interpret"))
+                                             "skip", "interpret"))
 def spike_matmul(x: Array | PackedSpikes, w: Array, *,
                  vld_cnt: Array | None = None,
                  block_m: int = 128,
                  block_n: int = 128, block_k: int = 128,
+                 skip: str = "dense",
                  interpret: bool | None = None) -> Array:
     """Event-driven spike matmul. x: [M,K] {0,1} (any dtype) or a
     ``PackedSpikes`` (bit-packed HBM format); w: [K,N].
@@ -37,12 +64,18 @@ def spike_matmul(x: Array | PackedSpikes, w: Array, *,
     operand carries both payload and metadata, so neither padding nor a
     count pass happens: words stream to VMEM (8x fewer HBM bytes) and
     K-tiles are unpacked right before the MXU.
+
+    ``skip``: byte-skip strategy (``SKIP_MODES``). ``"gated"`` walks a
+    compacted non-silent block list so silent tiles are never fetched from
+    HBM; ``"two_level"`` additionally elides silent 32-column stripes inside
+    active tiles via the word-occupancy bitmap. ``"dense"`` keeps the full
+    stream (right for low-sparsity inputs — no routing overhead).
     """
+    check_skip(skip)
     if interpret is None:
         interpret = not _on_tpu()
     if isinstance(x, PackedSpikes):
-        assert (x.block_m, x.block_k) == (block_m, block_k), \
-            (x.block_m, x.block_k, block_m, block_k)
+        check_block_contract(x, block_m, block_k, "spike_matmul x")
         m0, k0 = x.shape[-2:]
         assert len(x.shape) == 2, "spike_matmul takes a 2-D packed operand"
         n0 = w.shape[1]
@@ -50,18 +83,38 @@ def spike_matmul(x: Array | PackedSpikes, w: Array, *,
         kp = x.words.shape[-1] * 32
         if wp.shape[0] < kp:      # logical K padded up to the word grid
             wp = jnp.pad(wp, ((0, kp - wp.shape[0]), (0, 0)))
-        out = spike_matmul_pallas(
-            x.words, wp, x.vld_cnt if vld_cnt is None else vld_cnt,
-            block_m=block_m, block_n=block_n, block_k=block_k,
-            packed_in=True, interpret=interpret)
+        vld = x.vld_cnt if vld_cnt is None else vld_cnt
+        if skip == "dense":
+            out = spike_matmul_pallas(
+                x.words, wp, vld,
+                block_m=block_m, block_n=block_n, block_k=block_k,
+                packed_in=True, interpret=interpret)
+        else:
+            nact, kmap = compact_kmap(vld)
+            occ = x.with_occ().occ if skip == "two_level" else None
+            out = spike_matmul_gated_pallas(
+                x.words, wp, nact, kmap, occ,
+                block_m=block_m, block_n=block_n, block_k=block_k,
+                packed_in=True, two_level=(skip == "two_level"),
+                interpret=interpret)
         return out[:m0, :n0]
     m0, k0 = x.shape
     n0 = w.shape[1]
     xi = pad_to_blocks(x.astype(jnp.int8), block_m, block_k)
     wp = pad_to_blocks(w, block_k, block_n)
     vld = vld_or_compute(xi, vld_cnt, block_m, block_k)
-    out = spike_matmul_pallas(xi, wp, vld, block_m=block_m, block_n=block_n,
-                              block_k=block_k, interpret=interpret)
+    if skip == "dense":
+        out = spike_matmul_pallas(xi, wp, vld, block_m=block_m,
+                                  block_n=block_n, block_k=block_k,
+                                  interpret=interpret)
+    else:
+        nact, kmap = compact_kmap(vld)
+        occ = (word_occupancy_map_dense(xi, block_m, block_k)
+               if skip == "two_level" else None)
+        out = spike_matmul_gated_pallas(
+            xi, wp, nact, kmap, occ,
+            block_m=block_m, block_n=block_n, block_k=block_k,
+            two_level=(skip == "two_level"), interpret=interpret)
     return out[:m0, :n0]
 
 

@@ -29,6 +29,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ...core.events import LANE_BITS, unpack_words
+from ..gating import accum_tile
 
 Array = jax.Array
 
@@ -95,3 +96,90 @@ def spike_matmul_pallas(x: Array, w: Array, vld_cnt: Array, *,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
     )(vld_cnt, x, w)
+
+
+def _make_gated_kernel(packed_in: bool, two_level: bool):
+    def kernel(*refs):
+        if two_level:
+            nact_ref, kmap_ref, occ_ref, x_ref, w_ref, o_ref = refs
+        else:
+            nact_ref, kmap_ref, x_ref, w_ref, o_ref = refs
+        i = pl.program_id(0)
+        s = pl.program_id(2)
+
+        @pl.when(s == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        # steps past nact[i] revisit the last active block index, so the
+        # BlockSpec never changes -> no DMA; this predicate skips the MXU
+        @pl.when(s < nact_ref[i])
+        def _accum():
+            occ_bits = occ_ref[i, kmap_ref[i, s]] if two_level else None
+            accum_tile(o_ref, x_ref, w_ref, packed_in=packed_in,
+                       occ_bits=occ_bits)
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_n", "block_k",
+                                    "packed_in", "two_level", "interpret"))
+def spike_matmul_gated_pallas(x: Array, w: Array, nact: Array, kmap: Array,
+                              occ: Array | None = None, *,
+                              block_m: int = 128, block_n: int = 128,
+                              block_k: int = 128, packed_in: bool = False,
+                              two_level: bool = False,
+                              interpret: bool = False) -> Array:
+    """vld-gated tile streaming: the k grid axis walks ``kmap[i, s]`` — the
+    COMPACTED list of non-silent k-block indices for m-row ``i`` (from
+    ``core.events.compact_kmap``) — so silent blocks' weight tiles and spike
+    words are never DMA'd: tail grid steps map to the previously-fetched
+    block and Pallas elides the transfer. With ``two_level``, the per-block
+    word-occupancy bitmap ``occ`` additionally skips silent 32-column
+    stripes inside active blocks (irregular sparsity).
+
+    x: [M,K] int8 (or [M,K/32] int32 words with ``packed_in``); w: [K,N];
+    nact: [M/bm] int32; kmap: [M/bm, K/bk] int32; occ: [M/bm, K/bk] int32.
+    """
+    m = x.shape[0]
+    k2, n = w.shape
+    k = x.shape[1] * LANE_BITS if packed_in else x.shape[1]
+    assert k == k2 and m % block_m == 0 and k % block_k == 0 \
+        and n % block_n == 0, (x.shape, w.shape, block_m, block_n, block_k)
+    if two_level:
+        assert occ is not None, "two_level gating needs the occ bitmap"
+        npf = 3
+        scalars = (nact, kmap, occ)
+    else:
+        npf = 2
+        scalars = (nact, kmap)
+
+    def x_idx(i, j, s, nact_ref, kmap_ref, *rest):
+        return (i, kmap_ref[i, s])
+
+    def w_idx(i, j, s, nact_ref, kmap_ref, *rest):
+        return (kmap_ref[i, s], j)
+
+    if packed_in:
+        assert x.dtype == jnp.int32 and block_k % LANE_BITS == 0
+        x_spec = pl.BlockSpec((block_m, block_k // LANE_BITS), x_idx)
+    else:
+        x_spec = pl.BlockSpec((block_m, block_k), x_idx)
+
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        _make_gated_kernel(packed_in, two_level),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=npf,
+            grid=grid,
+            in_specs=[
+                x_spec,
+                pl.BlockSpec((block_k, block_n), w_idx),
+            ],
+            out_specs=pl.BlockSpec((block_m, block_n),
+                                   lambda i, j, s, *refs: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(*scalars, x, w)

@@ -35,7 +35,81 @@ HBM_BW = 819e9
 LINK_BW = 50e9
 HBM_PER_CHIP = 16e9          # v5e
 
+# -- kernel-level cost-model constants (the sparsity-adaptive autotuner) --
+# Fixed per-pallas_call cost (grid setup, scalar prefetch, launch): keeps
+# the model honest on tiny shapes, where the reference jnp path wins.
+LAUNCH_OVERHEAD_S = 2e-6
+# Extra metadata pass for the gated grid (compact_kmap over the vld map) —
+# tiny, but nonzero, so "gated" never wins at sparsity ~0 on equal bytes.
+GATING_OVERHEAD_S = 0.5e-6
+# MXU efficiency of the two-level sub-tile dots: a (128, 32) @ (32, 128)
+# stripe underfills the 128x128 systolic pipeline, so per-stripe FLOPs run
+# at a fraction of peak. Two-level only wins when word occupancy is LOW.
+SUBTILE_MXU_EFF = 0.35
+
 DEFAULT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def spike_matmul_traffic(m: int, k: int, n: int, *,
+                         block_m: int = 128, block_n: int = 128,
+                         block_k: int = 128, active_frac: float = 1.0,
+                         occ_frac: float = 1.0, packed: bool = False,
+                         skip: str = "dense", kernels: str = "fused") -> dict:
+    """Streaming HBM-traffic + FLOP model of one spike matmul / fused_pe
+    accumulation sweep, per byte-skip strategy.
+
+    This counts bytes AS THE KERNEL STREAMS THEM — one x and one w tile
+    DMA'd per visited grid step — not unique tensor bytes: the Pallas grid
+    re-fetches an x row-tile for every n-block and a w tile for every
+    m-block, which is exactly the traffic the vld-gated grid removes for
+    silent blocks. ``active_frac`` is the fraction of non-silent
+    (block_m x block_k) tiles (1 - block sparsity); ``occ_frac`` the
+    fraction of occupied 32-column stripes within active tiles.
+
+    Returns {"hbm_bytes", "flops", "mxu_eff"} — feed to ``kernel_time_s``.
+    """
+    gm, gn, gk = -(-m // block_m), -(-n // block_n), -(-k // block_k)
+    x_tile = block_m * block_k // 8 if packed else block_m * block_k
+    w_tile = block_k * block_n * 4
+    out_bytes = gm * gn * block_m * block_n * 4
+    if kernels == "reference":
+        # XLA fuses the dense matmul: unique bytes, full FLOPs, no launch
+        # overhead modeled (but no block skip either)
+        x_bytes = gm * gk * (block_m * block_k // 8 if packed
+                             else block_m * block_k)
+        return {"hbm_bytes": x_bytes + gk * gn * w_tile + out_bytes,
+                "flops": 2.0 * m * n * k, "mxu_eff": 1.0,
+                "overhead_s": 0.0}
+    meta_bytes = 4 * gm * gk                      # vld map
+    if skip == "dense":
+        steps = gm * gn * gk                      # every tile streams
+        flops = 2.0 * m * n * k * active_frac     # MXU still skips
+        eff = 1.0
+        overhead = LAUNCH_OVERHEAD_S
+    else:
+        # ≥1 tile per (m-row, n-block): a fully silent row still fetches
+        # its revisit target once. Continuous in active_frac so modeled
+        # bytes order strictly with sparsity (the CI regression guard).
+        steps = gm * gn * max(active_frac * gk, 1.0)
+        flops = 2.0 * m * n * k * active_frac
+        eff = 1.0
+        overhead = LAUNCH_OVERHEAD_S + GATING_OVERHEAD_S
+        meta_bytes += 4 * gm * (gk + 1)           # kmap + nact
+        if skip == "two_level":
+            flops = 2.0 * m * n * k * active_frac * occ_frac
+            eff = SUBTILE_MXU_EFF
+            meta_bytes += 4 * gm * gk             # occ bitmap
+    return {"hbm_bytes": steps * (x_tile + w_tile) + out_bytes + meta_bytes,
+            "flops": flops, "mxu_eff": eff, "overhead_s": overhead}
+
+
+def kernel_time_s(traffic: dict) -> float:
+    """Roofline time of one modeled kernel: max(compute, memory) + fixed
+    overhead. The same three-term logic as ``analyze_cell``, at kernel
+    granularity (no collectives inside one chip)."""
+    compute = traffic["flops"] / (PEAK_FLOPS * max(traffic["mxu_eff"], 1e-3))
+    memory = traffic["hbm_bytes"] / HBM_BW
+    return max(compute, memory) + traffic.get("overhead_s", 0.0)
 
 
 def analyze_cell(rec: dict) -> dict:

@@ -6,7 +6,9 @@ sparse-event execution. This package is that flow's software API:
   * ``SpikeTensor`` — the polymorphic spike-map currency (``dense`` |
     ``packed`` variants, always carrying ``vld_cnt`` block metadata);
   * ``ExecutionPolicy`` — one knob ("reference" | "fused_dense" |
-    "fused_packed") replacing the legacy per-call flag plumbing;
+    "fused_packed" | "auto") replacing the legacy per-call flag plumbing;
+    "auto" defers kernel/skip/block-shape choice to the roofline
+    autotuner (``repro.ops.autotune``) driven by measured sparsity;
   * entry points (``matmul``, ``lif``, ``fused_pe``, ``fused_pe_layer``,
     ``pool``, ``im2col``, ``qk_mask``, ``pack``, ``unpack``,
     ``attention``, ``dense_lif``, ``w2ttfs_head``) that dispatch on input
@@ -18,20 +20,22 @@ See docs/ops_api.md for the full API and the old-flag -> policy migration
 table.
 """
 from ..core.events import DEFAULT_BLOCKS, Blocks
+from .autotune import AutoTuner, KernelPlan, get_tuner
 from .compat import (legacy_flags_policy, merge_engine_policy,
                      resolve_out_format, with_policy)
 from .dispatch import (FusedOut, attention, conv_matmul_weights, dense_lif,
                        fused_pe, fused_pe_layer, im2col, lif, matmul, pack,
                        pool, qk_mask, unpack, w2ttfs_head)
-from .policy import (FUSED_DENSE, FUSED_PACKED, POLICIES, REFERENCE,
-                     ExecutionPolicy, as_policy)
+from .policy import (AUTO, AUTO_PACKED, FUSED_DENSE, FUSED_PACKED, POLICIES,
+                     REFERENCE, ExecutionPolicy, as_policy)
 from .registry import implementations, lookup, register
 from .spike_tensor import SpikeTensor, Spikes
 
 __all__ = [
     "DEFAULT_BLOCKS", "Blocks", "SpikeTensor", "Spikes",
     "ExecutionPolicy", "POLICIES", "REFERENCE", "FUSED_DENSE",
-    "FUSED_PACKED", "as_policy",
+    "FUSED_PACKED", "AUTO", "AUTO_PACKED", "as_policy",
+    "AutoTuner", "KernelPlan", "get_tuner",
     "register", "lookup", "implementations",
     "FusedOut", "matmul", "lif", "fused_pe", "fused_pe_layer", "pool",
     "im2col", "conv_matmul_weights", "qk_mask", "pack", "unpack",

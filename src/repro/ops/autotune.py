@@ -1,0 +1,214 @@
+"""Roofline-driven policy autotuner: the ``"auto"`` kernel mode.
+
+``ExecutionPolicy(kernels="auto")`` defers the kernel choice to this
+module: per (op, shape, format, sparsity bucket) the tuner enumerates the
+concrete execution points — reference jnp, fused dense-skip, fused gated,
+fused two-level, over the admissible block shapes — prices each with the
+streaming cost model in ``repro.launch.roofline``, and caches the argmin
+as a ``KernelPlan``. Dispatch then runs THAT concrete implementation, so
+an auto policy's outputs are bit-identical to whichever fixed policy it
+selects, and (within the model) never slower than the best fixed one.
+
+Sparsity is read from the operand's ``vld_cnt``/``occ`` maps when they are
+CONCRETE (outside jit). Under a jit trace the maps are tracers — no value
+to branch on — so the tuner falls back to the EWMA sparsity hint fed
+online by the serving ``Engine``'s per-tick spike stats
+(``AutoTuner.observe``), and to the dense-safe default (sparsity 0 ->
+dense streaming) when nothing has been observed yet. Plans are keyed on
+the BUCKETED sparsity so serving reuses one compiled kernel per regime
+instead of recompiling per tick.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import numpy as np
+
+from ..launch import roofline
+from .spike_tensor import SpikeTensor
+
+# sparsity buckets: fraction of ACTIVE blocks quantized to these edges
+# (coarse on the dense end, fine on the sparse end where strategy flips)
+_BUCKETS = (0.0, 0.05, 0.15, 0.3, 0.5, 0.7, 0.85, 0.95, 1.0)
+
+
+def bucket(frac: float) -> float:
+    """Quantize an active-block fraction to its plan-cache bucket edge."""
+    frac = min(max(float(frac), 0.0), 1.0)
+    return min(_BUCKETS, key=lambda b: abs(b - frac))
+
+
+def _concrete(x) -> Optional[np.ndarray]:
+    """The host value of an array, or None under a jit trace."""
+    if x is None or isinstance(x, jax.core.Tracer):
+        return None
+    return np.asarray(x)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    """One resolved execution point for one (op, shape, sparsity) cell."""
+    kernels: str                  # "reference" | "fused"
+    skip: str                     # "dense" | "gated" | "two_level"
+    block_m: int
+    block_n: int
+    block_k: int
+    est_time_s: float
+    est_hbm_bytes: float
+    active_frac: float            # the bucketed sparsity it was priced at
+    occ_frac: float
+
+
+class AutoTuner:
+    """Plan cache + online sparsity observer for the "auto" kernel mode."""
+
+    def __init__(self, ewma: float = 0.2):
+        self._plans: dict = {}
+        self._ewma = ewma
+        # EWMA of (active-block fraction, word-occupancy fraction) fed by
+        # the serving engine; the traced-operand fallback
+        self._hint: Optional[tuple] = None
+
+    # ------------------------------------------------------------ observe
+    def observe(self, active_frac: float, occ_frac: float = 1.0) -> None:
+        """Feed one measured sparsity sample (e.g. from the Engine's
+        per-tick spike stats). EWMA-smoothed into the traced fallback."""
+        a, o = float(active_frac), float(occ_frac)
+        if self._hint is None:
+            self._hint = (a, o)
+        else:
+            pa, po = self._hint
+            w = self._ewma
+            self._hint = (pa * (1 - w) + a * w, po * (1 - w) + o * w)
+
+    def sparsity_of(self, st: SpikeTensor) -> tuple:
+        """(active_frac, occ_frac) for an operand: measured from concrete
+        metadata, else the observed hint, else dense (the safe default —
+        "auto" degrades to the dense-streaming kernel, never worse)."""
+        vld = _concrete(st.vld_cnt)
+        if vld is None and not st.is_packed:
+            # dense operands carry vld_cnt lazily; measure from the payload
+            data = _concrete(st.data)
+            if data is not None:
+                from ..core.events import block_count_map_2d, pad_to_blocks
+                x2 = pad_to_blocks(st.data.reshape(-1, st.k),
+                                   st.block_m, st.block_k)
+                vld = np.asarray(block_count_map_2d(
+                    x2, st.block_m, st.block_k))
+        if vld is None:
+            return self._hint if self._hint is not None else (1.0, 1.0)
+        active = float(np.mean(vld > 0)) if vld.size else 1.0
+        occ = _concrete(st.occ)
+        if occ is None:
+            occ_frac = 1.0
+        else:
+            wpb = max(st.block_k // 32, 1)
+            cols = sum(((occ.astype(np.uint32) >> c) & 1).mean()
+                       for c in range(wpb)) / wpb
+            # stripe occupancy WITHIN active blocks
+            occ_frac = float(cols / active) if active > 0 else 1.0
+        return active, min(occ_frac, 1.0)
+
+    # --------------------------------------------------------------- plan
+    def plan_matmul(self, m: int, k: int, n: int, *, fmt: str = "dense",
+                    active_frac: float = 1.0, occ_frac: float = 1.0,
+                    block_m: int = 128, block_n: int = 128,
+                    block_k: int = 128, allow_reference: bool = True,
+                    allow_wide_n: bool = True) -> KernelPlan:
+        """Pick kernel + skip strategy + block shape for one accumulation
+        sweep (spike_matmul, or fused_pe's matmul core). Cached by
+        (shape, fmt, blocks, sparsity bucket)."""
+        a, o = bucket(active_frac), bucket(occ_frac)
+        key = ("matmul", m, k, n, fmt, block_m, block_n, block_k, a, o,
+               allow_reference, allow_wide_n)
+        plan = self._plans.get(key)
+        if plan is None:
+            plan = self._enumerate(m, k, n, fmt=fmt, active_frac=a,
+                                   occ_frac=o, block_m=block_m,
+                                   block_n=block_n, block_k=block_k,
+                                   allow_reference=allow_reference,
+                                   allow_wide_n=allow_wide_n)
+            self._plans[key] = plan
+        return plan
+
+    def plan_for(self, st: SpikeTensor, n: int, *, block_m: int,
+                 block_n: int, block_k: int, allow_reference: bool = True,
+                 allow_wide_n: bool = True) -> KernelPlan:
+        """Plan from a live operand: sparsity from its metadata (or the
+        observed hint), block_m/block_k pinned to the operand's own grid
+        (its vld/occ maps are only valid there). ``allow_wide_n=False``
+        pins block_n too — required when a packed residual/q operand's
+        grid ties the output tiling."""
+        active, occ = self.sparsity_of(st)
+        return self.plan_matmul(
+            st.m, st.k, n, fmt=st.fmt, active_frac=active, occ_frac=occ,
+            block_m=st.block_m, block_n=block_n, block_k=st.block_k,
+            allow_reference=allow_reference, allow_wide_n=allow_wide_n)
+
+    def _enumerate(self, m, k, n, *, fmt, active_frac, occ_frac,
+                   block_m, block_n, block_k, allow_reference,
+                   allow_wide_n=True) -> KernelPlan:
+        packed = fmt == "packed"
+        candidates = []
+
+        def price(kernels, skip, bm, bn, bk):
+            t = roofline.spike_matmul_traffic(
+                m, k, n, block_m=bm, block_n=bn, block_k=bk,
+                active_frac=active_frac, occ_frac=occ_frac,
+                packed=packed, skip=skip, kernels=kernels)
+            candidates.append(KernelPlan(
+                kernels, skip, bm, bn, bk,
+                est_time_s=roofline.kernel_time_s(t),
+                est_hbm_bytes=t["hbm_bytes"],
+                active_frac=active_frac, occ_frac=occ_frac))
+
+        # block_m/block_k stay on the operand's metadata grid; block_n is
+        # free — try the requested tile and a double-wide one (fewer x
+        # re-fetches per output row when n allows it)
+        bn_cands = {block_n}
+        if allow_wide_n and n % (2 * block_n) == 0:
+            bn_cands.add(2 * block_n)
+        for bn in sorted(bn_cands):
+            for skip in ("dense", "gated", "two_level"):
+                price("fused", skip, block_m, bn, block_k)
+        if allow_reference:
+            price("reference", "dense", block_m, block_n, block_k)
+        return min(candidates, key=lambda p: p.est_time_s)
+
+    # ---------------------------------------------------------- reporting
+    def snapshot(self) -> dict:
+        """Cache + hint state for the serving stats() export."""
+        return {
+            "observed_active_frac": None if self._hint is None
+            else self._hint[0],
+            "observed_occ_frac": None if self._hint is None
+            else self._hint[1],
+            "plans": {
+                "|".join(map(str, k)): {
+                    "kernels": p.kernels, "skip": p.skip,
+                    "blocks": [p.block_m, p.block_n, p.block_k],
+                    "est_time_us": p.est_time_s * 1e6,
+                    "est_hbm_bytes": p.est_hbm_bytes,
+                }
+                for k, p in self._plans.items()
+            },
+        }
+
+    def reset(self) -> None:
+        self._plans.clear()
+        self._hint = None
+
+
+_TUNER: Optional[AutoTuner] = None
+
+
+def get_tuner() -> AutoTuner:
+    """The process-global tuner the "auto" policy and the serving engine
+    share (one sparsity profile per deployment)."""
+    global _TUNER
+    if _TUNER is None:
+        _TUNER = AutoTuner()
+    return _TUNER

@@ -27,6 +27,7 @@ outputs are dense f32 (autodiff connectivity) and skip the metadata maps.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple, Optional
 
 import jax
@@ -55,6 +56,31 @@ def _policy_for(policy: PolicyLike, *sts: Optional[SpikeTensor]
     return ExecutionPolicy("fused", fmt)
 
 
+def _non_tuned(pol: ExecutionPolicy) -> ExecutionPolicy:
+    """Ops without a tuner cost model run "auto" as "fused" (the kernels
+    are unconditionally the right call for data movement / elementwise
+    work; only the matmul-sweep ops have a strategy space worth pricing)."""
+    return dataclasses.replace(pol, kernels="fused") if pol.auto else pol
+
+
+def _auto_matmul(pol: ExecutionPolicy, st: SpikeTensor, n: int,
+                 block_m: int, block_n: int, block_k: int,
+                 allow_wide_n: bool = True
+                 ) -> tuple[ExecutionPolicy, str, int, int, int]:
+    """Resolve an "auto" policy for a matmul-sweep op: ask the roofline
+    autotuner for the (kernel, skip strategy, block shape) plan on this
+    operand's shape + measured sparsity. Returns the concretized policy
+    plus (skip, block_m, block_n, block_k)."""
+    if not pol.auto:
+        return pol, "dense", block_m, block_n, block_k
+    from .autotune import get_tuner
+
+    plan = get_tuner().plan_for(st, n, block_m=block_m, block_n=block_n,
+                                block_k=block_k, allow_wide_n=allow_wide_n)
+    pol = dataclasses.replace(pol, kernels=plan.kernels)
+    return pol, plan.skip, plan.block_m, plan.block_n, plan.block_k
+
+
 class FusedOut(NamedTuple):
     """``ops.fused_pe`` / ``ops.fused_pe_layer`` result: the emitted spike
     map (format per policy, metadata attached), optional membrane state,
@@ -66,15 +92,22 @@ class FusedOut(NamedTuple):
 
 # ------------------------------------------------------------------- matmul
 def matmul(x: Spikes, w: Array, *, policy: PolicyLike = None,
+           skip: str = "dense",
            block_m: int = DEFAULT_BLOCKS.m, block_n: int = DEFAULT_BLOCKS.n,
            block_k: int = DEFAULT_BLOCKS.k) -> Array:
     """Event-driven spike matmul: [M, K] spikes @ [K, N] -> f32 current.
     Fused mode skips silent blocks on the operand's ``vld_cnt`` (computing
-    it only if the SpikeTensor does not already carry one)."""
+    it only if the SpikeTensor does not already carry one). ``skip``
+    selects the byte-skip strategy ("dense" | "gated" | "two_level");
+    an ``"auto"`` policy overrides it with the autotuner's plan."""
     st = SpikeTensor.wrap(x)
     pol = _policy_for(policy, st)
+    if pol.auto:
+        pol, skip, block_m, block_n, block_k = _auto_matmul(
+            pol, st, w.shape[1], block_m, block_n, block_k)
     return lookup("matmul", pol.mode)(st, w, block_m=block_m,
-                                         block_n=block_n, block_k=block_k)
+                                         block_n=block_n, block_k=block_k,
+                                         skip=skip)
 
 
 # ---------------------------------------------------------------------- lif
@@ -83,7 +116,7 @@ def lif(current: Array, v_prev: Array, s_prev: Array, *,
         policy: PolicyLike = None) -> tuple[Array, Array]:
     """One LIF membrane step over an arbitrary-shaped current tensor.
     Returns (spikes int8, v_next f32)."""
-    pol = _policy_for(policy)
+    pol = _non_tuned(_policy_for(policy))
     return lookup("lif", pol.mode)(current, v_prev, s_prev, lif_cfg)
 
 
@@ -97,21 +130,30 @@ def fused_pe(x: Spikes, w: Array, *,
              qk_threshold: float = 1.0,
              lif_cfg: LIFConfig = LIFConfig(),
              policy: PolicyLike = None,
+             skip: str = "dense",
              block_m: int = DEFAULT_BLOCKS.m,
              block_n: int = DEFAULT_BLOCKS.n,
              block_k: int = DEFAULT_BLOCKS.k) -> FusedOut:
     """One fused PE layer over a 2-D spike operand: event-skipped matmul +
     bias/residual + LIF threshold + optional QK write-back mask, emitting
     the next layer's metadata on the fly. ``residual`` may be a spike map
-    (either format) or a raw f32 membrane current."""
+    (either format) or a raw f32 membrane current. ``skip`` selects the
+    byte-skip strategy; an ``"auto"`` policy overrides it (and the block
+    shape) with the autotuner's plan for this operand."""
     st = SpikeTensor.wrap(x)
     res = SpikeTensor.wrap(residual) if residual is not None else None
     qs = SpikeTensor.wrap(q) if q is not None else None
     pol = _policy_for(policy, st)
+    if pol.auto:
+        wide_ok = not ((res is not None and res.is_packed)
+                       or (qs is not None and qs.is_packed))
+        pol, skip, block_m, block_n, block_k = _auto_matmul(
+            pol, st, w.shape[1], block_m, block_n, block_k,
+            allow_wide_n=wide_ok)
     return lookup("fused_pe", pol.mode)(
         st, w, bias=bias, residual=res, q=qs, v_prev=v_prev, s_prev=s_prev,
         qk_threshold=qk_threshold, lif_cfg=lif_cfg, fmt=pol.format,
-        block_m=block_m, block_n=block_n, block_k=block_k)
+        block_m=block_m, block_n=block_n, block_k=block_k, skip=skip)
 
 
 def fused_pe_layer(x: Spikes, w: Array, *,
@@ -121,6 +163,7 @@ def fused_pe_layer(x: Spikes, w: Array, *,
                    qk_threshold: float = 1.0,
                    lif_cfg: LIFConfig = LIFConfig(),
                    policy: PolicyLike = None,
+                   skip: str = "dense",
                    block_m: int = DEFAULT_BLOCKS.m,
                    block_n: int = DEFAULT_BLOCKS.n,
                    block_k: int = DEFAULT_BLOCKS.k) -> FusedOut:
@@ -130,10 +173,16 @@ def fused_pe_layer(x: Spikes, w: Array, *,
     res = SpikeTensor.wrap(residual) if residual is not None else None
     qs = SpikeTensor.wrap(q) if q is not None else None
     pol = _policy_for(policy, st)
+    if pol.auto:
+        wide_ok = not ((res is not None and res.is_packed)
+                       or (qs is not None and qs.is_packed))
+        pol, skip, block_m, block_n, block_k = _auto_matmul(
+            pol, st, w.shape[1], block_m, block_n, block_k,
+            allow_wide_n=wide_ok)
     return lookup("fused_pe_layer", pol.mode)(
         st, w, bias=bias, residual=res, q=qs, qk_threshold=qk_threshold,
         lif_cfg=lif_cfg, fmt=pol.format, block_m=block_m, block_n=block_n,
-        block_k=block_k)
+        block_k=block_k, skip=skip)
 
 
 # --------------------------------------------------------- spatial reshapes
@@ -148,7 +197,7 @@ def im2col(x: Spikes, spatial: tuple, kh: int, kw: int, stride: int, *,
     packed variant im2cols the WORD tensor directly — the patches of a
     packed map ARE the packing of the dense patches."""
     st = SpikeTensor.wrap(x)
-    pol = _policy_for(policy, st)
+    pol = _non_tuned(_policy_for(policy, st))
     return lookup("im2col", pol.mode)(st, spatial, kh, kw, stride, t=t,
                                          fmt=pol.format)
 
@@ -161,7 +210,7 @@ def pool(x: Spikes, spatial: tuple, *, t: int = 1, window: int = 2,
     words — the pooled map never exists dense. Returns (pooled SpikeTensor
     [t, B*H2*W2, C], (H2, W2))."""
     st = SpikeTensor.wrap(x)
-    pol = _policy_for(policy, st)
+    pol = _non_tuned(_policy_for(policy, st))
     return lookup("pool", pol.mode)(st, spatial, t=t, window=window,
                                        fmt=pol.format)
 
@@ -194,7 +243,7 @@ def qk_mask(q: Spikes, k: Spikes, *, threshold: float = 1.0,
     policies ignore them (the kernels compute the row-sum threshold)."""
     qs = SpikeTensor.wrap(q)
     ks = SpikeTensor.wrap(k)
-    pol = _policy_for(policy, ks)
+    pol = _non_tuned(_policy_for(policy, ks))
     if pol.differentiable:
         masked = lookup("qk_mask", pol.mode)(
             qs.to_dense(jnp.float32) if qs.is_packed else qs.data,
@@ -215,7 +264,7 @@ def pack(x: Spikes, *, policy: PolicyLike = None,
     st = SpikeTensor.wrap(x)
     if st.is_packed:
         return st
-    pol = as_policy(policy, ExecutionPolicy("fused", "packed"))
+    pol = _non_tuned(as_policy(policy, ExecutionPolicy("fused", "packed")))
     return lookup("pack", pol.kernels)(st, block_m=block_m, block_k=block_k)
 
 
@@ -225,7 +274,7 @@ def unpack(x: Spikes, *, dtype=jnp.int8, policy: PolicyLike = None) -> Array:
     st = SpikeTensor.wrap(x)
     if not st.is_packed:
         return st.data.astype(dtype)
-    pol = as_policy(policy, ExecutionPolicy("fused", "packed"))
+    pol = _non_tuned(as_policy(policy, ExecutionPolicy("fused", "packed")))
     return lookup("unpack", pol.kernels)(st, dtype)
 
 
@@ -236,7 +285,7 @@ def attention(q: Array, k: Array, v: Array, *, causal: bool = True,
     """Streaming causal softmax attention ([B, S, H, Dh] operands) — the
     non-spiking side of the hybrid flow, registered by the
     ``flash_attention`` kernel family."""
-    pol = _policy_for(policy)
+    pol = _non_tuned(_policy_for(policy))
     return lookup("attention", pol.kernels)(q, k, v, causal=causal,
                                             q_block=q_block,
                                             kv_block=kv_block)
@@ -253,7 +302,7 @@ def dense_lif(p: dict, x: Array, lif_cfg: LIFConfig, *,
     ``q`` (either format) applies the QK write-back mask."""
     flat = x.reshape(-1, x.shape[-1])
     qs = SpikeTensor.wrap(q) if q is not None else None
-    pol = _policy_for(policy)
+    pol = _non_tuned(_policy_for(policy))
     return lookup("dense_lif", pol.mode)(p, flat, lif_cfg, q=qs,
                                             qk_threshold=qk_threshold,
                                             fmt=pol.format)
@@ -264,6 +313,6 @@ def w2ttfs_head(spikes: Array, fc_w: Array, fc_b: Array, *, window: int,
                 policy: PolicyLike = None) -> Array:
     """W2TTFS classifier head (paper C2): window spike-count pooling +
     unit-scale FC over a dense [B, H, W, C] spike map."""
-    pol = _policy_for(policy)
+    pol = _non_tuned(_policy_for(policy))
     return lookup("w2ttfs_head", pol.mode)(spikes, fc_w, fc_b,
                                               window=window)

@@ -137,7 +137,11 @@ def _matmul_grad(kernels: str, block_m: int, block_n: int, block_k: int):
 
 
 def _matmul_impl(kernels):
-    def impl(st, w, *, block_m, block_n, block_k):
+    # ``skip`` is accepted for signature parity with the inference impls
+    # and ignored: differentiable operands are dense f32 stacks (autodiff
+    # connectivity), so the byte-skip metadata the gated kernels need does
+    # not exist on this path.
+    def impl(st, w, *, block_m, block_n, block_k, skip="dense"):
         f = _matmul_grad(kernels, block_m, block_n, block_k)
         return f({"x": _dense_operand(st), "w": _f32(w)})
     return impl
@@ -219,7 +223,7 @@ def _fused_pe_grad(kernels: str, cfg: LIFConfig, qk_threshold: float,
 
 def _fused_pe_impl(kernels):
     def impl(st, w, *, bias, residual, q, v_prev, s_prev, qk_threshold,
-             lif_cfg, fmt, block_m, block_n, block_k):
+             lif_cfg, fmt, block_m, block_n, block_k, skip="dense"):
         from .dispatch import FusedOut
         from .spike_tensor import SpikeTensor
 
@@ -293,7 +297,7 @@ def _fused_pe_layer_grad(kernels: str, cfg: LIFConfig, qk_threshold: float,
 
 def _fused_pe_layer_impl(kernels):
     def impl(st, w, *, bias, residual, q, qk_threshold, lif_cfg, fmt,
-             block_m, block_n, block_k):
+             block_m, block_n, block_k, skip="dense"):
         from .dispatch import FusedOut
         from .spike_tensor import SpikeTensor
 

@@ -64,18 +64,20 @@ def _ref_wrap(spk: Array, vld, fmt: str, block_m: int, block_n: int
 
 # =============================================================== spike_matmul
 @register("matmul", "fused")
-def _matmul_fused(st: SpikeTensor, w: Array, *, block_m, block_n, block_k):
+def _matmul_fused(st: SpikeTensor, w: Array, *, block_m, block_n, block_k,
+                  skip="dense"):
     from ..kernels.spike_matmul import spike_matmul
 
     if st.is_packed:
         return spike_matmul(st.to_packed_spikes(), w, block_m=block_m,
-                            block_n=block_n, block_k=block_k)
+                            block_n=block_n, block_k=block_k, skip=skip)
     return spike_matmul(st.data, w, vld_cnt=st.vld_cnt, block_m=block_m,
-                        block_n=block_n, block_k=block_k)
+                        block_n=block_n, block_k=block_k, skip=skip)
 
 
 @register("matmul", "reference")
-def _matmul_ref(st: SpikeTensor, w: Array, *, block_m, block_n, block_k):
+def _matmul_ref(st: SpikeTensor, w: Array, *, block_m, block_n, block_k,
+                skip="dense"):
     from ..kernels.spike_matmul import spike_matmul_ref
 
     x = st.to_dense() if st.is_packed else st.data
@@ -103,7 +105,7 @@ def _lif_ref(current, v_prev, s_prev, cfg: LIFConfig):
 @register("fused_pe", "fused")
 def _fused_pe_fused(st: SpikeTensor, w: Array, *, bias, residual, q, v_prev,
                     s_prev, qk_threshold, lif_cfg: LIFConfig, fmt,
-                    block_m, block_n, block_k):
+                    block_m, block_n, block_k, skip="dense"):
     from ..kernels.fused_pe import fused_pe
 
     out = fused_pe(
@@ -112,7 +114,7 @@ def _fused_pe_fused(st: SpikeTensor, w: Array, *, bias, residual, q, v_prev,
         vld_cnt=None if st.is_packed else st.vld_cnt,
         tau=lif_cfg.tau, v_th=lif_cfg.v_th, soft_reset=lif_cfg.soft_reset,
         qk_threshold=qk_threshold, block_m=block_m, block_n=block_n,
-        block_k=block_k, out_format=fmt)
+        block_k=block_k, out_format=fmt, skip=skip)
     return FusedOut(_wrap_spikes(out.spikes, out.vld_next, fmt, block_m,
                                  block_n), out.v_next, out.vld_next)
 
@@ -120,7 +122,7 @@ def _fused_pe_fused(st: SpikeTensor, w: Array, *, bias, residual, q, v_prev,
 @register("fused_pe", "reference")
 def _fused_pe_reference(st: SpikeTensor, w: Array, *, bias, residual, q,
                         v_prev, s_prev, qk_threshold, lif_cfg: LIFConfig,
-                        fmt, block_m, block_n, block_k):
+                        fmt, block_m, block_n, block_k, skip="dense"):
     from ..kernels.fused_pe import fused_pe_ref
 
     res = residual.to_dense(jnp.float32) if residual is not None else None
@@ -136,7 +138,7 @@ def _fused_pe_reference(st: SpikeTensor, w: Array, *, bias, residual, q,
 @register("fused_pe_layer", "fused")
 def _fused_pe_layer_fused(st: SpikeTensor, w: Array, *, bias, residual, q,
                           qk_threshold, lif_cfg: LIFConfig, fmt,
-                          block_m, block_n, block_k):
+                          block_m, block_n, block_k, skip="dense"):
     from ..kernels.fused_pe import fused_pe_layer
 
     spikes, vld = fused_pe_layer(
@@ -145,7 +147,7 @@ def _fused_pe_layer_fused(st: SpikeTensor, w: Array, *, bias, residual, q,
         vld_cnt=None if st.is_packed else st.vld_cnt,
         tau=lif_cfg.tau, v_th=lif_cfg.v_th, soft_reset=lif_cfg.soft_reset,
         qk_threshold=qk_threshold, block_m=block_m, block_n=block_n,
-        block_k=block_k, out_format=fmt)
+        block_k=block_k, out_format=fmt, skip=skip)
     return FusedOut(_wrap_spikes(spikes, vld, fmt, block_m, block_n),
                     None, vld)
 
@@ -153,7 +155,7 @@ def _fused_pe_layer_fused(st: SpikeTensor, w: Array, *, bias, residual, q,
 @register("fused_pe_layer", "reference")
 def _fused_pe_layer_reference(st: SpikeTensor, w: Array, *, bias, residual,
                               q, qk_threshold, lif_cfg: LIFConfig, fmt,
-                              block_m, block_n, block_k):
+                              block_m, block_n, block_k, skip="dense"):
     from ..kernels.fused_pe import fused_pe_ref
     from ..kernels.qk_attention import qk_attention_ref
 

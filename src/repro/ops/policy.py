@@ -13,6 +13,10 @@ policy value every ``ops.*`` entry point and model config understands:
   * ``"fused_packed"`` — the fused kernels AND the bit-packed HBM
                          interchange: spike tensors ship 32-per-int32-lane
                          with popcount metadata (~8x fewer spike bytes).
+  * ``"auto"`` / ``"auto_packed"`` — defer the kernel choice (reference vs
+                         fused, byte-skip strategy, block shape) to the
+                         roofline autotuner in ``repro.ops.autotune``,
+                         driven by the measured ``vld_cnt`` sparsity.
 
 A policy is three orthogonal axes — which KERNELS run, which FORMAT spike
 tensors take in HBM, and whether the graph is DIFFERENTIABLE (the legacy
@@ -35,7 +39,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Union
 
-KERNEL_MODES = ("reference", "fused")
+KERNEL_MODES = ("reference", "fused", "auto")
 FORMATS = ("dense", "packed")
 GRAD_SUFFIX = "+grad"
 
@@ -52,8 +56,15 @@ class ExecutionPolicy:
 
     @property
     def fused(self) -> bool:
-        """True when the event-driven Pallas kernels run the forward."""
-        return self.kernels == "fused"
+        """True when the event-driven Pallas kernels MAY run the forward
+        ("auto" resolves to fused or reference per call via the roofline
+        autotuner in ``repro.ops.autotune``)."""
+        return self.kernels in ("fused", "auto")
+
+    @property
+    def auto(self) -> bool:
+        """True when the kernel choice is deferred to the autotuner."""
+        return self.kernels == "auto"
 
     @property
     def packed(self) -> bool:
@@ -80,6 +91,8 @@ class ExecutionPolicy:
         if self.kernels == "reference":
             base = ("reference" if self.format == "dense"
                     else "reference_packed")
+        elif self.kernels == "auto":
+            base = "auto" if self.format == "dense" else "auto_packed"
         else:
             base = f"fused_{self.format}"
         return base + (GRAD_SUFFIX if self.differentiable else "")
@@ -92,12 +105,19 @@ REFERENCE = ExecutionPolicy("reference", "dense")
 FUSED_DENSE = ExecutionPolicy("fused", "dense")
 FUSED_PACKED = ExecutionPolicy("fused", "packed")
 
+AUTO = ExecutionPolicy("auto", "dense")
+AUTO_PACKED = ExecutionPolicy("auto", "packed")
+
 POLICIES = {
     "reference": REFERENCE,
     "fused_dense": FUSED_DENSE,
     "fused_packed": FUSED_PACKED,
     # legacy off-diagonal point: jnp compute, packed spike-state caching
     "reference_packed": ExecutionPolicy("reference", "packed"),
+    # roofline-autotuned: kernel + skip strategy + block shape resolved per
+    # (op, shape, sparsity bucket) by repro.ops.autotune
+    "auto": AUTO,
+    "auto_packed": AUTO_PACKED,
 }
 
 PolicyLike = Union[ExecutionPolicy, str, None]

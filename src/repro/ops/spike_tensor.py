@@ -54,6 +54,10 @@ class SpikeTensor:
               derived by popcount at pack time.
     fmt     : "dense" | "packed".
     shape   : the logical (pre-padding) shape; last two dims are (m, k).
+    occ     : optional int32 [..., Mp/block_m, Kp/block_k] word-occupancy
+              bitmaps (second-level event metadata from the pack pass) —
+              carried so the ``skip="two_level"`` kernels never recompute
+              them; None when no producer has emitted one.
     """
     data: Array
     vld_cnt: Optional[Array] = None
@@ -61,6 +65,7 @@ class SpikeTensor:
     shape: tuple = ()
     block_m: int = DEFAULT_BLOCKS.m
     block_k: int = DEFAULT_BLOCKS.k
+    occ: Optional[Array] = None
 
     def __post_init__(self):
         assert self.fmt in FORMATS, self.fmt
@@ -72,14 +77,14 @@ class SpikeTensor:
 
     # ------------------------------------------------------------- pytree
     def tree_flatten(self):
-        return ((self.data, self.vld_cnt),
+        return ((self.data, self.vld_cnt, self.occ),
                 (self.fmt, self.shape, self.block_m, self.block_k))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         fmt, shape, bm, bk = aux
-        data, vld = children
-        return cls(data, vld, fmt, shape, bm, bk)
+        data, vld, occ = children
+        return cls(data, vld, fmt, shape, bm, bk, occ)
 
     # ------------------------------------------------------- constructors
     @classmethod
@@ -91,7 +96,7 @@ class SpikeTensor:
     @classmethod
     def from_packed(cls, ps: PackedSpikes) -> "SpikeTensor":
         return cls(ps.words, ps.vld_cnt, "packed", tuple(ps.shape),
-                   ps.block_m, ps.block_k)
+                   ps.block_m, ps.block_k, ps.occ)
 
     @classmethod
     def wrap(cls, x: "Spikes") -> "SpikeTensor":
@@ -146,7 +151,7 @@ class SpikeTensor:
         """View a packed SpikeTensor as the kernel-level container."""
         assert self.is_packed, "dense SpikeTensor has no packed view"
         return PackedSpikes(self.data, self.vld_cnt, self.shape,
-                            self.block_m, self.block_k)
+                            self.block_m, self.block_k, self.occ)
 
     def to_dense(self, dtype=jnp.int8) -> Array:
         """Materialize the dense spike map at the logical shape (pure-jnp;
@@ -171,7 +176,8 @@ class SpikeTensor:
         return SpikeTensor(self.data[idx],
                            None if self.vld_cnt is None else self.vld_cnt[idx],
                            self.fmt, self.shape[1:], self.block_m,
-                           self.block_k)
+                           self.block_k,
+                           None if self.occ is None else self.occ[idx])
 
 
 Spikes = Union[Array, PackedSpikes, SpikeTensor]

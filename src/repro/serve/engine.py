@@ -501,12 +501,40 @@ class Engine:
                 np.ascontiguousarray(sel).view(np.uint8)).sum())
             packed_b += sel.size * 4
             units += sel.shape[0] * len(live_slots) * n_units
+        nz_words = blk_groups = blk_active = occ_words = 0
+        for leaf in jax.tree_util.tree_leaves(self.cache["layers"]):
+            if leaf.dtype != jnp.int32 or leaf.ndim != 5:
+                continue
+            sel = np.asarray(leaf)[:, live_slots]
+            nz = (sel != 0).reshape(-1, sel.shape[-1])
+            # group word columns into 128-column (4-word) metadata blocks:
+            # the k-axis granularity of the gated kernels' vld/occ maps
+            wpb = min(4, nz.shape[-1])
+            g = nz.shape[-1] // wpb
+            grp = nz[:, :g * wpb].reshape(-1, g, wpb)
+            any_blk = grp.any(axis=-1)
+            blk_groups += any_blk.size
+            blk_active += int(any_blk.sum())
+            occ_words += int(grp.sum())       # nonzero words (all in active)
+            nz_words += wpb * int(any_blk.sum())  # words inside active blocks
         if units:
-            self._spike_log.append({
+            entry = {
                 "live": len(live_slots),
                 "spike_rate": spikes / units,
                 "packed_bytes": packed_b,
-                "dense_bytes": units})        # the int8 maps it replaces
+                "dense_bytes": units}         # the int8 maps it replaces
+            if blk_groups:
+                # feed the measured (block-active, word-occupancy) fractions
+                # to the roofline autotuner: the "auto" policy's sparsity
+                # hint for traced operands (one EWMA profile per engine)
+                from ..ops.autotune import get_tuner
+
+                active = blk_active / blk_groups
+                occ = occ_words / max(nz_words, 1)
+                entry["block_active_frac"] = active
+                entry["word_occ_frac"] = occ
+                get_tuner().observe(active, occ)
+            self._spike_log.append(entry)
 
     def stats(self) -> dict:
         if not self.finished:
@@ -552,4 +580,13 @@ class Engine:
                 "packed_spike_bytes_per_tick_mean": pb,
                 "dense_spike_bytes_per_tick_mean": db,
                 "spike_state_hbm_reduction": db / max(pb, 1e-9)})
+            af = [e["block_active_frac"] for e in self._spike_log
+                  if "block_active_frac" in e]
+            if af:
+                out["block_active_frac_mean"] = float(np.mean(af))
+        # the autotuner's live state: the observed-sparsity EWMA feeding
+        # "auto" plans for traced operands, and every plan resolved so far
+        from ..ops.autotune import get_tuner
+
+        out["autotune"] = get_tuner().snapshot()
         return out

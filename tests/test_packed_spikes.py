@@ -82,9 +82,10 @@ def test_pack_leading_dims_and_getitem():
 
 def test_packed_bytes_accounting():
     ps = pack_spikes(_spikes(2, (1024, 1024)))
-    # 1 bit/spike + the tiny count map vs 1 byte/spike
+    # 1 bit/spike + the tiny count + occupancy maps vs 1 byte/spike
     assert 7.5 < ps.compression < 8.0
-    assert ps.packed_bytes == 1024 * 1024 // 8 + 4 * 8 * 8
+    assert ps.packed_bytes == 1024 * 1024 // 8 + 2 * (4 * 8 * 8)
+    assert ps.occ is not None and ps.occ.shape == ps.vld_cnt.shape
 
 
 def test_word_bit_layout_contract():
