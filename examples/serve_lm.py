@@ -10,10 +10,17 @@ the paper-C4 QKFormer mode on the fused event kernels with bit-packed spike
 state, and ``stats()`` then reports measured sparsity + packed bytes in
 flight.
 
+Self-healing knobs: ``--chaos`` replays the canned deterministic fault
+plan (NaN injections + a fused-kernel fault, plus a replica kill when
+``--replicas 2``) while streaming continues uninterrupted;
+``--integrity-every N`` runs the numeric/packed-state guard;
+``--deadline-ticks N`` bounds every request's time in the engine.
+
   PYTHONPATH=src python examples/serve_lm.py [--arch qwen3-1.7b]
                                              [--replicas 2]
                                              [--spiking]
                                              [--policy fused_packed]
+                                             [--chaos] [--deadline-ticks 64]
 """
 import argparse
 
@@ -21,7 +28,8 @@ import jax
 import numpy as np
 
 from repro.configs import build_model, get_config, reduced
-from repro.serve import Engine, EngineConfig, ReplicaRouter
+from repro.serve import (Engine, EngineConfig, ReplicaRouter,
+                         demo_chaos_plan)
 
 
 def main():
@@ -36,6 +44,16 @@ def main():
                     choices=["reference", "fused_dense", "fused_packed"],
                     help="execution policy override for this engine "
                          "(default: inherit the model config's policy)")
+    ap.add_argument("--deadline-ticks", type=int, default=0,
+                    help="per-request deadline in engine ticks "
+                         "(0 = none); late requests end 'deadline_miss'")
+    ap.add_argument("--integrity-every", type=int, default=0,
+                    help="integrity-guard period in decode ticks (0 = "
+                         "off); poisoned slots quarantine + replay")
+    ap.add_argument("--chaos", action="store_true",
+                    help="replay the canned deterministic fault plan "
+                         "against this trace (implies --integrity-every "
+                         "1); streaming must continue uninterrupted")
     args = ap.parse_args()
     if args.policy and not args.spiking:
         # the engine applies its policy to qk_spiking models only; without
@@ -51,11 +69,20 @@ def main():
     ecfg = EngineConfig(max_slots=4, max_len=96, prefill_pad=16,
                         prefill_chunk=16,     # elastic chunked prefill
                         max_queue=8,          # bounded admission FIFO
-                        policy=args.policy)
+                        policy=args.policy,
+                        deadline_ticks=args.deadline_ticks,
+                        integrity_every=(args.integrity_every
+                                         or (1 if args.chaos else 0)))
+    faults = None
+    if args.chaos:
+        faults = demo_chaos_plan(0, n_replicas=args.replicas)
+        print("chaos plan:", [e["kind"] for e in
+                              faults.summary()["events"]])
     if args.replicas > 1:
-        eng = ReplicaRouter(model, params, ecfg, n_replicas=args.replicas)
+        eng = ReplicaRouter(model, params, ecfg, n_replicas=args.replicas,
+                            faults=faults)
     else:
-        eng = Engine(model, params, ecfg)
+        eng = Engine(model, params, ecfg, faults=faults)
     rng = np.random.default_rng(0)
     uids = []
     for i in range(args.requests):

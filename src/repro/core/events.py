@@ -409,3 +409,66 @@ def unpack_spikes_ref(ps: PackedSpikes, dtype=jnp.int8) -> Array:
     dense = unpack_words(ps.words, dtype)
     sl = tuple(slice(0, d) for d in ps.shape[-2:])
     return dense[(..., *sl)]
+
+
+# ===================================================== packed-word invariants
+#
+# A well-formed packed spike tensor satisfies invariants that a corrupted
+# one (bit-flipped word, torn write, stale metadata) almost always breaks:
+# pad-lane bits — columns beyond the logical k and rows beyond the logical
+# m — are zero by construction of the pack pass, and the vld_cnt / occ
+# metadata maps agree with a popcount re-derivation from the words. The
+# serving engine's per-tick integrity guard checks the cheap pad-lane
+# invariant on cached spike-state pools; ``check_packed_invariants`` is the
+# full (host-side) audit used by tests and the fault-injection harness.
+
+def pad_lane_mask(k: int, n_words: int) -> "np.ndarray":
+    """int32 mask per packed word with 1-bits at every PAD-lane position
+    (logical columns >= ``k``). A packed row over ``n_words`` int32 words is
+    pad-clean iff ``(words & mask) == 0`` everywhere."""
+    import numpy as np
+
+    mask = np.zeros(n_words, np.uint32)
+    for j in range(n_words):
+        nbits = min(max(k - j * LANE_BITS, 0), LANE_BITS)
+        valid = np.uint32(0xFFFFFFFF) if nbits == LANE_BITS else \
+            np.uint32((1 << nbits) - 1)
+        mask[j] = ~valid & np.uint32(0xFFFFFFFF)
+    return mask.view(np.int32)
+
+
+def check_packed_invariants(ps: PackedSpikes) -> dict:
+    """Audit one PackedSpikes against its structural invariants. Returns a
+    host-side dict: ``ok`` plus per-invariant violation counts —
+
+      pad_cols     words with nonzero bits in column pad lanes (>= k)
+      pad_rows     nonzero words in row-pad rows (>= m)
+      vld_mismatch blocks whose stored vld_cnt != popcount of their words
+      occ_mismatch blocks whose stored occ bitmap != the re-derived one
+                   (0 when ``occ`` is None — absent metadata is legal)
+
+    Forces the arrays to host; this is the audit path (tests, quarantine
+    forensics), not the per-tick guard."""
+    import numpy as np
+
+    words = np.asarray(ps.words)
+    flat = words.reshape(-1, words.shape[-2], words.shape[-1])
+    mask = pad_lane_mask(ps.k, words.shape[-1])
+    pad_cols = int(((flat & mask) != 0).sum())
+    m = ps.m
+    pad_rows = int((flat[:, m:, :] != 0).sum()) if m < flat.shape[1] else 0
+    vld_ref = np.asarray(popcount_block_map(
+        jnp.asarray(words), ps.block_m, ps.block_k))
+    vld_mismatch = int((vld_ref != np.asarray(ps.vld_cnt)).sum())
+    occ_mismatch = 0
+    if ps.occ is not None:
+        occ_ref = np.asarray(word_occupancy_map(
+            jnp.asarray(words), ps.block_m, ps.block_k))
+        occ_mismatch = int((occ_ref != np.asarray(ps.occ)).sum())
+    return {
+        "ok": not (pad_cols or pad_rows or vld_mismatch or occ_mismatch),
+        "pad_cols": pad_cols,
+        "pad_rows": pad_rows,
+        "vld_mismatch": vld_mismatch,
+        "occ_mismatch": occ_mismatch,
+    }

@@ -34,10 +34,25 @@ def main() -> None:
     ap.add_argument("--replicas", type=int, default=1,
                     help="data-parallel engine replicas; slot pools shard "
                          "across local devices, least-loaded dispatch")
+    ap.add_argument("--deadline-ticks", type=int, default=0,
+                    help="per-request deadline in engine ticks; requests "
+                         "that exceed it finish with status "
+                         "'deadline_miss' (0 = no deadline)")
+    ap.add_argument("--integrity-every", type=int, default=0,
+                    help="run the numeric/packed-state integrity guard "
+                         "every N decode ticks; flagged slots are "
+                         "quarantined and replayed (0 = off)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the canned deterministic fault plan "
+                         "(replica kill + NaN injections + fused-kernel "
+                         "fault) against the trace — demo of the "
+                         "self-healing path; implies --integrity-every 1")
+    ap.add_argument("--chaos-seed", type=int, default=0)
     args = ap.parse_args()
 
     from ..configs import get_config, reduced as reduce_cfg, build_model
-    from ..serve import Engine, EngineConfig, ReplicaRouter
+    from ..serve import (Engine, EngineConfig, ReplicaRouter,
+                         demo_chaos_plan)
 
     overrides = {}
     if args.spiking:
@@ -50,14 +65,22 @@ def main() -> None:
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
+    integrity = args.integrity_every or (1 if args.chaos else 0)
     ecfg = EngineConfig(max_slots=args.slots, max_len=args.max_len,
                         prefill_chunk=args.prefill_chunk,
                         prefill_chunks_per_tick=args.chunks_per_tick,
-                        max_queue=args.max_queue)
+                        max_queue=args.max_queue,
+                        integrity_every=integrity,
+                        deadline_ticks=args.deadline_ticks)
+    faults = None
+    if args.chaos:
+        faults = demo_chaos_plan(args.chaos_seed, n_replicas=args.replicas)
+        print(f"[serve] chaos plan: {faults.summary()['events']}")
     if args.replicas > 1:
-        eng = ReplicaRouter(model, params, ecfg, n_replicas=args.replicas)
+        eng = ReplicaRouter(model, params, ecfg, n_replicas=args.replicas,
+                            faults=faults)
     else:
-        eng = Engine(model, params, ecfg)
+        eng = Engine(model, params, ecfg, faults=faults)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         plen = int(rng.integers(4, 24))

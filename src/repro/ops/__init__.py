@@ -23,6 +23,8 @@ from ..core.events import DEFAULT_BLOCKS, Blocks
 from .autotune import AutoTuner, KernelPlan, get_tuner
 from .compat import (legacy_flags_policy, merge_engine_policy,
                      resolve_out_format, with_policy)
+from .fallback import (InjectedKernelFault, arm_kernel_fault, demotions,
+                       reset_demotions)
 from .dispatch import (FusedOut, attention, conv_matmul_weights, dense_lif,
                        fused_pe, fused_pe_layer, im2col, lif, matmul, pack,
                        pool, qk_mask, unpack, w2ttfs_head)
@@ -42,4 +44,6 @@ __all__ = [
     "attention", "dense_lif", "w2ttfs_head",
     "legacy_flags_policy", "merge_engine_policy", "resolve_out_format",
     "with_policy",
+    "InjectedKernelFault", "arm_kernel_fault", "demotions",
+    "reset_demotions",
 ]

@@ -71,6 +71,10 @@ class AutoTuner:
         # EWMA of (active-block fraction, word-occupancy fraction) fed by
         # the serving engine; the traced-operand fallback
         self._hint: Optional[tuple] = None
+        # ops whose fused kernels were demoted to reference at runtime
+        # (repro.ops.fallback): "auto" must stop pricing a mode that
+        # cannot run, so demoted ops always plan to reference
+        self._demoted: set = set()
 
     # ------------------------------------------------------------ observe
     def observe(self, active_frac: float, occ_frac: float = 1.0) -> None:
@@ -178,6 +182,24 @@ class AutoTuner:
             price("reference", "dense", block_m, block_n, block_k)
         return min(candidates, key=lambda p: p.est_time_s)
 
+    # ----------------------------------------------------------- demotion
+    def demote(self, op: str) -> None:
+        """A fused kernel of ``op`` failed at runtime and fell back to
+        reference (see ``repro.ops.fallback``): drop every cached plan so
+        future "auto" resolutions re-price with the op excluded from the
+        fused candidate set."""
+        if op not in self._demoted:
+            self._demoted.add(op)
+            self._plans.clear()
+
+    def is_demoted(self, op: str) -> bool:
+        return op in self._demoted
+
+    def clear_demotions(self) -> None:
+        if self._demoted:
+            self._demoted.clear()
+            self._plans.clear()
+
     # ---------------------------------------------------------- reporting
     def snapshot(self) -> dict:
         """Cache + hint state for the serving stats() export."""
@@ -186,6 +208,7 @@ class AutoTuner:
             else self._hint[0],
             "observed_occ_frac": None if self._hint is None
             else self._hint[1],
+            "demoted_ops": sorted(self._demoted),
             "plans": {
                 "|".join(map(str, k)): {
                     "kernels": p.kernels, "skip": p.skip,
@@ -200,6 +223,7 @@ class AutoTuner:
     def reset(self) -> None:
         self._plans.clear()
         self._hint = None
+        self._demoted.clear()
 
 
 _TUNER: Optional[AutoTuner] = None

@@ -63,20 +63,26 @@ def _non_tuned(pol: ExecutionPolicy) -> ExecutionPolicy:
     return dataclasses.replace(pol, kernels="fused") if pol.auto else pol
 
 
-def _auto_matmul(pol: ExecutionPolicy, st: SpikeTensor, n: int,
+def _auto_matmul(op: str, pol: ExecutionPolicy, st: SpikeTensor, n: int,
                  block_m: int, block_n: int, block_k: int,
                  allow_wide_n: bool = True
                  ) -> tuple[ExecutionPolicy, str, int, int, int]:
     """Resolve an "auto" policy for a matmul-sweep op: ask the roofline
     autotuner for the (kernel, skip strategy, block shape) plan on this
     operand's shape + measured sparsity. Returns the concretized policy
-    plus (skip, block_m, block_n, block_k)."""
+    plus (skip, block_m, block_n, block_k). An op whose fused kernel was
+    demoted at runtime (``repro.ops.fallback``) resolves straight to
+    reference — "auto" stops pricing a mode that cannot run."""
     if not pol.auto:
         return pol, "dense", block_m, block_n, block_k
     from .autotune import get_tuner
 
-    plan = get_tuner().plan_for(st, n, block_m=block_m, block_n=block_n,
-                                block_k=block_k, allow_wide_n=allow_wide_n)
+    tuner = get_tuner()
+    if tuner.is_demoted(op):
+        return (dataclasses.replace(pol, kernels="reference"),
+                "dense", block_m, block_n, block_k)
+    plan = tuner.plan_for(st, n, block_m=block_m, block_n=block_n,
+                          block_k=block_k, allow_wide_n=allow_wide_n)
     pol = dataclasses.replace(pol, kernels=plan.kernels)
     return pol, plan.skip, plan.block_m, plan.block_n, plan.block_k
 
@@ -104,7 +110,7 @@ def matmul(x: Spikes, w: Array, *, policy: PolicyLike = None,
     pol = _policy_for(policy, st)
     if pol.auto:
         pol, skip, block_m, block_n, block_k = _auto_matmul(
-            pol, st, w.shape[1], block_m, block_n, block_k)
+            "matmul", pol, st, w.shape[1], block_m, block_n, block_k)
     return lookup("matmul", pol.mode)(st, w, block_m=block_m,
                                          block_n=block_n, block_k=block_k,
                                          skip=skip)
@@ -148,7 +154,7 @@ def fused_pe(x: Spikes, w: Array, *,
         wide_ok = not ((res is not None and res.is_packed)
                        or (qs is not None and qs.is_packed))
         pol, skip, block_m, block_n, block_k = _auto_matmul(
-            pol, st, w.shape[1], block_m, block_n, block_k,
+            "fused_pe", pol, st, w.shape[1], block_m, block_n, block_k,
             allow_wide_n=wide_ok)
     return lookup("fused_pe", pol.mode)(
         st, w, bias=bias, residual=res, q=qs, v_prev=v_prev, s_prev=s_prev,
@@ -177,8 +183,8 @@ def fused_pe_layer(x: Spikes, w: Array, *,
         wide_ok = not ((res is not None and res.is_packed)
                        or (qs is not None and qs.is_packed))
         pol, skip, block_m, block_n, block_k = _auto_matmul(
-            pol, st, w.shape[1], block_m, block_n, block_k,
-            allow_wide_n=wide_ok)
+            "fused_pe_layer", pol, st, w.shape[1], block_m, block_n,
+            block_k, allow_wide_n=wide_ok)
     return lookup("fused_pe_layer", pol.mode)(
         st, w, bias=bias, residual=res, q=qs, qk_threshold=qk_threshold,
         lif_cfg=lif_cfg, fmt=pol.format, block_m=block_m, block_n=block_n,

@@ -1,0 +1,158 @@
+"""Graceful kernel degradation: fused -> reference fallback per (op, mode).
+
+A fused Pallas call can fail at trace/lower time on shapes or backends the
+kernel was never exercised on (Mosaic lowering errors, interpret-mode
+limitations, a backend without the primitive). The serving stack must not
+crash on that: ``registry.lookup`` wraps every fused-mode implementation in
+a guard that, on a runtime failure, DEMOTES the (op, mode) cell to its
+reference implementation for the rest of the process and re-runs the call
+on the reference impl — same signature, same numerics contract (the parity
+suite holds the fused kernels bit-identical to the references), so callers
+never observe the swap except through ``demotions()`` / engine ``stats()``.
+
+Demotion is sticky per (op, mode): the broken kernel is not retried, and
+the roofline autotuner is told (``AutoTuner.demote``) so "auto" policies
+stop pricing plans for an implementation that cannot run.
+
+Only genuine runtime failures demote: ``RuntimeError`` and its subclasses
+(XLA/Mosaic raise ``XlaRuntimeError``; the fault-injection harness raises
+``InjectedKernelFault``). Contract violations — ``ValueError`` /
+``TypeError`` / ``AssertionError`` from shape or block checks — propagate
+unchanged: the reference impl would reject those too, and masking them
+would hide caller bugs.
+
+The deliberate injection point for the chaos tests lives here as well:
+``arm_kernel_fault(op, at_call)`` makes the Nth guarded fused call of
+``op`` raise ``InjectedKernelFault`` — exercising the demotion machinery
+deterministically (``serve.faults.FaultPlan.fail_kernel`` arms it).
+
+Note on jit: the guard runs at Python dispatch/trace time. A failure
+inside an ALREADY-COMPILED executable (e.g. an async device-side fault)
+surfaces from ``block_until_ready`` in the engine, where the replica-level
+health machinery handles it; this layer models the much more common
+trace/compile-time failure class.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Callable
+
+__all__ = [
+    "InjectedKernelFault", "arm_kernel_fault", "armed_kernel_faults",
+    "is_demoted", "demotions", "reset_demotions", "reset",
+]
+
+
+class InjectedKernelFault(RuntimeError):
+    """A deliberately injected fused-kernel failure (fault harness)."""
+
+
+# kinds of failure that trigger demotion (see module docstring)
+FALLBACK_EXCEPTIONS = (RuntimeError,)
+
+_DEMOTED: dict[tuple[str, str], str] = {}      # (op, mode) -> reason
+_WRAPPED: dict[tuple[str, str], tuple] = {}    # (op, mode) -> (fn, wrapper)
+_FAULTS: list[dict] = []                       # armed injections
+_LOG: list[dict] = []                          # demotion event log
+
+
+def arm_kernel_fault(op: str = "*", at_call: int = 0) -> None:
+    """Arm one injected failure: the ``at_call``-th guarded fused call of
+    ``op`` ("*" = any op, counted across all ops) raises
+    ``InjectedKernelFault`` from inside the guard. Fires once."""
+    _FAULTS.append({"op": op, "at_call": int(at_call), "n": 0,
+                    "fired": False})
+
+
+def armed_kernel_faults() -> list[dict]:
+    return [dict(f) for f in _FAULTS]
+
+
+def is_demoted(op: str, mode: str | None = None) -> bool:
+    """True if ``op`` (optionally a specific mode) has been demoted to its
+    reference implementation."""
+    if mode is not None:
+        return (op, mode) in _DEMOTED
+    return any(o == op for o, _ in _DEMOTED)
+
+
+def demotions() -> list[dict]:
+    """The demotion log: one entry per (op, mode) that fell back."""
+    return [dict(e) for e in _LOG]
+
+
+def reset_demotions() -> None:
+    """Forget every demotion (tests / after a deploy that fixed the
+    kernel). Also clears the autotuner's demotion set."""
+    _DEMOTED.clear()
+    _LOG.clear()
+    from .autotune import get_tuner
+
+    get_tuner().clear_demotions()
+
+
+def reset() -> None:
+    """Full harness reset: demotions, armed faults, wrapper cache."""
+    reset_demotions()
+    _FAULTS.clear()
+    _WRAPPED.clear()
+
+
+def _reference_mode(mode: str) -> str:
+    return mode.replace("fused", "reference")
+
+
+def _maybe_inject(op: str) -> None:
+    for f in _FAULTS:
+        if f["fired"] or f["op"] not in ("*", op):
+            continue
+        if f["n"] < f["at_call"]:
+            f["n"] += 1
+            continue
+        f["fired"] = True
+        raise InjectedKernelFault(
+            f"injected fused-kernel fault: op={op!r} call #{f['n']}")
+
+
+def _demote(op: str, mode: str, err: BaseException) -> None:
+    reason = f"{type(err).__name__}: {err}"
+    _DEMOTED[(op, mode)] = reason
+    _LOG.append({"op": op, "mode": mode, "fallback": _reference_mode(mode),
+                 "reason": reason})
+    warnings.warn(
+        f"fused kernel {op!r} ({mode}) raised {reason!r}; demoted to "
+        f"{_reference_mode(mode)!r} for the rest of the process "
+        f"(repro.ops.fallback.reset_demotions() to re-arm)",
+        RuntimeWarning, stacklevel=3)
+    from .autotune import get_tuner
+
+    get_tuner().demote(op)
+
+
+def guarded(op: str, mode: str, fn: Callable) -> Callable:
+    """The wrapper ``registry.lookup`` returns for fused-mode entries.
+    Memoized per (op, mode) so repeated lookups (every dispatch) reuse one
+    closure."""
+    cached = _WRAPPED.get((op, mode))
+    if cached is not None and cached[0] is fn:
+        return cached[1]
+
+    def call(*args, **kwargs):
+        from .registry import lookup
+
+        if (op, mode) in _DEMOTED:
+            return lookup(op, _reference_mode(mode))(*args, **kwargs)
+        try:
+            _maybe_inject(op)
+            return fn(*args, **kwargs)
+        except FALLBACK_EXCEPTIONS as err:
+            try:
+                ref = lookup(op, _reference_mode(mode))
+            except NotImplementedError:
+                raise err from None
+            _demote(op, mode, err)
+            return ref(*args, **kwargs)
+
+    call.__name__ = f"guarded_{op}_{mode.replace('+', '_')}"
+    _WRAPPED[(op, mode)] = (fn, call)
+    return call

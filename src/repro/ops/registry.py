@@ -43,7 +43,15 @@ def _ensure_loaded() -> None:
 def lookup(op: str, mode: str) -> Callable:
     _ensure_loaded()
     try:
-        return _REGISTRY[(op, mode)]
+        fn = _REGISTRY[(op, mode)]
+        if "fused" in mode:
+            # fused entries go out behind the graceful-degradation guard:
+            # a runtime failure demotes the (op, mode) cell to its
+            # reference implementation instead of crashing the caller
+            from . import fallback
+
+            return fallback.guarded(op, mode, fn)
+        return fn
     except KeyError:
         have = sorted(m for o, m in _REGISTRY if o == op)
         if have:

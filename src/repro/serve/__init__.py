@@ -1,2 +1,10 @@
-from .engine import Engine, EngineConfig, QueueFull, Request
-from .router import ReplicaRouter
+from .engine import (Engine, EngineConfig, QueueFull, Request,
+                     StalledEngine, clear_jit_cache)
+from .faults import FaultPlan, ReplicaFailure, demo_chaos_plan
+from .router import AllReplicasDead, ReplicaRouter
+
+__all__ = [
+    "Engine", "EngineConfig", "QueueFull", "Request", "StalledEngine",
+    "clear_jit_cache", "FaultPlan", "ReplicaFailure", "demo_chaos_plan",
+    "AllReplicasDead", "ReplicaRouter",
+]

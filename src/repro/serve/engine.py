@@ -58,6 +58,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import ops
+from ..core.events import pad_lane_mask
+from .faults import FaultPlan, ReplicaFailure
 
 Array = jax.Array
 
@@ -87,18 +89,57 @@ class QueueFull(RuntimeError):
     submit, or a blocking submit that exhausted its tick budget)."""
 
 
-@dataclasses.dataclass
+class StalledEngine(RuntimeError):
+    """``run_until_drained`` detected a livelock: work is still pending but
+    no pipeline stage has made progress for the grace window (or the tick
+    budget ran out). The message names the stuck slots and FIFO depths;
+    ``report`` carries the same data machine-readably."""
+
+    def __init__(self, msg: str, report: Optional[dict] = None):
+        super().__init__(msg)
+        self.report = report or {}
+
+
+def clear_jit_cache() -> None:
+    """Drop the shared jitted-step cache. Needed when a process-global ops
+    demotion (``repro.ops.fallback``) is reset and the engine must re-trace
+    through the restored fused kernels — compiled executables baked the
+    demoted graph in."""
+    _JIT_CACHE.clear()
+
+
+# Request.status lifecycle. "done" is the only SUCCESS terminal; the
+# ``done`` bool means "terminal" (any of the last four).
+STATUS_QUEUED = "queued"
+STATUS_PREFILL = "prefill"
+STATUS_DECODE = "decode"
+STATUS_DONE = "done"
+STATUS_CANCELLED = "cancelled"
+STATUS_DEADLINE = "deadline_miss"
+STATUS_FAILED = "failed"
+TERMINAL = (STATUS_DONE, STATUS_CANCELLED, STATUS_DEADLINE, STATUS_FAILED)
+
+
+@dataclasses.dataclass(eq=False)
 class Request:
     uid: int
     prompt: np.ndarray                  # [S] int32
     max_new: int = 32
     temperature: float = 0.0            # 0 = greedy
     eos_id: Optional[int] = None
+    # deadlines (absolute, resolved at submit; None = none)
+    deadline_tick: Optional[int] = None
+    deadline_t: Optional[float] = None
     # -- filled by the engine --
     out: list = dataclasses.field(default_factory=list)
     fifo: deque = dataclasses.field(default_factory=deque)  # undrained tokens
     slot: int = -1
     done: bool = False
+    status: str = STATUS_QUEUED
+    retries: int = 0                    # quarantine evict->requeue count
+    pushed: int = 0                     # tokens ever pushed to the FIFO:
+    # a quarantine replay regenerates the greedy stream from scratch but
+    # only pushes tokens PAST this mark — at-most-once delivery
     enqueued_t: float = 0.0
     first_token_t: float = 0.0
     finished_t: float = 0.0
@@ -152,6 +193,19 @@ class EngineConfig:
     # measurement syncs the packed state pool to host, so latency-sensitive
     # deployments should sample sparsely
     spike_stats_every: int = 1
+    # --- self-healing ---
+    # run the per-tick integrity guard every Nth decode tick (0 disables):
+    # one jitted scan over the slot-pool cache + logits (finite-check on
+    # float state, pad-lane invariant on packed spike words) whose verdict
+    # is a [max_slots] bool pair — a flagged LIVE slot is quarantined
+    # (evicted, scrubbed, requeued) instead of crashing the engine
+    integrity_every: int = 0
+    # quarantine retry budget: a request evicted more than this many times
+    # is failed (status "failed") instead of requeued again
+    quarantine_retries: int = 2
+    # default per-request deadline in engine ticks (0 = none); individual
+    # submits may override
+    deadline_ticks: int = 0
 
     def __post_init__(self):
         resolved = ops.legacy_flags_policy(
@@ -162,10 +216,16 @@ class EngineConfig:
 
 
 class Engine:
-    def __init__(self, model, params, cfg: EngineConfig, rng_seed: int = 0):
+    def __init__(self, model, params, cfg: EngineConfig, rng_seed: int = 0,
+                 faults: Optional[FaultPlan] = None):
         self.model = model
         self.params = params
         self.cfg = cfg
+        # fault-injection script (None in production); kernel faults are
+        # process-global and armed immediately
+        self.faults = faults
+        if faults is not None:
+            faults.arm_kernel_faults()
         spiking = getattr(model.cfg, "attention_kind", "") == "qk_spiking"
         self.policy = getattr(model.cfg, "exec_policy", ops.REFERENCE)
         if spiking:
@@ -199,6 +259,16 @@ class Engine:
         self._prefill_chunks = 0
         # rolling window: stats() percentiles stay O(window), memory bounded
         self._tick_wall: deque = deque(maxlen=4096)
+        # self-healing state + counters
+        self._tokens_emitted = 0
+        self._cancelled = 0
+        self._deadline_miss = 0
+        self._quarantined = 0
+        self._requeues = 0
+        self._failed = 0
+        self._guard_scans = 0
+        self._guard_fn = None               # lazily-jitted integrity scan
+        self._forced_stalls: dict[int, int] = {}   # slot -> stall-until tick
 
         # slot-pool cache; per-slot valid lengths tracked host-side
         self.cache = self.model.init_cache(cfg.max_slots, cfg.max_len)
@@ -222,11 +292,19 @@ class Engine:
     # ------------------------------------------------------------ lifecycle
     def submit(self, prompt: np.ndarray, max_new: int = 32,
                temperature: float = 0.0, eos_id: Optional[int] = None,
-               block: bool = True) -> int:
+               block: bool = True, deadline_ticks: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> int:
         """Enqueue a request. With ``max_queue`` set and the admission FIFO
         full, a blocking submit applies backpressure: it donates engine
         ticks (draining prefill chunks and decode work) until a queue slot
-        frees; ``block=False`` raises ``QueueFull`` immediately instead."""
+        frees; ``block=False`` raises ``QueueFull`` immediately instead.
+
+        ``deadline_ticks`` (engine ticks from enqueue, deterministic) and
+        ``deadline_s`` (wall seconds, for latency SLOs) bound the request's
+        lifetime: a request still unfinished past either deadline is
+        cancelled with status "deadline_miss" at the next tick, its slot
+        reclaimed. ``deadline_ticks=None`` inherits
+        ``EngineConfig.deadline_ticks`` (0 = no deadline)."""
         prompt = np.asarray(prompt, np.int32)
         if len(prompt) == 0:
             raise ValueError("empty prompt: there is no position to read "
@@ -249,10 +327,69 @@ class Engine:
                       max_new=max_new, temperature=temperature, eos_id=eos_id)
         req.enqueued_t = time.time()
         req.enqueued_tick = self._tick
+        if deadline_ticks is None:
+            deadline_ticks = self.cfg.deadline_ticks or None
+        if deadline_ticks is not None:
+            req.deadline_tick = self._tick + int(deadline_ticks)
+        if deadline_s is not None:
+            req.deadline_t = req.enqueued_t + float(deadline_s)
         self.queue.append(req)
         self.requests[req.uid] = req
         self._queue_hwm = max(self._queue_hwm, len(self.queue))
         return req.uid
+
+    def cancel(self, uid: int, status: str = STATUS_CANCELLED) -> bool:
+        """Cancel a request wherever it is in the pipeline: drop it from
+        the admission queue, abandon its in-flight prefill, or evict its
+        decode slot (the slot frees this tick — the pool decode simply
+        stops computing it; no rollback needed since the row is dead).
+        Already-emitted tokens stay drainable via ``pop_output``. Returns
+        False for unknown/terminal uids."""
+        req = self.requests.get(uid)
+        if req is None or req.done:
+            return False
+        if req in self.queue:
+            self.queue.remove(req)
+        for job in list(self.prefill_fifo):
+            if job.req is req:
+                self.prefill_fifo.remove(job)
+                self._release_slot(job.slot)
+        if req.slot >= 0 and self.active.get(req.slot) is req:
+            del self.active[req.slot]
+            self._release_slot(req.slot, scrub=self.cfg.integrity_every > 0)
+        self._finish(req, status)
+        if status == STATUS_CANCELLED:
+            self._cancelled += 1
+        return True
+
+    def _finish(self, req: Request, status: str) -> None:
+        req.done = True
+        req.status = status
+        req.slot = -1
+        req.finished_t = time.time()
+        self.finished.append(req)
+
+    def _release_slot(self, slot: int, scrub: bool = False) -> None:
+        self.slot_len[slot] = 0
+        self.free_slots.append(slot)
+        if scrub:
+            self._scrub_slot(slot)
+
+    def _deadline_sweep(self) -> None:
+        """Cancel every in-flight request whose tick or wall deadline has
+        passed (status "deadline_miss")."""
+        live = list(self.queue) + [j.req for j in self.prefill_fifo] \
+            + list(self.active.values())
+        now = None
+        for req in live:
+            over = (req.deadline_tick is not None
+                    and self._tick >= req.deadline_tick)
+            if not over and req.deadline_t is not None:
+                now = time.time() if now is None else now
+                over = now >= req.deadline_t
+            if over:
+                self.cancel(req.uid, status=STATUS_DEADLINE)
+                self._deadline_miss += 1
 
     def pop_output(self, uid: int) -> list[int]:
         """Drain a request's output FIFO (the consumer side of the per-slot
@@ -289,6 +426,7 @@ class Engine:
             req = self.queue.popleft()
             slot = self.free_slots.pop()
             req.slot = slot
+            req.status = STATUS_PREFILL
             if chunked:
                 self._admit_chunked(req, slot)
             else:
@@ -345,15 +483,26 @@ class Engine:
         self._activate(req, job.slot, job.last_logits)
         return True
 
+    def _emit(self, req: Request, tok: int) -> None:
+        """Record one sampled token. The FIFO only receives tokens PAST
+        ``req.pushed`` — a quarantine replay regenerates the stream from
+        scratch (greedy decode is deterministic) without re-delivering."""
+        req.out.append(tok)
+        self._tokens_emitted += 1
+        if len(req.out) > req.pushed:
+            req.fifo.append(tok)
+            req.pushed = len(req.out)
+            self._out_fifo_hwm = max(self._out_fifo_hwm, len(req.fifo))
+
     def _activate(self, req: Request, slot: int, last_logits: Array) -> None:
         """Prefill finished: slot goes live with the first sampled token."""
         self.slot_len[slot] = len(req.prompt)  # only the REAL prompt is valid
         tok = self._sample(last_logits, req)
-        req.out.append(int(tok))
-        req.fifo.append(int(tok))
-        req.first_token_t = time.time()
-        req.first_token_tick = self._tick
-        self._out_fifo_hwm = max(self._out_fifo_hwm, len(req.fifo))
+        self._emit(req, int(tok))
+        if req.first_token_tick < 0:    # a replay keeps the original TTFT
+            req.first_token_t = time.time()
+            req.first_token_tick = self._tick
+        req.status = STATUS_DECODE
         self.active[slot] = req
 
     # ---------------------------------------------------------- cache moves
@@ -396,6 +545,153 @@ class Engine:
         self.cache["layers"] = jax.tree_util.tree_map_with_path(
             restore, self.cache["layers"], prev_layers)
 
+    def _scrub_slot(self, slot: int) -> None:
+        """Zero one slot's rows in every cache pool — quarantine hygiene:
+        a poisoned row must not survive into the slot's next occupant
+        (prefill only overwrites the prompt's own positions)."""
+
+        def scrub(path, pool):
+            ps = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                          for k in path)
+            nd = pool.ndim
+            idx = [slice(None)] * nd
+            idx[nd - 3 if "conv" in ps else nd - 4] = slice(slot, slot + 1)
+            idx = tuple(idx)
+            return pool.at[idx].set(jnp.zeros_like(pool[idx]))
+
+        self.cache["layers"] = jax.tree_util.tree_map_with_path(
+            scrub, self.cache["layers"])
+
+    # ------------------------------------------------------ fault injection
+    def _resolve_fault_slot(self, slot: int) -> Optional[int]:
+        if slot >= 0:
+            return slot if slot in self.active else None
+        return min(self.active) if self.active else None
+
+    def _inject_faults(self, logits: Array) -> Array:
+        """Apply this tick's due state/logit faults (post-decode, pre-guard
+        — the guard must see the corruption the same tick it lands)."""
+        for ev in self.faults.due(
+                ("nan_logits", "nan_state", "corrupt_word"), self._tick):
+            slot = self._resolve_fault_slot(ev.slot)
+            if slot is None:            # no live slot yet: fire next tick
+                self.faults.defer(ev)
+                continue
+            if ev.kind == "corrupt_word" and self._corrupt_words(slot):
+                continue
+            if ev.kind == "nan_state" and self._corrupt_state(slot, ev.value):
+                continue
+            # nan_logits — and the fallback when a family has no float or
+            # packed per-slot state to corrupt (e.g. qk_spiking is
+            # stateless under a dense policy)
+            logits = logits.at[slot].set(
+                jnp.asarray(ev.value, logits.dtype))
+        return logits
+
+    def _corrupt_words(self, slot: int) -> bool:
+        """Flip one packed spike-state word of a slot to all-ones (pad
+        lanes included — guaranteed to violate the pad-lane invariant).
+        False if the cache holds no packed word pool."""
+        leaves, treedef = jax.tree_util.tree_flatten(self.cache["layers"])
+        for i, leaf in enumerate(leaves):
+            if leaf.dtype == jnp.int32 and leaf.ndim == 5 and leaf.size:
+                idx = [0] * leaf.ndim
+                idx[leaf.ndim - 4] = slot
+                idx[-1] = leaf.shape[-1] - 1
+                leaves[i] = leaf.at[tuple(idx)].set(jnp.int32(-1))
+                self.cache["layers"] = jax.tree_util.tree_unflatten(
+                    treedef, leaves)
+                return True
+        return False
+
+    def _corrupt_state(self, slot: int, value: float) -> bool:
+        """Poison one element of a slot's float state row (membrane / KV /
+        SSM). False if the model keeps no float per-slot state."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
+            self.cache["layers"])
+        leaves = [leaf for _, leaf in flat]
+        for i, (path, leaf) in enumerate(flat):
+            if not (jnp.issubdtype(leaf.dtype, jnp.floating) and leaf.size):
+                continue
+            ps = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                          for k in path)
+            ax = leaf.ndim - (3 if "conv" in ps else 4)
+            if ax < 0 or leaf.shape[ax] != self.cfg.max_slots:
+                continue
+            idx = [0] * leaf.ndim
+            idx[ax] = slot
+            leaves[i] = leaf.at[tuple(idx)].set(
+                jnp.asarray(value, leaf.dtype))
+            self.cache["layers"] = jax.tree_util.tree_unflatten(
+                treedef, leaves)
+            return True
+        return False
+
+    # ------------------------------------------------------ integrity guard
+    def _integrity_verdict(self, logits: Array) -> tuple:
+        """One jitted scan over (slot-pool cache, decode logits): per-slot
+        ``(numeric_bad, packed_bad)`` bool vectors. Numeric = any non-finite
+        in the slot's logits or float state rows; packed = any set bit in a
+        packed word pool's PAD lanes (columns >= n_heads*head_dim — always
+        zero for well-formed packed spike state)."""
+        if self._guard_fn is None:
+            nslots = self.cfg.max_slots
+            try:
+                d_logical = (self.model.cfg.n_heads *
+                             self.model.cfg.resolved_head_dim)
+            except AttributeError:
+                d_logical = 0
+
+            def scan(layers, lg):
+                bad_num = ~jnp.isfinite(lg.astype(jnp.float32)) \
+                    .reshape(nslots, -1).all(axis=1)
+                bad_pack = jnp.zeros((nslots,), bool)
+                flat = jax.tree_util.tree_flatten_with_path(layers)[0]
+                for path, leaf in flat:
+                    if not leaf.size:
+                        continue
+                    ps = "/".join(str(getattr(k, "key",
+                                              getattr(k, "idx", k)))
+                                  for k in path)
+                    ax = leaf.ndim - (3 if "conv" in ps else 4)
+                    if ax < 0 or leaf.shape[ax] != nslots:
+                        continue
+                    if jnp.issubdtype(leaf.dtype, jnp.floating):
+                        fin = jnp.isfinite(leaf.astype(jnp.float32))
+                        bad_num |= ~jnp.moveaxis(fin, ax, 0) \
+                            .reshape(nslots, -1).all(axis=1)
+                    elif leaf.dtype == jnp.int32 and leaf.ndim == 5 \
+                            and d_logical > 0:
+                        mask = jnp.asarray(pad_lane_mask(
+                            d_logical, leaf.shape[-1]))
+                        viol = (leaf & mask) != 0
+                        bad_pack |= jnp.moveaxis(viol, ax, 0) \
+                            .reshape(nslots, -1).any(axis=1)
+                return bad_num, bad_pack
+
+            self._guard_fn = jax.jit(scan)
+        return self._guard_fn(self.cache["layers"], logits)
+
+    def _quarantine(self, slot: int, reason: str) -> None:
+        """Evict a slot whose state failed the integrity guard: scrub the
+        poisoned row, free the slot, and requeue the request from scratch
+        (front of the queue; greedy replay regenerates the identical
+        stream, ``pushed`` suppresses re-delivery). Past the retry budget
+        the request fails loudly instead."""
+        req = self.active.pop(slot)
+        self._release_slot(slot, scrub=True)
+        self._quarantined += 1
+        req.retries += 1
+        if req.retries > self.cfg.quarantine_retries:
+            self._finish(req, STATUS_FAILED)
+            self._failed += 1
+            return
+        req.out = []
+        req.slot = -1
+        req.status = STATUS_QUEUED
+        self.queue.appendleft(req)
+        self._requeues += 1
+
     def _sample(self, logits: Array, req: Request) -> int:
         if req.temperature <= 0.0:
             return int(jnp.argmax(logits))
@@ -404,15 +700,32 @@ class Engine:
 
     # ------------------------------------------------------------------ tick
     def _stalled_slots(self) -> set:
-        if not self.cfg.out_fifo_depth:
-            return set()
-        return {slot for slot, req in self.active.items()
-                if len(req.fifo) >= self.cfg.out_fifo_depth}
+        stalled = set()
+        if self.faults is not None:
+            for ev in self.faults.due("stall_consumer", self._tick):
+                slot = self._resolve_fault_slot(ev.slot)
+                if slot is None:
+                    self.faults.defer(ev)
+                    continue
+                self._forced_stalls[slot] = self._tick + max(ev.ticks, 1)
+        if self._forced_stalls:
+            self._forced_stalls = {
+                s: until for s, until in self._forced_stalls.items()
+                if self._tick < until and s in self.active}
+            stalled |= set(self._forced_stalls)
+        if self.cfg.out_fifo_depth:
+            stalled |= {slot for slot, req in self.active.items()
+                        if len(req.fifo) >= self.cfg.out_fifo_depth}
+        return stalled
 
     def step(self) -> int:
         """One engine tick: admit, drain up to ``prefill_chunks_per_tick``
         chunks from the prefill FIFO, then one pool decode for all live,
         un-stalled slots. Returns number of live sequences."""
+        if self.faults is not None and self.faults.die_due(self._tick):
+            raise ReplicaFailure(
+                f"injected replica death at tick {self._tick}")
+        self._deadline_sweep()
         self._admit()
         if self.cfg.prefill_chunk > 0:
             budget = max(1, self.cfg.prefill_chunks_per_tick)
@@ -438,6 +751,20 @@ class Engine:
                                           self.cache)
         logits = jax.block_until_ready(logits)
         self._tick_wall.append(time.perf_counter() - t0)
+        if self.faults is not None:
+            # injected corruption lands AFTER the decode, BEFORE the guard
+            # — the guard must catch it before a token is sampled from it
+            logits = self._inject_faults(logits)
+        bad = set()
+        if self.cfg.integrity_every > 0 \
+                and self._tick % self.cfg.integrity_every == 0:
+            self._guard_scans += 1
+            bad_num, bad_pack = self._integrity_verdict(logits)
+            bad_num, bad_pack = np.asarray(bad_num), np.asarray(bad_pack)
+            bad = {s for s in self.active
+                   if bad_num[s] or bad_pack[s]}
+            reasons = {s: ("packed_invariant" if bad_pack[s]
+                           else "non_finite") for s in bad}
         if self._track_spikes and self._tick % self.cfg.spike_stats_every == 0:
             self._record_spike_step(sorted(self.active.keys()))
         if stalled:
@@ -448,21 +775,20 @@ class Engine:
                 # FIFO drains; temperature sampling is only reproducible up
                 # to the shared RNG stream's consumption order
                 self._restore_slot(slot, prev_layers)
+        for slot in sorted(bad):
+            # quarantine BEFORE sampling: no token leaves a poisoned slot
+            self._quarantine(slot, reasons[slot])
         done_slots = []
         for slot, req in list(self.active.items()):
             if slot in stalled:
                 continue
             tok = self._sample(logits[slot], req)
-            req.out.append(tok)
-            req.fifo.append(tok)
-            self._out_fifo_hwm = max(self._out_fifo_hwm, len(req.fifo))
+            self._emit(req, tok)
             self.slot_len[slot] += 1
             hit_eos = req.eos_id is not None and tok == req.eos_id
             if hit_eos or len(req.out) >= req.max_new \
                     or self.slot_len[slot] >= self.cfg.max_len - 1:
-                req.done = True
-                req.finished_t = time.time()
-                self.finished.append(req)
+                self._finish(req, STATUS_DONE)
                 done_slots.append(slot)
         for slot in done_slots:
             del self.active[slot]
@@ -476,12 +802,55 @@ class Engine:
         use this instead of peeking at individual FIFOs."""
         return bool(self.active or self.queue or self.prefill_fifo)
 
-    def run_until_drained(self, max_ticks: int = 10_000) -> list[Request]:
+    def _progress_signature(self) -> tuple:
+        """Changes iff the pipeline made observable progress this tick."""
+        return (self._tokens_emitted, self._prefill_chunks,
+                len(self.finished), len(self.queue),
+                len(self.prefill_fifo))
+
+    def _stall_report(self) -> dict:
+        return {
+            "tick": self._tick,
+            "queued": len(self.queue),
+            "prefilling": [j.req.uid for j in self.prefill_fifo],
+            "stuck_slots": {
+                slot: {"uid": req.uid, "out_fifo": len(req.fifo),
+                       "tokens": len(req.out), "status": req.status}
+                for slot, req in sorted(self.active.items())},
+            "free_slots": len(self.free_slots),
+        }
+
+    def run_until_drained(self, max_ticks: int = 10_000,
+                          stall_grace: int = 200) -> list[Request]:
+        """Tick until every request reaches a terminal state. Raises
+        ``StalledEngine`` when work is pending but NO stage has progressed
+        for ``stall_grace`` consecutive ticks (livelock — e.g. every live
+        slot stalled on an output FIFO nobody drains), or when
+        ``max_ticks`` runs out with work still pending; the silent-return
+        of either case would hand the caller a partial result."""
+        last, idle = None, 0
         for _ in range(max_ticks):
             self.step()
             if not self.pending():
-                break
-        return self.finished
+                return self.finished
+            sig = self._progress_signature()
+            if sig == last:
+                idle += 1
+                if idle >= stall_grace:
+                    rep = self._stall_report()
+                    raise StalledEngine(
+                        f"no progress for {idle} ticks with work pending: "
+                        f"stuck slots {sorted(rep['stuck_slots'])}, "
+                        f"{rep['queued']} queued, "
+                        f"{len(rep['prefilling'])} prefilling "
+                        f"(are the output FIFOs being drained?)", rep)
+            else:
+                last, idle = sig, 0
+        rep = self._stall_report()
+        raise StalledEngine(
+            f"max_ticks={max_ticks} exhausted with work still pending: "
+            f"stuck slots {sorted(rep['stuck_slots'])}, "
+            f"{rep['queued']} queued", rep)
 
     def _record_spike_step(self, live_slots: list) -> None:
         """Measure one decode tick's spike activity straight off the PACKED
@@ -539,20 +908,33 @@ class Engine:
     def stats(self) -> dict:
         if not self.finished:
             return {}
-        ttft = [r.first_token_t - r.enqueued_t for r in self.finished]
-        lat = [r.finished_t - r.enqueued_t for r in self.finished]
-        toks = sum(len(r.out) for r in self.finished)
-        span = max(r.finished_t for r in self.finished) - \
-            min(r.enqueued_t for r in self.finished)
-        out = {"n": len(self.finished),
-               "ttft_mean_s": float(np.mean(ttft)),
-               "latency_mean_s": float(np.mean(lat)),
+        # timing/token aggregates cover the SUCCESSFUL completions only —
+        # a cancelled request may never have produced a first token
+        done = [r for r in self.finished if r.status == STATUS_DONE]
+        ttft = [r.first_token_t - r.enqueued_t for r in done]
+        lat = [r.finished_t - r.enqueued_t for r in done]
+        toks = sum(len(r.out) for r in done)
+        span = (max(r.finished_t for r in done)
+                - min(r.enqueued_t for r in done)) if done else 0.0
+        out = {"n": len(done),
+               "n_terminal": len(self.finished),
+               "ttft_mean_s": float(np.mean(ttft)) if ttft else 0.0,
+               "latency_mean_s": float(np.mean(lat)) if lat else 0.0,
                "tokens": toks,
                "tok_per_s": toks / max(span, 1e-9),
                "queue_depth": len(self.queue),
                "active": len(self.active),
                "policy": self.policy.name,
                "spike_format": self.policy.format,
+               # self-healing counters (tentpole: these are the fault
+               # ledger callers alarm on)
+               "ticks": self._tick,
+               "cancelled": self._cancelled,
+               "deadline_miss": self._deadline_miss,
+               "quarantined": self._quarantined,
+               "requeues": self._requeues,
+               "failed": self._failed,
+               "guard_scans": self._guard_scans,
                # elastic-FIFO telemetry: the software analogue of the
                # paper's FIFO-depth elasticity measurements
                "prefill_mode": ("chunked" if self.cfg.prefill_chunk > 0
@@ -587,6 +969,11 @@ class Engine:
         # the autotuner's live state: the observed-sparsity EWMA feeding
         # "auto" plans for traced operands, and every plan resolved so far
         from ..ops.autotune import get_tuner
+        from ..ops import fallback
 
         out["autotune"] = get_tuner().snapshot()
+        # fused->reference demotions (process-global; see ops.fallback)
+        out["kernel_demotions"] = fallback.demotions()
+        if self.faults is not None:
+            out["fault_plan"] = self.faults.summary()
         return out

@@ -1,0 +1,197 @@
+"""Deterministic fault injection for the elastic-FIFO serving stack.
+
+A ``FaultPlan`` is a seeded, replayable script of failures the serving
+stack must survive — the software analogue of a chaos harness wired
+directly into the engine's tick loop so every run of the same plan against
+the same trace produces the SAME failure sequence (and therefore the same
+recovery path, testable bit-for-bit):
+
+  * ``nan_state(tick, slot)``   — write NaN/Inf into a live slot's cached
+    membrane/KV state row (falls back to poisoning that slot's decode
+    logits for families whose per-slot state is empty or integer-packed,
+    e.g. qk_spiking);
+  * ``nan_logits(tick, slot)``  — poison one slot's decode logits;
+  * ``corrupt_word(tick, slot)``— flip a packed spike-state word to all
+    ones, violating the pad-lane invariant the integrity guard checks;
+  * ``kill_replica(tick)``      — the engine raises ``ReplicaFailure`` at
+    the top of tick N (the router's failover machinery takes over);
+  * ``stall_consumer(tick, slot, ticks)`` — freeze one slot's output
+    consumer for a window, exercising the per-slot FIFO stall path;
+  * ``fail_kernel(op, at_call)``— arm ``repro.ops.fallback`` so a chosen
+    fused-kernel call raises, exercising fused->reference demotion.
+
+Builders chain (each returns the plan). Tick-indexed events fire at the
+first engine tick >= their tick; slot ``-1`` resolves to the lowest live
+slot at fire time (events wait for a live slot). In a multi-replica
+deployment, ``plan.view(r)`` slices the per-replica events for engine
+``r`` — kernel faults are process-global (the ops registry is) and are
+armed once by whoever owns the plan (Engine or ReplicaRouter).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+class ReplicaFailure(RuntimeError):
+    """A replica died mid-tick (injected, or a real engine-step crash
+    re-raised as one). The ``ReplicaRouter`` catches this, marks the
+    replica dead, and requeues its in-flight work."""
+
+
+# late import path for the kernel-fault arm (keeps this module import-light)
+def _ops_fallback():
+    from ..ops import fallback
+
+    return fallback
+
+
+KINDS = ("nan_state", "nan_logits", "corrupt_word", "die",
+         "stall_consumer", "kernel_fault")
+
+
+@dataclasses.dataclass
+class FaultEvent:
+    kind: str
+    tick: int = 0
+    slot: int = -1          # -1 = lowest live slot when the event fires
+    replica: int = 0
+    value: float = float("nan")
+    op: str = "*"           # kernel_fault: target op ("*" = any fused op)
+    at_call: int = 0        # kernel_fault: which guarded call raises
+    ticks: int = 1          # stall_consumer: stall window length
+    fired: bool = False
+
+    def describe(self) -> dict:
+        d = {"kind": self.kind, "tick": self.tick, "replica": self.replica,
+             "fired": self.fired}
+        if self.kind in ("nan_state", "nan_logits", "corrupt_word",
+                         "stall_consumer"):
+            d["slot"] = self.slot
+        if self.kind == "stall_consumer":
+            d["ticks"] = self.ticks
+        if self.kind == "kernel_fault":
+            d.update(op=self.op, at_call=self.at_call)
+        return d
+
+
+class FaultPlan:
+    """A seeded, ordered script of ``FaultEvent``s (see module docstring).
+    The seed is recorded for provenance and reserved for randomized plan
+    generators; the built-in events are fully deterministic."""
+
+    def __init__(self, seed: int = 0):
+        self.seed = int(seed)
+        self.events: list[FaultEvent] = []
+        self.rng = np.random.default_rng(self.seed)
+
+    # ------------------------------------------------------------- builders
+    def nan_state(self, tick: int, slot: int = -1, replica: int = 0,
+                  value: float = float("nan")) -> "FaultPlan":
+        self.events.append(FaultEvent("nan_state", tick=tick, slot=slot,
+                                      replica=replica, value=value))
+        return self
+
+    def nan_logits(self, tick: int, slot: int = -1, replica: int = 0,
+                   value: float = float("nan")) -> "FaultPlan":
+        self.events.append(FaultEvent("nan_logits", tick=tick, slot=slot,
+                                      replica=replica, value=value))
+        return self
+
+    def corrupt_word(self, tick: int, slot: int = -1,
+                     replica: int = 0) -> "FaultPlan":
+        self.events.append(FaultEvent("corrupt_word", tick=tick, slot=slot,
+                                      replica=replica))
+        return self
+
+    def kill_replica(self, tick: int, replica: int = 0) -> "FaultPlan":
+        self.events.append(FaultEvent("die", tick=tick, replica=replica))
+        return self
+
+    def stall_consumer(self, tick: int, slot: int = -1, ticks: int = 4,
+                       replica: int = 0) -> "FaultPlan":
+        self.events.append(FaultEvent("stall_consumer", tick=tick,
+                                      slot=slot, ticks=ticks,
+                                      replica=replica))
+        return self
+
+    def fail_kernel(self, op: str = "*", at_call: int = 0) -> "FaultPlan":
+        self.events.append(FaultEvent("kernel_fault", op=op,
+                                      at_call=at_call))
+        return self
+
+    # ------------------------------------------------------------ consumers
+    def view(self, replica: int) -> "FaultPlan":
+        """Per-replica slice for engine ``replica``: SHARES the event
+        objects (fired flags propagate) but excludes kernel faults, which
+        are process-global and armed by the plan's owner."""
+        sub = FaultPlan(self.seed)
+        sub.events = [ev for ev in self.events
+                      if ev.replica == replica and ev.kind != "kernel_fault"]
+        return sub
+
+    def due(self, kinds, tick: int) -> list[FaultEvent]:
+        """Pop (mark fired) every unfired event of the given kind(s) whose
+        tick has arrived. A consumer that cannot apply an event yet (e.g.
+        no live slot) calls ``defer(ev)`` to re-arm it for the next tick."""
+        if isinstance(kinds, str):
+            kinds = (kinds,)
+        out = []
+        for ev in self.events:
+            if not ev.fired and ev.kind in kinds and ev.tick <= tick:
+                ev.fired = True
+                out.append(ev)
+        return out
+
+    @staticmethod
+    def defer(ev: FaultEvent) -> None:
+        ev.fired = False
+
+    def die_due(self, tick: int) -> Optional[FaultEvent]:
+        hits = self.due("die", tick)
+        return hits[0] if hits else None
+
+    def arm_kernel_faults(self) -> int:
+        """Arm every kernel_fault event with ``repro.ops.fallback``
+        (idempotent: each event arms once). Returns how many were armed."""
+        n = 0
+        for ev in self.events:
+            if ev.kind == "kernel_fault" and not ev.fired:
+                ev.fired = True
+                _ops_fallback().arm_kernel_fault(ev.op, ev.at_call)
+                n += 1
+        return n
+
+    # ------------------------------------------------------------ reporting
+    def summary(self) -> dict:
+        return {
+            "seed": self.seed,
+            "events": [ev.describe() for ev in self.events],
+            "fired": sum(ev.fired for ev in self.events),
+            "pending": sum(not ev.fired for ev in self.events),
+        }
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __repr__(self) -> str:
+        return (f"FaultPlan(seed={self.seed}, events={len(self.events)}, "
+                f"fired={sum(ev.fired for ev in self.events)})")
+
+
+def demo_chaos_plan(seed: int = 0, *, n_replicas: int = 1,
+                    kill_tick: int = 12, nan_ticks=(6, 9),
+                    kernel_op: str = "dense_lif",
+                    kernel_call: int = 0) -> FaultPlan:
+    """The canned chaos scenario the benchmarks / examples / CI share:
+    kill the last replica mid-trace (multi-replica only), two NaN
+    injections on replica 0, and one forced fused-kernel failure."""
+    plan = FaultPlan(seed)
+    for t in nan_ticks:
+        plan.nan_state(t, replica=0)
+    if n_replicas > 1:
+        plan.kill_replica(kill_tick, replica=n_replicas - 1)
+    plan.fail_kernel(kernel_op, at_call=kernel_call)
+    return plan

@@ -18,11 +18,22 @@ import json
 import shutil
 import threading
 import time
+import warnings
+import zlib
 from pathlib import Path
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint shard failed integrity verification (shape / dtype /
+    CRC32 vs the manifest). The message names the bad leaf."""
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
 
 
 def _flatten(tree: Any):
@@ -48,6 +59,9 @@ def save_checkpoint(ckpt_dir: str | Path, step: int, tree: Any,
         "paths": paths,
         "shapes": [list(h.shape) for h in host],
         "dtypes": [str(h.dtype) for h in host],
+        # per-leaf CRC32 of the raw array bytes: restore verifies each
+        # shard against this before handing the state back
+        "crc32": [_crc(h) for h in host],
         "metadata": metadata or {},
         "time": time.time(),
     }
@@ -64,6 +78,17 @@ def latest_checkpoint(ckpt_dir: str | Path) -> Optional[Path]:
     ckpt_dir = Path(ckpt_dir)
     if not ckpt_dir.exists():
         return None
+    stale = sorted(p.name for p in ckpt_dir.iterdir()
+                   if p.is_dir() and p.name.startswith(".tmp_step_"))
+    if stale:
+        # a .tmp dir means a writer died mid-save (AsyncCheckpointer
+        # crash / SIGKILL): its contents are partial and must never be
+        # restored. The atomic-rename publish protocol already keeps them
+        # un-selectable; warn so operators clean them up.
+        warnings.warn(
+            f"{ckpt_dir}: skipping {len(stale)} leftover partial "
+            f"checkpoint dir(s) from a crashed save: {stale}",
+            RuntimeWarning, stacklevel=2)
     steps = sorted(p for p in ckpt_dir.iterdir()
                    if p.is_dir() and p.name.startswith("step_"))
     return steps[-1] if steps else None
@@ -72,17 +97,41 @@ def latest_checkpoint(ckpt_dir: str | Path) -> Optional[Path]:
 def restore_checkpoint(path: str | Path, like: Any,
                        shardings: Optional[Any] = None) -> tuple[Any, int]:
     """Restore into the structure of ``like``; ``shardings`` (same tree)
-    places each leaf — pass shardings built on the NEW mesh to reshard."""
+    places each leaf — pass shardings built on the NEW mesh to reshard.
+
+    Every shard is verified against the manifest (shape, dtype, and — for
+    checkpoints written since CRC support — CRC32 of the raw bytes);
+    a mismatch raises ``CheckpointCorrupt`` naming the bad leaf instead of
+    silently restoring garbage into the training state."""
     path = Path(path)
     manifest = json.loads((path / "manifest.json").read_text())
     leaves, paths, treedef = _flatten(like)
     assert len(leaves) == len(manifest["paths"]), \
         f"tree mismatch: {len(leaves)} leaves vs {len(manifest['paths'])}"
+    crcs = manifest.get("crc32") or [None] * len(leaves)
     shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
                     if shardings is not None else [None] * len(leaves))
     out = []
     for i, (leaf, sh) in enumerate(zip(leaves, shard_leaves)):
+        name = manifest["paths"][i]
         arr = np.load(path / f"{i:04d}.npy")
+        if list(arr.shape) != list(manifest["shapes"][i]):
+            raise CheckpointCorrupt(
+                f"{path}/{i:04d}.npy (leaf {name!r}): shard shape "
+                f"{list(arr.shape)} != manifest {manifest['shapes'][i]}")
+        if str(arr.dtype) != manifest["dtypes"][i]:
+            raise CheckpointCorrupt(
+                f"{path}/{i:04d}.npy (leaf {name!r}): shard dtype "
+                f"{arr.dtype} != manifest {manifest['dtypes'][i]}")
+        if crcs[i] is not None and _crc(arr) != crcs[i]:
+            raise CheckpointCorrupt(
+                f"{path}/{i:04d}.npy (leaf {name!r}): CRC32 mismatch — "
+                f"shard bytes corrupted on disk")
+        if hasattr(leaf, "shape") and list(arr.shape) != list(leaf.shape):
+            raise CheckpointCorrupt(
+                f"{path}/{i:04d}.npy (leaf {name!r}): checkpoint shape "
+                f"{list(arr.shape)} != restore-target shape "
+                f"{list(leaf.shape)}")
         arr = arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr
         out.append(jax.device_put(arr, sh) if sh is not None
                    else jax.device_put(arr))

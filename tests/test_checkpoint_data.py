@@ -53,6 +53,93 @@ def test_restore_mismatch_raises(tmp_path):
         restore_checkpoint(latest_checkpoint(tmp_path), bad_like)
 
 
+# ------------------------------------------------------- shard integrity
+def _like(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def test_manifest_carries_per_leaf_crc32(tmp_path):
+    import json
+    import zlib
+
+    path = save_checkpoint(tmp_path, 2, _tree())
+    manifest = json.loads((path / "manifest.json").read_text())
+    n = len(manifest["paths"])
+    assert len(manifest["crc32"]) == n
+    for i in range(n):
+        arr = np.load(path / f"{i:04d}.npy")
+        assert manifest["crc32"][i] == \
+            (zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF)
+
+
+def test_corrupted_shard_raises_naming_leaf(tmp_path):
+    from repro.train.checkpoint import CheckpointCorrupt
+
+    tree = _tree()
+    path = save_checkpoint(tmp_path, 3, tree)
+    # flip bytes INSIDE shard 0 (same shape/dtype, different contents):
+    # only the CRC can catch this class of corruption
+    arr = np.load(path / "0000.npy")
+    arr = arr + 1
+    np.save(path / "0000.npy", arr)
+    with pytest.raises(CheckpointCorrupt, match=r"CRC32.*|.*CRC32") as ei:
+        restore_checkpoint(path, _like(tree))
+    assert "0000.npy" in str(ei.value)      # names the bad shard + leaf
+    assert "'a'" in str(ei.value) or "a" in str(ei.value)
+
+
+def test_wrong_shape_shard_raises(tmp_path):
+    from repro.train.checkpoint import CheckpointCorrupt
+
+    tree = _tree()
+    path = save_checkpoint(tmp_path, 4, tree)
+    np.save(path / "0001.npy", np.zeros((9, 9), np.float32))
+    with pytest.raises(CheckpointCorrupt, match="shape"):
+        restore_checkpoint(path, _like(tree))
+
+
+def test_wrong_dtype_shard_raises(tmp_path):
+    from repro.train.checkpoint import CheckpointCorrupt
+
+    tree = _tree()
+    path = save_checkpoint(tmp_path, 5, tree)
+    i = [jax.tree_util.keystr(p) for p, _ in
+         jax.tree_util.tree_flatten_with_path(tree)[0]]
+    # rewrite shard 0 with the right shape but a different dtype
+    arr = np.load(path / "0000.npy")
+    np.save(path / "0000.npy", arr.astype(np.float16))
+    with pytest.raises(CheckpointCorrupt, match="dtype"):
+        restore_checkpoint(path, _like(tree))
+
+
+def test_crc_less_manifest_still_restores(tmp_path):
+    """Checkpoints written before CRC support carry no ``crc32`` key:
+    restore must stay backward-compatible (shape/dtype checks only)."""
+    import json
+
+    tree = _tree()
+    path = save_checkpoint(tmp_path, 6, tree)
+    manifest = json.loads((path / "manifest.json").read_text())
+    del manifest["crc32"]
+    (path / "manifest.json").write_text(json.dumps(manifest))
+    restored, step = restore_checkpoint(path, _like(tree))
+    assert step == 6
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_checkpoint_warns_and_skips_partial_dirs(tmp_path):
+    """A ``.tmp_step_*`` dir is a writer that died mid-save: it must never
+    be selected, and the operator hears about it."""
+    save_checkpoint(tmp_path, 7, _tree())
+    (tmp_path / ".tmp_step_00000009").mkdir()
+    with pytest.warns(RuntimeWarning, match="partial"):
+        latest = latest_checkpoint(tmp_path)
+    assert latest.name == "step_00000007"
+
+
 # --------------------------------------------------------------------- data
 def test_token_data_deterministic_and_shard_distinct():
     ds = SyntheticTokenDataset(vocab_size=128, seq_len=16, seed=3)

@@ -1,0 +1,444 @@
+"""Self-healing serving: deterministic fault injection end to end.
+
+The decisive invariants (fixed FaultPlan seeds — every run replays the
+same failure script):
+
+  * under the seeded chaos trace (replica killed mid-trace + NaN
+    injections + a forced fused-kernel failure) the router completes every
+    non-cancelled request EXACTLY ONCE with outputs BIT-IDENTICAL to a
+    fault-free run of the same requests;
+  * the integrity guard quarantines a poisoned slot (NaN state / corrupted
+    packed word) instead of crashing, and the quarantine replay is
+    bit-identical with at-most-once FIFO delivery;
+  * a fused-kernel raise demotes that (op, mode) to the reference
+    implementation (recorded in stats/autotuner) and serving continues;
+  * deadlines and cancel() reclaim slots and surface through Request
+    status + stats counters;
+  * run_until_drained raises StalledEngine on livelock instead of
+    silently returning partial work.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.events import check_packed_invariants, pad_lane_mask
+from repro.ops import fallback
+from repro.serve import (AllReplicasDead, Engine, EngineConfig, FaultPlan,
+                         ReplicaFailure, ReplicaRouter, StalledEngine,
+                         clear_jit_cache, demo_chaos_plan)
+
+ARCH = "qwen3-1.7b"
+SPIKING = dict(attention_kind="qk_spiking", spiking=True)
+SEED = 7
+
+
+@pytest.fixture(autouse=True)
+def _fault_hygiene():
+    """Demotions and armed kernel faults are process-global and sticky;
+    compiled engine steps bake the demoted graph in. Reset both after any
+    test that used them so later suites see pristine fused kernels."""
+    yield
+    if fallback.demotions() or fallback.armed_kernel_faults():
+        fallback.reset()
+        clear_jit_cache()
+
+
+def _prompts(n=4, lens=(3, 10), seed=0, vocab=512):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, vocab, int(rng.integers(*lens)))
+            for _ in range(n)]
+
+
+def _engine(lm_zoo, faults=None, spiking=True, **cfg_kw):
+    cfg, model, params = lm_zoo(ARCH, **(SPIKING if spiking else {}))
+    kw = dict(max_slots=2, max_len=64, prefill_pad=8)
+    if spiking:
+        kw["policy"] = "fused_packed"
+    kw.update(cfg_kw)
+    return cfg, Engine(model, params, EngineConfig(**kw), faults=faults)
+
+
+def _drain(eng, prompts, max_new=6):
+    uids = [eng.submit(p, max_new=max_new) for p in prompts]
+    fin = {r.uid: r for r in eng.run_until_drained()}
+    return uids, fin
+
+
+# ================================================================ FaultPlan
+def test_fault_plan_builders_and_determinism():
+    plan = (FaultPlan(SEED).nan_state(3).corrupt_word(5, slot=1)
+            .kill_replica(8, replica=1).stall_consumer(2, ticks=4)
+            .fail_kernel("dense_lif", at_call=2))
+    assert len(plan) == 5
+    s = plan.summary()
+    assert s["seed"] == SEED and s["pending"] == 5 and s["fired"] == 0
+    # events fire once at the first tick >= their tick, and defer re-arms
+    assert [e.kind for e in plan.due(("nan_state", "corrupt_word"), 4)] \
+        == ["nan_state"]
+    assert plan.due("nan_state", 10) == []          # already fired
+    (ev,) = plan.due("corrupt_word", 6)
+    plan.defer(ev)
+    assert [e.kind for e in plan.due("corrupt_word", 6)] == ["corrupt_word"]
+    assert plan.die_due(7) is None and plan.die_due(8).replica == 1
+
+
+def test_fault_plan_view_slices_by_replica_and_shares_events():
+    plan = (FaultPlan(0).nan_state(2, replica=0).kill_replica(4, replica=1)
+            .fail_kernel())
+    v0, v1 = plan.view(0), plan.view(1)
+    assert [e.kind for e in v0.events] == ["nan_state"]
+    assert [e.kind for e in v1.events] == ["die"]    # kernel faults excluded
+    v1.die_due(4)
+    assert plan.events[1].fired                     # shared event objects
+
+
+# ===================================================== packed-word invariants
+def test_pad_lane_mask_marks_exactly_the_pad_columns():
+    mask = pad_lane_mask(40, 3).view(np.uint32)
+    assert mask[0] == 0                              # cols 0..31 all valid
+    assert mask[1] == 0xFFFFFF00                     # cols 32..39 valid
+    assert mask[2] == 0xFFFFFFFF                     # cols 64..95 all pad
+
+
+def test_check_packed_invariants_flags_corruption():
+    from repro import ops
+
+    spikes = (np.random.default_rng(0).random((16, 40)) < 0.3) \
+        .astype(np.int8)
+    ps = ops.pack(spikes).to_packed_spikes()
+    assert check_packed_invariants(ps)["ok"]
+    bad = ps.words.at[0, -1].set(np.int32(-1))      # pad lanes + count drift
+    import dataclasses
+
+    verdict = check_packed_invariants(dataclasses.replace(ps, words=bad))
+    assert not verdict["ok"]
+    assert verdict["pad_cols"] > 0 and verdict["vld_mismatch"] > 0
+
+
+# ========================================================= deadlines + cancel
+def test_cancel_everywhere_in_the_pipeline(lm_zoo):
+    _, eng = _engine(lm_zoo, spiking=False)
+    u_q = [eng.submit(p, max_new=20) for p in _prompts(4)]
+    assert eng.cancel(u_q[3])                        # still queued
+    for _ in range(2):
+        eng.step()
+    assert eng.cancel(u_q[0])                        # mid-decode: slot freed
+    fin = {r.uid: r for r in eng.run_until_drained()}
+    assert fin[u_q[3]].status == "cancelled" and fin[u_q[3]].out == []
+    assert fin[u_q[0]].status == "cancelled"
+    assert fin[u_q[1]].status == fin[u_q[2]].status == "done"
+    assert not eng.cancel(u_q[0])                    # terminal: no-op
+    st = eng.stats()
+    assert st["cancelled"] == 2 and st["n"] == 2 and st["n_terminal"] == 4
+    # tokens emitted before the cancel stay drainable
+    assert eng.pop_output(u_q[0]) == fin[u_q[0]].out
+
+
+def test_deadline_ticks_and_status(lm_zoo):
+    _, eng = _engine(lm_zoo, spiking=False, max_slots=1)
+    fast = eng.submit(np.arange(1, 4), max_new=3)
+    slow = eng.submit(np.arange(1, 6), max_new=30, deadline_ticks=2)
+    fin = {r.uid: r for r in eng.run_until_drained()}
+    assert fin[fast].status == "done"
+    # with one slot, the deadline passes while the request queues
+    assert fin[slow].status == "deadline_miss"
+    assert eng.stats()["deadline_miss"] == 1
+
+
+def test_config_default_deadline(lm_zoo):
+    _, eng = _engine(lm_zoo, spiking=False, deadline_ticks=3)
+    uid = eng.submit(np.arange(1, 4), max_new=30)
+    fin = {r.uid: r for r in eng.run_until_drained()}
+    assert fin[uid].status == "deadline_miss"
+    assert 0 < len(fin[uid].out) <= 4
+
+
+# ====================================================== integrity quarantine
+def test_quarantine_replay_bit_identical_packed(lm_zoo):
+    """NaN + packed-word corruption on the spiking packed engine: the
+    guard quarantines the poisoned slot, the replay regenerates the exact
+    greedy stream, and FIFO delivery stays at-most-once."""
+    prompts = _prompts(3, seed=1)
+    _, ref_eng = _engine(lm_zoo, integrity_every=1)
+    _, ref = _drain(ref_eng, prompts)
+
+    plan = FaultPlan(SEED).corrupt_word(2).nan_state(4)
+    _, eng = _engine(lm_zoo, faults=plan, integrity_every=1)
+    uids, fin = _drain(eng, prompts)
+    assert sorted(fin) == sorted(uids)
+    assert {u: fin[u].out for u in uids} == {u: ref[u].out for u in uids}
+    assert all(fin[u].status == "done" for u in uids)
+    st = eng.stats()
+    assert st["quarantined"] == 2 and st["requeues"] == 2
+    # at-most-once: the FIFO holds each token exactly once
+    for u in uids:
+        assert eng.pop_output(u) == fin[u].out
+
+
+def test_quarantine_nan_state_dense_kv(lm_zoo):
+    """Dense-attention engine: NaN lands in the float KV pool and the
+    finite-check guard evicts + replays the slot."""
+    prompts = _prompts(3, seed=2)
+    _, ref_eng = _engine(lm_zoo, spiking=False, integrity_every=1)
+    _, ref = _drain(ref_eng, prompts)
+    plan = FaultPlan(SEED).nan_state(3)
+    _, eng = _engine(lm_zoo, spiking=False, faults=plan, integrity_every=1)
+    uids, fin = _drain(eng, prompts)
+    assert {u: fin[u].out for u in uids} == {u: ref[u].out for u in uids}
+    assert eng.stats()["quarantined"] == 1
+
+
+def test_quarantine_retry_budget_fails_request(lm_zoo):
+    """A slot poisoned on every tick exhausts its retry budget and FAILS
+    (loudly, in status + stats) instead of requeueing forever."""
+    plan = FaultPlan(SEED)
+    for t in range(1, 30):
+        plan.nan_logits(t, slot=1)      # highest slot = first admitted
+    _, eng = _engine(lm_zoo, faults=plan, quarantine_retries=1,
+                     integrity_every=1)
+    uid = eng.submit(np.arange(1, 5), max_new=6)
+    fin = {r.uid: r for r in eng.run_until_drained()}
+    assert fin[uid].status == "failed"
+    st = eng.stats()
+    assert st["failed"] == 1 and st["quarantined"] == 2  # budget 1 -> 2 hits
+    assert st["n"] == 0 and st["n_terminal"] == 1
+
+
+def test_guard_disabled_by_default(lm_zoo):
+    _, eng = _engine(lm_zoo, spiking=False)
+    _drain(eng, _prompts(2))
+    assert eng.stats()["guard_scans"] == 0
+
+
+def test_no_fault_guard_parity(lm_zoo):
+    """Guards on vs off without faults: identical outputs (the <5%
+    overhead bound is measured in benchmarks/serve_throughput.py)."""
+    prompts = _prompts(4, seed=3)
+    _, e0 = _engine(lm_zoo, integrity_every=0)
+    _, r0 = _drain(e0, prompts)
+    _, e1 = _engine(lm_zoo, integrity_every=1)
+    _, r1 = _drain(e1, prompts)
+    assert {u: r.out for u, r in r0.items()} \
+        == {u: r.out for u, r in r1.items()}
+    assert e1.stats()["guard_scans"] > 0 and e1.stats()["quarantined"] == 0
+
+
+# ========================================================== consumer stalls
+def test_forced_consumer_stall_is_exact(lm_zoo):
+    """stall_consumer freezes one slot's drain for a window; outputs stay
+    bit-identical (the rollback path the out-FIFO stall machinery uses)."""
+    prompts = _prompts(3, seed=4)
+    _, ref_eng = _engine(lm_zoo, spiking=False)
+    _, ref = _drain(ref_eng, prompts)
+    plan = FaultPlan(SEED).stall_consumer(2, ticks=3)
+    _, eng = _engine(lm_zoo, spiking=False, faults=plan, out_fifo_depth=64)
+    uids, fin = _drain(eng, prompts)
+    assert {u: fin[u].out for u in uids} == {u: ref[u].out for u in uids}
+    assert eng._stall_ticks > 0
+
+
+# ========================================================== StalledEngine
+def test_run_until_drained_raises_on_livelock(lm_zoo):
+    """Every slot stalled on an undrained FIFO, nobody pops: the old code
+    silently returned after max_ticks; now the livelock is named."""
+    _, eng = _engine(lm_zoo, spiking=False, out_fifo_depth=1)
+    uids = [eng.submit(p, max_new=8) for p in _prompts(2)]
+    with pytest.raises(StalledEngine) as ei:
+        eng.run_until_drained(stall_grace=10)
+    rep = ei.value.report
+    assert set(rep["stuck_slots"]) and rep["queued"] == 0
+    assert {s["uid"] for s in rep["stuck_slots"].values()} <= set(uids)
+    # draining the FIFOs un-stalls: the same engine then finishes clean
+    for _ in range(200):
+        eng.step()
+        for u in uids:
+            eng.pop_output(u)
+        if not eng.pending():
+            break
+    assert not eng.pending()
+    assert {r.uid for r in eng.finished} == set(uids)
+
+
+def test_run_until_drained_raises_on_budget_exhaustion(lm_zoo):
+    _, eng = _engine(lm_zoo, spiking=False)
+    eng.submit(np.arange(1, 4), max_new=30)
+    with pytest.raises(StalledEngine, match="max_ticks"):
+        eng.run_until_drained(max_ticks=3)
+
+
+def test_router_run_until_drained_raises_on_livelock(lm_zoo):
+    cfg, model, params = lm_zoo(ARCH)
+    router = ReplicaRouter(
+        model, params,
+        EngineConfig(max_slots=2, max_len=64, prefill_pad=8,
+                     out_fifo_depth=1), n_replicas=2)
+    for p in _prompts(3, seed=5):
+        router.submit(p, max_new=8)
+    with pytest.raises(StalledEngine):
+        router.run_until_drained(stall_grace=10)
+
+
+# ==================================================== fused-kernel demotion
+def test_kernel_fault_demotes_to_reference():
+    """An armed fused-kernel raise falls back to the reference impl for
+    that (op, mode), warns, records the demotion, and steers the autotuner
+    away from the broken op."""
+    import jax.numpy as jnp
+
+    from repro import ops
+    from repro.ops.autotune import get_tuner
+
+    x = (np.random.default_rng(0).random((16, 64)) < 0.3).astype(np.int8)
+    w = np.random.default_rng(1).standard_normal((64, 32)).astype(np.float32)
+    ref = ops.matmul(x, jnp.asarray(w), policy="reference")
+    fallback.arm_kernel_fault("matmul", at_call=0)
+    with warnings.catch_warnings(record=True) as wlog:
+        warnings.simplefilter("always")
+        out = ops.matmul(x, jnp.asarray(w), policy="fused_dense")
+    assert any("demoted" in str(x.message) for x in wlog)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert fallback.is_demoted("matmul")
+    assert [d["op"] for d in fallback.demotions()] == ["matmul"]
+    # sticky: later fused calls route to reference without re-raising
+    out2 = ops.matmul(x, jnp.asarray(w), policy="fused_dense")
+    np.testing.assert_array_equal(np.asarray(out2), np.asarray(ref))
+    # the autotuner stops pricing the broken op: "auto" resolves reference
+    assert get_tuner().is_demoted("matmul")
+    out3 = ops.matmul(x, jnp.asarray(w), policy="auto")
+    np.testing.assert_array_equal(np.asarray(out3), np.asarray(ref))
+    assert "matmul" in get_tuner().snapshot()["demoted_ops"]
+    fallback.reset_demotions()
+    assert not fallback.is_demoted("matmul")
+    assert not get_tuner().is_demoted("matmul")
+
+
+def test_contract_errors_do_not_demote():
+    """ValueError from a shape/argument contract must propagate — masking
+    a caller bug behind a reference fallback would hide it. Only
+    RuntimeError (XLA/Mosaic failures, injected faults) demotes."""
+    from repro.ops.registry import _REGISTRY, lookup, register
+
+    def _contract(*a, **k):
+        raise ValueError("bad block shape")
+
+    def _ref(*a, **k):
+        return "ref"
+
+    try:
+        register("tmp_contract_op", "fused")(_contract)
+        register("tmp_contract_op", "reference")(_ref)
+        with pytest.raises(ValueError, match="bad block shape"):
+            lookup("tmp_contract_op", "fused")()
+        assert not fallback.demotions()
+        # the RuntimeError twin of the same op DOES demote
+        def _boom(*a, **k):
+            raise RuntimeError("mosaic lowering failed")
+        _REGISTRY[("tmp_contract_op", "fused")] = _boom
+        with pytest.warns(RuntimeWarning, match="demoted"):
+            assert lookup("tmp_contract_op", "fused")() == "ref"
+        assert fallback.is_demoted("tmp_contract_op")
+    finally:
+        _REGISTRY.pop(("tmp_contract_op", "fused"), None)
+        _REGISTRY.pop(("tmp_contract_op", "reference"), None)
+        fallback.reset()
+
+
+# ============================================== the seeded chaos acceptance
+def test_chaos_trace_exactly_once_bit_identical(lm_zoo):
+    """THE acceptance invariant: 1 replica killed mid-trace + 2 NaN
+    injections + 1 forced fused-kernel failure; every request completes
+    exactly once, outputs bit-identical to the fault-free run."""
+    cfg, model, params = lm_zoo(ARCH, **SPIKING)
+    ecfg = EngineConfig(max_slots=2, max_len=64, prefill_pad=8,
+                        policy="fused_packed", integrity_every=1)
+    prompts = _prompts(6, seed=6)
+
+    ref_router = ReplicaRouter(model, params, ecfg, n_replicas=2)
+    ref_uids = [ref_router.submit(p, max_new=6) for p in prompts]
+    ref = {r.uid: r.out for r in ref_router.run_until_drained()}
+
+    clear_jit_cache()   # the chaos run must re-trace: its kernel fault
+    # fires at trace time and demotes dense_lif before compilation
+    plan = demo_chaos_plan(SEED, n_replicas=2, kill_tick=3, nan_ticks=(2, 5))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        router = ReplicaRouter(model, params, ecfg, n_replicas=2,
+                               faults=plan)
+        uids = [router.submit(p, max_new=6) for p in prompts]
+        fin = router.run_until_drained()
+    got = {r.uid: r.out for r in fin}
+    assert sorted(got) == sorted(uids)              # exactly once
+    assert len(fin) == len(prompts)
+    assert got == {u: ref[ru] for u, ru in zip(uids, ref_uids)}
+    st = router.stats()
+    assert st["alive"] == [True, False] and st["failovers"] == 1
+    assert st["requeued"] >= 1
+    assert [d["op"] for d in fallback.demotions()] == ["dense_lif"]
+    # at-most-once delivery through the router-level ledger
+    for u in uids:
+        assert router.pop_output(u) == got[u]
+        assert router.pop_output(u) == []
+
+
+def test_failover_preserves_partial_delivery(lm_zoo):
+    """Tokens the consumer popped BEFORE the replica died are never
+    re-delivered; the undelivered remainder arrives exactly once."""
+    cfg, model, params = lm_zoo(ARCH)
+    ecfg = EngineConfig(max_slots=2, max_len=64, prefill_pad=8)
+    ref_router = ReplicaRouter(model, params, ecfg, n_replicas=2)
+    prompts = _prompts(2, seed=7)
+    ref_uids = [ref_router.submit(p, max_new=8) for p in prompts]
+    ref = {r.uid: r.out for r in ref_router.run_until_drained()}
+
+    plan = FaultPlan(SEED).kill_replica(4, replica=1)
+    router = ReplicaRouter(model, params, ecfg, n_replicas=2, faults=plan)
+    uids = [router.submit(p, max_new=8) for p in prompts]
+    streamed = {u: [] for u in uids}
+    for _ in range(200):
+        router.step()
+        for u in uids:
+            streamed[u].extend(router.pop_output(u))
+        if not router.pending():
+            break
+    assert not router.pending()
+    assert streamed == {u: ref[ru] for u, ru in zip(uids, ref_uids)}
+    assert router.stats()["failovers"] == 1
+
+
+def test_all_replicas_dead_raises(lm_zoo):
+    cfg, model, params = lm_zoo(ARCH)
+    plan = FaultPlan(SEED).kill_replica(2, replica=0) \
+        .kill_replica(3, replica=1)
+    router = ReplicaRouter(model, params,
+                           EngineConfig(max_slots=2, max_len=64,
+                                        prefill_pad=8),
+                           n_replicas=2, faults=plan)
+    for p in _prompts(3, seed=8):
+        router.submit(p, max_new=20)
+    with pytest.raises(AllReplicasDead):
+        router.run_until_drained()
+
+
+def test_single_engine_replica_death_propagates(lm_zoo):
+    """Without a router there is nowhere to fail over: the injected death
+    surfaces to the caller."""
+    plan = FaultPlan(SEED).kill_replica(1)
+    _, eng = _engine(lm_zoo, spiking=False, faults=plan)
+    eng.submit(np.arange(1, 5), max_new=8)
+    with pytest.raises(ReplicaFailure):
+        eng.run_until_drained()
+
+
+def test_submit_skips_dead_replica(lm_zoo):
+    cfg, model, params = lm_zoo(ARCH)
+    router = ReplicaRouter(model, params,
+                           EngineConfig(max_slots=2, max_len=64,
+                                        prefill_pad=8), n_replicas=2)
+    router._fail_replica(1, "test")
+    for p in _prompts(4, seed=9):
+        router.submit(p, max_new=4)
+    fin = router.run_until_drained()
+    assert len(fin) == 4
+    st = router.stats()
+    assert st["dispatch"][1] == 0 and st["alive"] == [True, False]
