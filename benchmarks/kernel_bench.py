@@ -279,6 +279,69 @@ def main(json_path: str | None = None, with_sweep: bool = False) -> None:
     np.testing.assert_array_equal(np.asarray(unpack_spikes(ps2)),
                                   np.asarray(xs2))
 
+    # --------------------------------------------- multi-head Fig-5 QK chain
+    # head-blocked write-back fusion vs the composed projections +
+    # outside-mask path (what multi-head LMs executed before the fusion):
+    # modeled HBM bytes per (h, hkv, format) config + measured wall-clock
+    # at a CPU-tractable shape. The fused model must sit STRICTLY below
+    # composed for every benched config — asserted here so the artifact
+    # cannot ship a regression. GQA configs at the reduced head_dim=16:
+    # the weight-column expansion trick prices below the composed path's
+    # per-token _expand_kv round trip whenever the head width stays within
+    # the same n-block count (see roofline.qk_chain_traffic).
+    from repro.launch.roofline import qk_chain_traffic
+
+    mh_rows = []
+    for h_mh, hkv_mh, dh_mh in ((4, 4, 128), (8, 8, 128), (4, 2, 16),
+                                (4, 1, 16)):
+        for packed_mh in (False, True):
+            t = qk_chain_traffic(4096, 1024, h_mh, dh_mh, hkv_mh,
+                                 packed=packed_mh)
+            assert t["fused_hbm_bytes"] < t["composed_hbm_bytes"], t
+            emit("qk_multihead",
+                 f"h={h_mh} hkv={hkv_mh} dh={dh_mh} "
+                 f"{'packed' if packed_mh else 'dense'} (modeled)",
+                 0.0, t["fused_hbm_bytes"], None,
+                 hbm_bytes_composed=t["composed_hbm_bytes"],
+                 hbm_reduction=t["composed_hbm_bytes"]
+                 / t["fused_hbm_bytes"])
+            mh_rows.append(ROWS[-1])
+
+    # measured: fused head-blocked chain vs composed chain (same ops API)
+    from repro import ops as rops
+    from repro.core.lif import LIFConfig
+
+    mt, md, h_m, dh_m, hkv_m = 256, 64, 4, 16, 2
+    lif_cfg = LIFConfig()
+    xs_mh = jax.random.normal(jax.random.PRNGKey(21), (mt, md))
+    wq_mh = {"w": jax.random.normal(jax.random.PRNGKey(22),
+                                    (md, h_m * dh_m)) * 0.5}
+    wk_mh = {"w": jax.random.normal(jax.random.PRNGKey(23),
+                                    (md, hkv_m * dh_m)) * 0.5}
+
+    def fused_mh_chain(x_):
+        q_st = rops.dense_lif(wq_mh, x_, lif_cfg, policy="fused_dense")
+        return rops.dense_lif(wk_mh, x_, lif_cfg, q=q_st,
+                              qk_threshold=lif_cfg.v_th, heads=(h_m, dh_m),
+                              kv_heads=hkv_m, policy="fused_dense").data
+
+    def composed_mh_chain(x_):
+        q = rops.dense_lif(wq_mh, x_, lif_cfg, policy="fused_dense").data
+        k_ = rops.dense_lif(wk_mh, x_, lif_cfg, policy="fused_dense").data
+        k_ = jnp.repeat(k_.reshape(mt, hkv_m, dh_m), h_m // hkv_m, axis=1)
+        mask = (q.reshape(mt, h_m, dh_m).astype(jnp.float32)
+                .sum(-1, keepdims=True) >= lif_cfg.v_th)
+        return (k_ * mask.astype(k_.dtype)).reshape(mt, h_m * dh_m)
+
+    np.testing.assert_array_equal(np.asarray(fused_mh_chain(xs_mh)),
+                                  np.asarray(composed_mh_chain(xs_mh)))
+    t_mh_fused = time_call(fused_mh_chain, xs_mh) * 1e6
+    t_mh_comp = time_call(composed_mh_chain, xs_mh) * 1e6
+    emit("qk_multihead", f"h={h_m} hkv={hkv_m} fused chain {mt}x{md} "
+         "(measured)", 0.0, 0.0, t_mh_fused)
+    emit("qk_multihead", f"h={h_m} hkv={hkv_m} composed chain {mt}x{md} "
+         "(measured)", 0.0, 0.0, t_mh_comp)
+
     # qk_attention: N=4096, D=512 — one HBM pass
     nq, d = 4096, 512
     qq = (jax.random.uniform(jax.random.PRNGKey(2), (nq, d)) < 0.1
@@ -338,7 +401,12 @@ def main(json_path: str | None = None, with_sweep: bool = False) -> None:
         "spike_matmul_packed_us_256": t_packed_mm,
     }
     payload = {"rows": ROWS, "fused_pe_hbm_model": summary,
-               "packed_spike_hbm_model": packed_summary}
+               "packed_spike_hbm_model": packed_summary,
+               "multihead_qk": {
+                   "rows": mh_rows,
+                   "fused_chain_us_measured": t_mh_fused,
+                   "composed_chain_us_measured": t_mh_comp,
+               }}
     if sweep is not None:
         payload["sparsity_sweep"] = sweep
     with open(json_path, "w") as f:

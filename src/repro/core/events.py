@@ -205,6 +205,26 @@ def unpack_words(words: Array, dtype=jnp.int8) -> Array:
     return bits.reshape(*lead, w * LANE_BITS).astype(dtype)
 
 
+def head_lane_masks(n_heads: int, head_dim: int, total_cols: int) -> Array:
+    """Per-head word masks for head-blocked popcount row sums.
+
+    Returns int32 ``[n_heads, total_cols // 32]``: bit ``b`` of word ``w``
+    in row ``h`` is set iff packed column ``w*32 + b`` belongs to head
+    ``h`` (column ``// head_dim == h``). ANDing a packed spike row with
+    row ``h`` and popcounting gives that head's spike row sum — the
+    packed-format form of the Fig-5 per-head Row Summation. Columns at or
+    beyond ``n_heads * head_dim`` (lane padding) belong to no head.
+
+    Shapes are static, so inside a kernel body this folds to a constant.
+    """
+    assert total_cols % LANE_BITS == 0, total_cols
+    assert n_heads * head_dim <= total_cols, (n_heads, head_dim, total_cols)
+    cols = jnp.arange(total_cols, dtype=jnp.int32)
+    sel = (cols[None, :] // head_dim
+           == jnp.arange(n_heads, dtype=jnp.int32)[:, None])
+    return pack_words(sel.astype(jnp.int32))
+
+
 def popcount_block_map(words: Array, block_m: int, block_k: int) -> Array:
     """vld_cnt per (block_m x block_k) tile straight from packed words —
     the metadata pass reads 1/32nd of the bytes a dense re-read would."""

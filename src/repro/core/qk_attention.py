@@ -68,6 +68,29 @@ def qk_token_attention(q_spikes: Array, k_spikes: Array, mode: str = "threshold"
     return a * k_spikes
 
 
+def qk_grouped_token_attention(q_spikes: Array, k_spikes: Array,
+                               mode: str = "threshold",
+                               threshold: float = 1.0, surrogate: str = "atan",
+                               alpha: float = 2.0) -> Array:
+    """Grouped-KV QKTA: per-QUERY-head token masks gate grouped KV heads.
+
+    q_spikes: [..., N, H, Dh], k_spikes: [..., N, Hkv, Dh] with H a
+    multiple of Hkv. Query head ``qh`` reads kv head ``qh // (H//Hkv)``
+    (``jnp.repeat`` order). Returns [..., N, H, Dh] — the masked,
+    group-EXPANDED K — without ever materializing a replicated
+    [..., N, H, Dh] copy of K in HBM before masking: the expansion happens
+    inside the broadcast multiply, fused by XLA.
+    """
+    h, hkv = q_spikes.shape[-2], k_spikes.shape[-2]
+    assert h % hkv == 0, (h, hkv)
+    g = h // hkv
+    a = qk_token_mask(q_spikes, mode, threshold, surrogate, alpha)
+    lead, n, dh = q_spikes.shape[:-3], q_spikes.shape[-3], q_spikes.shape[-1]
+    a = a.reshape(*lead, n, hkv, g, 1)
+    out = a * k_spikes[..., :, :, None, :]
+    return out.reshape(*lead, n, h, dh)
+
+
 def qk_channel_attention(q_spikes: Array, k_spikes: Array, mode: str = "threshold",
                          threshold: float = 1.0, surrogate: str = "atan",
                          alpha: float = 2.0) -> Array:

@@ -66,8 +66,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ...core.events import (LANE_BITS, compact_kmap, pack_words,
-                            unpack_words)
+from ...core.events import (LANE_BITS, compact_kmap, head_lane_masks,
+                            pack_words, unpack_words)
 from ..gating import accum_tile
 
 Array = jax.Array
@@ -78,7 +78,8 @@ def _make_kernel(*, tau: float, v_th: float, soft_reset: bool,
                  with_state: bool, apply_qk: bool, emit_vld: bool,
                  m_valid: int, n_valid: int, block_m: int, block_n: int,
                  packed_in: bool, packed_q: bool, packed_residual: bool,
-                 packed_out: bool, skip: str = "dense"):
+                 packed_out: bool, skip: str = "dense",
+                 heads: tuple[int, int] | None = None):
     def kernel(*allrefs):
         # scalar-prefetch block: vld map (dense) or the compacted routing
         # tables (gated / two_level) from core.events.compact_kmap
@@ -147,7 +148,8 @@ def _make_kernel(*, tau: float, v_th: float, soft_reset: bool,
                     vout_ref[...] = v - v_th * spk
                 else:
                     vout_ref[...] = v * (1.0 - spk)
-            if apply_qk:             # Fig 5: atten_reg gates the write-back
+            if apply_qk and heads is None:
+                # Fig 5: atten_reg gates the write-back (whole-row mask)
                 if packed_q:         # row sum of packed spikes == popcount
                     rowsum = jnp.sum(
                         jax.lax.population_count(q_ref[...]), axis=1,
@@ -156,6 +158,32 @@ def _make_kernel(*, tau: float, v_th: float, soft_reset: bool,
                     rowsum = q_ref[...].astype(jnp.float32).sum(
                         axis=1, keepdims=True)
                 spk = spk * (rowsum >= qk_threshold).astype(jnp.float32)
+            elif apply_qk:
+                # head-blocked Fig 5: one atten_reg per head — per-head row
+                # sums over Q's head slice gate only that head's output
+                # columns. Static per-head slices / lane masks keep this on
+                # the VPU (no gathers); pad columns map to no head.
+                hq, dh = heads
+                if packed_q:
+                    words = q_ref[...]
+                    sels = head_lane_masks(hq, dh,
+                                           words.shape[1] * LANE_BITS)
+                cols = (jax.lax.broadcasted_iota(
+                    jnp.int32, (block_m, block_n), 1) + j * block_n)
+                head_of_col = cols // dh
+                gate = jnp.zeros((block_m, block_n), jnp.float32)
+                for hh in range(hq):
+                    if packed_q:     # per-head popcount over the word lanes
+                        rs = jnp.sum(jax.lax.population_count(
+                            words & sels[hh][None, :]), axis=1,
+                            keepdims=True).astype(jnp.float32)
+                    else:
+                        rs = q_ref[:, hh * dh:(hh + 1) * dh].astype(
+                            jnp.float32).sum(axis=1, keepdims=True)
+                    gate = gate + ((rs >= qk_threshold)
+                                   & (head_of_col == hh)
+                                   ).astype(jnp.float32)
+                spk = spk * gate
             if m_valid % block_m or n_valid % block_n:
                 rows = (jax.lax.broadcasted_iota(
                     jnp.int32, (block_m, block_n), 0) + i * block_m)
@@ -179,7 +207,7 @@ def _make_kernel(*, tau: float, v_th: float, soft_reset: bool,
                                     "block_k", "emit_vld", "m_valid",
                                     "n_valid", "packed_in", "packed_q",
                                     "packed_residual", "packed_out",
-                                    "skip", "interpret"))
+                                    "skip", "heads", "interpret"))
 def fused_pe_pallas(x: Array, w: Array, vld_cnt: Array,
                     bias: Array | None = None,
                     residual: Array | None = None,
@@ -195,6 +223,7 @@ def fused_pe_pallas(x: Array, w: Array, vld_cnt: Array,
                     packed_in: bool = False, packed_q: bool = False,
                     packed_residual: bool = False, packed_out: bool = False,
                     skip: str = "dense",
+                    heads: tuple[int, int] | None = None,
                     interpret: bool = False):
     """Block-aligned core. All shapes must already be padded to the blocks;
     use ``repro.kernels.fused_pe.ops.fused_pe`` for the padding wrapper.
@@ -210,6 +239,14 @@ def fused_pe_pallas(x: Array, w: Array, vld_cnt: Array,
     additionally elides silent 32-column stripes inside active tiles via
     the ``occ`` word-occupancy bitmap (required for that mode).
 
+    ``heads=(h, dh)`` makes the QK write-back HEAD-BLOCKED: Q and the
+    output are treated as ``h`` head blocks of width ``dh`` each, the row
+    sum / threshold mask is computed per head (packed Q: per-head
+    popcounts through static lane masks), and each head's mask gates only
+    its own output columns — the multi-head form of the Fig-5 fusion.
+    Requires ``n_valid == h * dh`` (the output must be exactly the
+    head-concatenated map). ``None`` keeps the whole-row mask.
+
     Returns (spikes, v_next | None, vld_next | None).
     """
     m = x.shape[0]
@@ -222,6 +259,10 @@ def fused_pe_pallas(x: Array, w: Array, vld_cnt: Array,
     with_state = v_prev is not None
     assert (s_prev is not None) == with_state
     assert skip in ("dense", "gated", "two_level"), skip
+    if heads is not None:
+        assert q is not None, "heads=(h, dh) requires the q operand"
+        assert heads[0] * heads[1] == (n_valid or n), \
+            (heads, n_valid or n)   # output == head-concatenated map
     grid = (m // block_m, n // block_n, k // block_k)
 
     kern = _make_kernel(
@@ -231,7 +272,7 @@ def fused_pe_pallas(x: Array, w: Array, vld_cnt: Array,
         m_valid=m_valid or m, n_valid=n_valid or n,
         block_m=block_m, block_n=block_n, packed_in=packed_in,
         packed_q=packed_q, packed_residual=packed_residual,
-        packed_out=packed_out, skip=skip)
+        packed_out=packed_out, skip=skip, heads=heads)
 
     # scalar-prefetch set: vld map (dense) or the compacted routing tables
     # (gated / two_level); index maps receive the refs as trailing args

@@ -71,6 +71,7 @@ def fused_pe(x: Spikes, w: Array, *,
              block_m: int = 128, block_n: int = 128, block_k: int = 128,
              emit_vld: bool = True, out_format: str | None = None,
              pack_out: bool | None = None, skip: str = "dense",
+             heads: tuple[int, int] | None = None,
              interpret: bool | None = None) -> FusedPEOut:
     """One fused PE layer: spikes/v_next/vld_next = PE(x, w, ...).
 
@@ -86,6 +87,8 @@ def fused_pe(x: Spikes, w: Array, *,
     (the deprecated boolean form routes through ``repro.ops.compat``).
     ``skip`` selects the byte-skip strategy ("dense" | "gated" |
     "two_level" — see ``repro.kernels.spike_matmul.ops.SKIP_MODES``).
+    ``heads=(h, dh)`` computes the QK mask per head block instead of per
+    whole row (multi-head Fig-5 fusion; requires ``w.shape[1] == h*dh``).
     """
     fmt = _out_format(pack_out, out_format, "fused_pe")
     return _fused_pe(x, w, bias=bias, residual=residual, v_prev=v_prev,
@@ -93,14 +96,14 @@ def fused_pe(x: Spikes, w: Array, *,
                      soft_reset=soft_reset, qk_threshold=qk_threshold,
                      block_m=block_m, block_n=block_n, block_k=block_k,
                      emit_vld=emit_vld, out_format=fmt, skip=skip,
-                     interpret=interpret)
+                     heads=heads, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("tau", "v_th", "soft_reset",
                                              "qk_threshold", "block_m",
                                              "block_n", "block_k",
                                              "emit_vld", "out_format",
-                                             "skip", "interpret"))
+                                             "skip", "heads", "interpret"))
 def _fused_pe(x: Spikes, w: Array, *,
               bias: Array | None = None,
               residual: Spikes | None = None,
@@ -113,6 +116,7 @@ def _fused_pe(x: Spikes, w: Array, *,
               block_m: int = 128, block_n: int = 128, block_k: int = 128,
               emit_vld: bool = True, out_format: str = "dense",
               skip: str = "dense",
+              heads: tuple[int, int] | None = None,
               interpret: bool | None = None) -> FusedPEOut:
     """Jitted core of ``fused_pe`` (all shims resolved: ``out_format`` is a
     plain static string here)."""
@@ -184,7 +188,7 @@ def _fused_pe(x: Spikes, w: Array, *,
         block_m=block_m, block_n=block_n, block_k=block_k,
         emit_vld=emit_vld or pack_out, m_valid=m0, n_valid=n0,
         packed_in=packed_in, packed_q=packed_q, packed_residual=packed_res,
-        packed_out=pack_out, skip=skip, interpret=interpret)
+        packed_out=pack_out, skip=skip, heads=heads, interpret=interpret)
     if pack_out:
         spikes = PackedSpikes(spikes, vld_next, (m0, n0), block_m, block_n)
     else:
@@ -212,6 +216,7 @@ def fused_pe_layer(spk: Spikes, w: Array, *,
                    block_m: int = 128, block_n: int = 128,
                    block_k: int = 128, out_format: str | None = None,
                    pack_out: bool | None = None, skip: str = "dense",
+                   heads: tuple[int, int] | None = None,
                    interpret: bool | None = None
                    ) -> tuple[Spikes, Optional[Array]]:
     """Multi-timestep fused layer over [T, M, K] inputs (dense or packed).
@@ -222,6 +227,8 @@ def fused_pe_layer(spk: Spikes, w: Array, *,
     v[0] = 0, s[0] = 0.
 
     ``residual`` / ``q`` / ``vld_cnt`` are per-timestep ([T, ...]) or None.
+    ``heads=(h, dh)`` makes the QK mask head-blocked (see ``fused_pe``);
+    for T>1 the outside-mask path reduces Q per head slice the same way.
     ``out_format="packed"`` returns the emitted spikes as a [T, ...]
     PackedSpikes; for T>1 the stateful scan needs the dense per-step spikes
     for the reset carry, so the pack happens on write-out of each step's
@@ -240,7 +247,7 @@ def fused_pe_layer(spk: Spikes, w: Array, *,
         out = fused_pe(spk[0], w, residual=None if residual is None
                        else residual[0], q=None if q is None else q[0],
                        vld_cnt=None if vld_cnt is None else vld_cnt[0],
-                       out_format=fmt, **kw)
+                       out_format=fmt, heads=heads, **kw)
         if packed_out:
             return _stack_packed([out.spikes]), out.vld_next[None]
         return out.spikes[None], out.vld_next[None]
@@ -258,8 +265,17 @@ def fused_pe_layer(spk: Spikes, w: Array, *,
             if isinstance(q_t, PackedSpikes):
                 from ..packed import unpack_spikes
                 q_t = unpack_spikes(q_t)
-            rowsum = q_t.astype(jnp.float32).sum(axis=-1, keepdims=True)
-            emitted = emitted * (rowsum >= qk_threshold).astype(emitted.dtype)
+            if heads is None:
+                rowsum = q_t.astype(jnp.float32).sum(axis=-1, keepdims=True)
+                emitted = emitted * (rowsum >= qk_threshold).astype(
+                    emitted.dtype)
+            else:
+                hq, dh = heads
+                rs = q_t[:, :hq * dh].astype(jnp.float32).reshape(
+                    -1, hq, dh).sum(axis=-1)
+                mask = (rs >= qk_threshold).astype(emitted.dtype)
+                emitted = (emitted.reshape(-1, hq, dh)
+                           * mask[:, :, None]).reshape(emitted.shape)
             vld_next = vld_or_compute(
                 pad_to_blocks(emitted, block_m, block_n), None,
                 block_m, block_n)

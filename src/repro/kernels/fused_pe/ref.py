@@ -28,12 +28,16 @@ def fused_pe_ref(x: Array, w: Array, *,
                  q: Array | None = None,
                  tau: float = 0.5, v_th: float = 1.0,
                  soft_reset: bool = False, qk_threshold: float = 1.0,
-                 block_m: int = 128, block_n: int = 128
+                 block_m: int = 128, block_n: int = 128,
+                 heads: tuple[int, int] | None = None
                  ) -> tuple[Array, Optional[Array], Array]:
     """Returns (spikes int8, v_next f32 | None, vld_next int32).
 
     v_next is None when no state was passed (deployed T=1 form), matching
     the kernel's stateless mode which skips the HBM write entirely.
+    ``heads=(h, dh)`` applies the QK mask per head block: one row sum (and
+    one threshold decision) per head over Q's head slice, gating only that
+    head's dh output columns.
     """
     cur = spike_matmul_ref(x, w)
     if bias is not None:
@@ -45,7 +49,15 @@ def fused_pe_ref(x: Array, w: Array, *,
     sp = jnp.zeros_like(cur) if s_prev is None else s_prev
     spk, v_next = lif_update_ref(cur, vp, sp, tau=tau, v_th=v_th,
                                  soft_reset=soft_reset)
-    if q is not None:
+    if q is not None and heads is not None:
+        h, dh = heads
+        assert spk.shape[-1] == h * dh, (spk.shape, heads)
+        rs = q[..., :h * dh].astype(jnp.float32).reshape(
+            *q.shape[:-1], h, dh).sum(axis=-1)
+        mask = (rs >= qk_threshold).astype(spk.dtype)
+        spk = (spk.reshape(*spk.shape[:-1], h, dh)
+               * mask[..., None]).reshape(spk.shape)
+    elif q is not None:
         spk = qk_attention_ref(q, spk, threshold=qk_threshold)
     vld_next = block_count_map_2d(pad_to_blocks(spk, block_m, block_n),
                                   block_m, block_n)

@@ -103,6 +103,56 @@ def spike_matmul_traffic(m: int, k: int, n: int, *,
             "flops": flops, "mxu_eff": eff, "overhead_s": overhead}
 
 
+def qk_chain_traffic(tokens: int, d_model: int, heads: int, head_dim: int,
+                     kv_heads: int | None = None, *, packed: bool = False,
+                     block_m: int = 128, block_n: int = 128,
+                     block_k: int = 128, active_frac: float = 1.0) -> dict:
+    """HBM byte model of the spiking QK attention chain (Fig 5): the FUSED
+    head-blocked write-back vs the COMPOSED projections + outside-mask
+    path the fusion replaces.
+
+    fused    : two fused_pe passes (wq, wk) whose K pass re-streams the Q
+               spike map once for the in-kernel per-head row sums and
+               emits the MASKED map directly. Grouped KV (kv_heads <
+               heads) expands the K projection's WEIGHT columns, so no
+               per-token KV replica exists.
+    composed : both projections emit UNMASKED spike maps to HBM, a mask
+               pass re-reads Q and K and writes the masked map, and
+               grouped KV first materializes the replicated [tokens,
+               heads*head_dim] copy (one write + one read — the
+               ``_expand_kv`` round trip).
+
+    The composed extras scale with ``tokens`` (per-token spike maps); the
+    fused GQA weight expansion streams more WEIGHT tile bytes instead —
+    the trade pays whenever the head width stays within the same number
+    of n-blocks (every reduced config here) or sparsity gates the sweep.
+    ``packed`` prices the spike maps at 1 bit/spike. Returns
+    {"fused_hbm_bytes", "composed_hbm_bytes", ...} for BENCH rows.
+    """
+    hkv = heads if kv_heads is None else kv_heads
+    nq = heads * head_dim
+    spike_bytes = (1 / 8) if packed else 1.0
+
+    def proj(n_cols: int) -> float:
+        return spike_matmul_traffic(
+            tokens, d_model, n_cols, block_m=block_m, block_n=block_n,
+            block_k=block_k, active_frac=active_frac, packed=packed,
+            skip="dense")["hbm_bytes"]
+
+    q_map = tokens * nq * spike_bytes
+    k_grouped_map = tokens * hkv * head_dim * spike_bytes
+    k_expanded_map = tokens * nq * spike_bytes
+
+    fused = proj(nq) + proj(nq) + q_map
+    composed = (proj(nq) + proj(hkv * head_dim)
+                + q_map + k_grouped_map + k_expanded_map)
+    if hkv != heads:
+        composed += 2 * k_expanded_map      # the _expand_kv round trip
+    return {"fused_hbm_bytes": fused, "composed_hbm_bytes": composed,
+            "tokens": tokens, "d_model": d_model, "heads": heads,
+            "head_dim": head_dim, "kv_heads": hkv, "packed": packed}
+
+
 def kernel_time_s(traffic: dict) -> float:
     """Roofline time of one modeled kernel: max(compute, memory) + fixed
     overhead. The same three-term logic as ``analyze_cell``, at kernel

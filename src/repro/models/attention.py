@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from .. import ops
 from ..configs.base import ModelConfig
-from ..core.qk_attention import qk_token_mask
+from ..core.qk_attention import qk_grouped_token_attention
 from ..ops import SpikeTensor
 from .layers import (apply_rope, causal_mask, dense_apply, dense_init,
                      maybe_spike, rmsnorm_apply, rmsnorm_init)
@@ -415,22 +415,24 @@ def _qk_spiking_apply(p: dict, cfg: ModelConfig, x: Array,
     ``cfg.exec_policy`` selects the execution (one body, no format forks):
 
       * fused policies (deployed serving path) run NEURAL's fused PE
-        dataflow — wq/wk projections + LIF threshold are single fused
-        Pallas passes (``ops.dense_lif``; no f32 pre-activation
-        round-trip); with one head the QK token mask is applied inside the
-        K pass's write-back (the full Fig 5 fusion — per-head masks need
-        per-head row sums, so multi-head models mask outside); the output
+        dataflow for EVERY head count — wq/wk projections + LIF threshold
+        are single fused Pallas passes (``ops.dense_lif``; no f32
+        pre-activation round-trip), and the QK token mask is applied
+        inside the K pass's write-back as a HEAD-BLOCKED mask (the full
+        Fig 5 fusion: one row-sum threshold per head; h==1 degenerates to
+        the whole-row mask). Grouped KV (hkv < h) expands the K
+        projection's WEIGHT columns so the per-query-head mask gates
+        in-kernel — no replicated per-token KV tensor. The output
         projection consumes the masked spikes through the event-skipped
         ``ops.matmul``. Forward-exact vs the reference path; a
         differentiable policy (``policy.for_training()`` — what
         ``launch/train.py --spiking --policy fused_dense`` requests)
         additionally routes these ops through their surrogate-gradient
         custom_vjp so the SAME fused forward trains with backprop.
-      * a packed policy ships the spike maps between passes bit-packed:
-        single-head models keep the whole chain packed (the Q operand's
-        row sums are in-kernel popcounts and the K pass's output leaves
-        packed); multi-head models pack the masked map before the output
-        projection. Bit-identical spikes.
+      * a packed policy ships the spike maps between passes bit-packed
+        end to end for every head count: the Q operand's per-head row
+        sums are in-kernel masked popcounts and the K pass's output
+        leaves packed — the masked map never exists dense.
 
     ``return_spike_state`` additionally returns the LAST token's masked
     spike map packed ([B, 1, 1, W] int32) — the state the serving engine
@@ -441,36 +443,13 @@ def _qk_spiking_apply(p: dict, cfg: ModelConfig, x: Array,
     pol = cfg.exec_policy
     state = None
     if pol.fused:
-        if h == 1 and hkv == 1:
-            # fully fused Fig 5 chain: the K pass masks on write-back, and
-            # under a packed policy the masked map never exists dense
-            q_st = ops.dense_lif(p["wq"], x, cfg.lif, policy=pol)
-            out_st = ops.dense_lif(p["wk"], x, cfg.lif, q=q_st,
-                                   qk_threshold=cfg.lif.v_th, policy=pol)
-        else:
-            dense_pol = ops.ExecutionPolicy("fused", "dense",
-                                            pol.differentiable)
-            q = ops.dense_lif(p["wq"], x, cfg.lif, policy=dense_pol
-                              ).data.reshape(b, s, h, dh)
-            k = ops.dense_lif(p["wk"], x, cfg.lif, policy=dense_pol
-                              ).data.reshape(b, s, hkv, dh)
-            k = _expand_kv(k, h)
-            if pol.differentiable:
-                # surrogate through the row-sum Heaviside (forward-equal to
-                # the hard mask below) and NO int8/packed round-trip — the
-                # masked map must stay f32 for the gradient to reach wq/wk
-                mask = qk_token_mask(q, mode="threshold",
-                                     threshold=cfg.lif.v_th,
-                                     surrogate=cfg.lif.surrogate,
-                                     alpha=cfg.lif.alpha)
-                out_st = SpikeTensor.dense(
-                    (mask * k).reshape(b * s, h * dh))
-            else:
-                mask = (q.astype(jnp.float32).sum(axis=-1, keepdims=True)
-                        >= cfg.lif.v_th)
-                flat = (k * mask.astype(k.dtype)).reshape(b * s, h * dh)
-                out_st = (ops.pack(flat.astype(jnp.int8)) if pol.packed
-                          else SpikeTensor.dense(flat))
+        # fully fused head-blocked Fig 5 chain: the K pass masks per head
+        # on write-back, and under a packed policy the masked map never
+        # exists dense
+        q_st = ops.dense_lif(p["wq"], x, cfg.lif, policy=pol)
+        out_st = ops.dense_lif(p["wk"], x, cfg.lif, q=q_st,
+                               qk_threshold=cfg.lif.v_th,
+                               heads=(h, dh), kv_heads=hkv, policy=pol)
         proj = ops.matmul(out_st, p["wo"]["w"], policy=pol).astype(x.dtype)
         if return_spike_state:
             state = _token_state(out_st, b, s)
@@ -482,10 +461,12 @@ def _qk_spiking_apply(p: dict, cfg: ModelConfig, x: Array,
     k_cur = dense_apply(p["wk"], x).reshape(b, s, hkv, dh)
     q = maybe_spike(q_cur, True, cfg.lif)
     k = maybe_spike(k_cur, True, cfg.lif)
-    k = _expand_kv(k, h)
-    mask = qk_token_mask(q, mode="threshold", threshold=cfg.lif.v_th,
-                         surrogate=cfg.lif.surrogate, alpha=cfg.lif.alpha)
-    out = mask * k                      # [B,S,H,Dh] — the QK token mask (4)
+    # [B,S,H,Dh] — the QK token mask (4); grouped KV broadcasts the
+    # per-query-head mask over each group instead of replicating K
+    out = qk_grouped_token_attention(q, k, mode="threshold",
+                                     threshold=cfg.lif.v_th,
+                                     surrogate=cfg.lif.surrogate,
+                                     alpha=cfg.lif.alpha)
     proj = dense_apply(p["wo"], out.reshape(b, s, h * dh))
     if return_spike_state:
         state = _packed_token_state(out.reshape(b, s, h * dh)[:, -1])

@@ -30,7 +30,7 @@ from .dispatch import (FusedOut, attention, conv_matmul_weights, dense_lif,
                        pool, qk_mask, unpack, w2ttfs_head)
 from .policy import (AUTO, AUTO_PACKED, FUSED_DENSE, FUSED_PACKED, POLICIES,
                      REFERENCE, ExecutionPolicy, as_policy)
-from .registry import implementations, lookup, register
+from .registry import implementations, lookup, record_dispatches, register
 from .spike_tensor import SpikeTensor, Spikes
 
 __all__ = [
@@ -38,7 +38,7 @@ __all__ = [
     "ExecutionPolicy", "POLICIES", "REFERENCE", "FUSED_DENSE",
     "FUSED_PACKED", "AUTO", "AUTO_PACKED", "as_policy",
     "AutoTuner", "KernelPlan", "get_tuner",
-    "register", "lookup", "implementations",
+    "register", "lookup", "implementations", "record_dispatches",
     "FusedOut", "matmul", "lif", "fused_pe", "fused_pe_layer", "pool",
     "im2col", "conv_matmul_weights", "qk_mask", "pack", "unpack",
     "attention", "dense_lif", "w2ttfs_head",

@@ -137,6 +137,7 @@ def fused_pe(x: Spikes, w: Array, *,
              lif_cfg: LIFConfig = LIFConfig(),
              policy: PolicyLike = None,
              skip: str = "dense",
+             heads: Optional[tuple[int, int]] = None,
              block_m: int = DEFAULT_BLOCKS.m,
              block_n: int = DEFAULT_BLOCKS.n,
              block_k: int = DEFAULT_BLOCKS.k) -> FusedOut:
@@ -145,7 +146,10 @@ def fused_pe(x: Spikes, w: Array, *,
     the next layer's metadata on the fly. ``residual`` may be a spike map
     (either format) or a raw f32 membrane current. ``skip`` selects the
     byte-skip strategy; an ``"auto"`` policy overrides it (and the block
-    shape) with the autotuner's plan for this operand."""
+    shape) with the autotuner's plan for this operand. ``heads=(h, dh)``
+    makes the QK mask head-blocked: one row-sum threshold per head over
+    ``q``'s head slice, gating only that head's ``dh`` output columns
+    (requires ``w.shape[1] == h*dh``)."""
     st = SpikeTensor.wrap(x)
     res = SpikeTensor.wrap(residual) if residual is not None else None
     qs = SpikeTensor.wrap(q) if q is not None else None
@@ -159,7 +163,8 @@ def fused_pe(x: Spikes, w: Array, *,
     return lookup("fused_pe", pol.mode)(
         st, w, bias=bias, residual=res, q=qs, v_prev=v_prev, s_prev=s_prev,
         qk_threshold=qk_threshold, lif_cfg=lif_cfg, fmt=pol.format,
-        block_m=block_m, block_n=block_n, block_k=block_k, skip=skip)
+        block_m=block_m, block_n=block_n, block_k=block_k, skip=skip,
+        heads=heads)
 
 
 def fused_pe_layer(x: Spikes, w: Array, *,
@@ -170,11 +175,13 @@ def fused_pe_layer(x: Spikes, w: Array, *,
                    lif_cfg: LIFConfig = LIFConfig(),
                    policy: PolicyLike = None,
                    skip: str = "dense",
+                   heads: Optional[tuple[int, int]] = None,
                    block_m: int = DEFAULT_BLOCKS.m,
                    block_n: int = DEFAULT_BLOCKS.n,
                    block_k: int = DEFAULT_BLOCKS.k) -> FusedOut:
     """Multi-timestep fused layer over [T, M, K] spike trains (T=1 is the
-    paper's stateless deployed mode; T>1 carries LIF state across steps)."""
+    paper's stateless deployed mode; T>1 carries LIF state across steps).
+    ``heads=(h, dh)`` makes the QK mask head-blocked (see ``fused_pe``)."""
     st = SpikeTensor.wrap(x)
     res = SpikeTensor.wrap(residual) if residual is not None else None
     qs = SpikeTensor.wrap(q) if q is not None else None
@@ -188,7 +195,7 @@ def fused_pe_layer(x: Spikes, w: Array, *,
     return lookup("fused_pe_layer", pol.mode)(
         st, w, bias=bias, residual=res, q=qs, qk_threshold=qk_threshold,
         lif_cfg=lif_cfg, fmt=pol.format, block_m=block_m, block_n=block_n,
-        block_k=block_k, skip=skip)
+        block_k=block_k, skip=skip, heads=heads)
 
 
 # --------------------------------------------------------- spatial reshapes
@@ -300,18 +307,30 @@ def attention(q: Array, k: Array, v: Array, *, causal: bool = True,
 # -------------------------------------------------- dense -> LIF projection
 def dense_lif(p: dict, x: Array, lif_cfg: LIFConfig, *,
               q: Optional[Spikes] = None, qk_threshold: float = 1.0,
+              heads: Optional[tuple[int, int]] = None,
+              kv_heads: Optional[int] = None,
               policy: PolicyLike = None) -> SpikeTensor:
     """dense(x) + LIF threshold as one fused PE pass (the LM projection
     analogue of the PE dataflow): ``x`` is the dense residual stream, the
     f32 pre-activation never round-trips HBM, and the emitted spikes leave
     in the policy's format as a 2-D SpikeTensor over [tokens, Dout].
-    ``q`` (either format) applies the QK write-back mask."""
+    ``q`` (either format) applies the QK write-back mask.
+
+    ``heads=(h, dh)`` makes the mask head-blocked — one row-sum threshold
+    per head over ``q``'s head slice, gating only that head's ``dh``
+    output columns. ``kv_heads < h`` declares a grouped-KV projection
+    (``p["w"]`` maps to ``kv_heads`` head blocks): the per-QUERY-head mask
+    broadcasts over each group and the emitted map is the group-expanded
+    [tokens, h*dh] — fused mode expands the WEIGHT columns (token-count
+    independent), reference mode broadcasts at the mask multiply; neither
+    materializes a replicated pre-mask KV tensor."""
     flat = x.reshape(-1, x.shape[-1])
     qs = SpikeTensor.wrap(q) if q is not None else None
     pol = _non_tuned(_policy_for(policy))
     return lookup("dense_lif", pol.mode)(p, flat, lif_cfg, q=qs,
                                             qk_threshold=qk_threshold,
-                                            fmt=pol.format)
+                                            fmt=pol.format, heads=heads,
+                                            kv_heads=kv_heads)
 
 
 # ------------------------------------------------------------- W2TTFS head

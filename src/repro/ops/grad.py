@@ -112,6 +112,27 @@ def _qk_rowmask(q: Array, threshold: float, mode: str, surrogate: str,
     return qk_token_mask(q, mode, threshold, surrogate, alpha)
 
 
+def _qk_headmask_apply(s: Array, q: Array, heads: tuple[int, int],
+                       kv_heads: Optional[int], threshold: float,
+                       surrogate: str, alpha: float) -> Array:
+    """Head-blocked surrogate write-back mask: one row-sum Heaviside (with
+    surrogate pseudo-derivative) per head over ``q``'s head slice, gating
+    that head's ``dh`` columns of ``s``. With ``kv_heads < h`` the per-
+    QUERY-head mask broadcasts over each KV group, so ``s`` arrives
+    grouped ([m, kv_heads*dh]) and leaves expanded ([m, h*dh]) — the
+    backward pass then sums each group's cotangents into the shared
+    grouped columns, exactly the vjp of the fused path's replicated
+    weight columns."""
+    h, dh = heads
+    m = s.shape[0]
+    hkv = h if kv_heads is None else kv_heads
+    g = h // hkv
+    mask = _qk_rowmask(q.reshape(m, -1)[:, :h * dh].reshape(m, h, dh),
+                       threshold, "threshold", surrogate, alpha)
+    return (s.reshape(m, hkv, 1, dh)
+            * mask.reshape(m, hkv, g, 1)).reshape(m, h * dh)
+
+
 # ------------------------------------------------------------------- matmul
 @functools.lru_cache(maxsize=None)
 def _matmul_grad(kernels: str, block_m: int, block_n: int, block_k: int):
@@ -188,11 +209,14 @@ def _pe_current(ops: dict) -> Array:
 @functools.lru_cache(maxsize=None)
 def _fused_pe_grad(kernels: str, cfg: LIFConfig, qk_threshold: float,
                    fmt: str, block_m: int, block_n: int, block_k: int,
-                   stateful: bool):
+                   stateful: bool, heads: Optional[tuple[int, int]] = None):
     def ref_fwd(ops):
         s, v_next = _lif_step(_pe_current(ops),
                               ops.get("v_prev"), ops.get("s_prev"), cfg)
-        if ops.get("q") is not None:
+        if ops.get("q") is not None and heads is not None:
+            s = _qk_headmask_apply(s, ops["q"], heads, None, qk_threshold,
+                                   cfg.surrogate, cfg.alpha)
+        elif ops.get("q") is not None:
             s = s * _qk_rowmask(ops["q"].reshape(s.shape[0], -1),
                                 qk_threshold, "threshold", cfg.surrogate,
                                 cfg.alpha)
@@ -210,7 +234,7 @@ def _fused_pe_grad(kernels: str, cfg: LIFConfig, qk_threshold: float,
                        q=ops.get("q"), tau=cfg.tau, v_th=cfg.v_th,
                        soft_reset=cfg.soft_reset, qk_threshold=qk_threshold,
                        block_m=block_m, block_n=block_n, block_k=block_k,
-                       out_format=fmt)
+                       out_format=fmt, heads=heads)
         spk = out.spikes
         if fmt == "packed":
             from ..kernels.packed import unpack_spikes
@@ -223,13 +247,14 @@ def _fused_pe_grad(kernels: str, cfg: LIFConfig, qk_threshold: float,
 
 def _fused_pe_impl(kernels):
     def impl(st, w, *, bias, residual, q, v_prev, s_prev, qk_threshold,
-             lif_cfg, fmt, block_m, block_n, block_k, skip="dense"):
+             lif_cfg, fmt, block_m, block_n, block_k, skip="dense",
+             heads=None):
         from .dispatch import FusedOut
         from .spike_tensor import SpikeTensor
 
         stateful = v_prev is not None
         f = _fused_pe_grad(kernels, lif_cfg, qk_threshold, fmt,
-                           block_m, block_n, block_k, stateful)
+                           block_m, block_n, block_k, stateful, heads)
         ops = {"x": _dense_operand(st), "w": _f32(w), "bias": _f32(bias)}
         if residual is not None:
             ops["residual"] = _dense_operand(residual)
@@ -251,7 +276,7 @@ def _fused_pe_impl(kernels):
 @functools.lru_cache(maxsize=None)
 def _fused_pe_layer_grad(kernels: str, cfg: LIFConfig, qk_threshold: float,
                          fmt: str, block_m: int, block_n: int, block_k: int,
-                         t: int):
+                         t: int, heads: Optional[tuple[int, int]] = None):
     def ref_fwd(ops):
         x, w = ops["x"], ops["w"]
         spikes_ts = []
@@ -268,7 +293,11 @@ def _fused_pe_layer_grad(kernels: str, cfg: LIFConfig, qk_threshold: float,
                 # the QK mask gates outside (the kernel layer's T>1 path)
                 spk, v = _lif_step(cur, v, s, cfg)
                 s = spk
-            if ops.get("q") is not None:
+            if ops.get("q") is not None and heads is not None:
+                spk = _qk_headmask_apply(spk, ops["q"][ti], heads, None,
+                                         qk_threshold, cfg.surrogate,
+                                         cfg.alpha)
+            elif ops.get("q") is not None:
                 spk = spk * _qk_rowmask(
                     ops["q"][ti].reshape(spk.shape[0], -1), qk_threshold,
                     "threshold", cfg.surrogate, cfg.alpha)
@@ -287,7 +316,7 @@ def _fused_pe_layer_grad(kernels: str, cfg: LIFConfig, qk_threshold: float,
             residual=ops.get("residual"), q=ops.get("q"),
             tau=cfg.tau, v_th=cfg.v_th, soft_reset=cfg.soft_reset,
             qk_threshold=qk_threshold, block_m=block_m, block_n=block_n,
-            block_k=block_k, out_format=fmt)
+            block_k=block_k, out_format=fmt, heads=heads)
         if fmt == "packed":
             spikes = unpack_spikes(spikes)
         return _f32(spikes)
@@ -297,13 +326,14 @@ def _fused_pe_layer_grad(kernels: str, cfg: LIFConfig, qk_threshold: float,
 
 def _fused_pe_layer_impl(kernels):
     def impl(st, w, *, bias, residual, q, qk_threshold, lif_cfg, fmt,
-             block_m, block_n, block_k, skip="dense"):
+             block_m, block_n, block_k, skip="dense", heads=None):
         from .dispatch import FusedOut
         from .spike_tensor import SpikeTensor
 
         x = _dense_operand(st)
         f = _fused_pe_layer_grad(kernels, lif_cfg, qk_threshold, fmt,
-                                 block_m, block_n, block_k, x.shape[0])
+                                 block_m, block_n, block_k, x.shape[0],
+                                 heads)
         ops = {"x": x, "w": _f32(w), "bias": _f32(bias)}
         if residual is not None:
             ops["residual"] = _dense_operand(residual)
@@ -347,16 +377,30 @@ def _qk_mask_impl(kernels):
 # ---------------------------------------------------------------- dense_lif
 @functools.lru_cache(maxsize=None)
 def _dense_lif_grad(kernels: str, cfg: LIFConfig, qk_threshold: float,
-                    fmt: str, has_bias: bool):
+                    fmt: str, has_bias: bool,
+                    heads: Optional[tuple[int, int]] = None,
+                    kv_heads: Optional[int] = None):
     def ref_fwd(ops):
+        # grouped KV (kv_heads < h): the matmul stays on the UNEXPANDED
+        # weight — the group expansion happens inside the mask broadcast,
+        # so its backward sums group cotangents into the shared columns
         cur = ops["x"] @ ops["w"]
         if has_bias:
             cur = cur + ops["b"]
         s = spike(cur - cfg.v_th, cfg.surrogate, cfg.alpha)
-        if ops.get("q") is not None:
+        if ops.get("q") is not None and heads is not None:
+            s = _qk_headmask_apply(s, ops["q"], heads, kv_heads,
+                                   qk_threshold, cfg.surrogate, cfg.alpha)
+        elif ops.get("q") is not None:
             s = s * _qk_rowmask(ops["q"].reshape(s.shape[0], -1),
                                 qk_threshold, "threshold", cfg.surrogate,
                                 cfg.alpha)
+        elif heads is not None and kv_heads is not None \
+                and kv_heads != heads[0]:
+            h, dh = heads
+            m, g = s.shape[0], heads[0] // kv_heads
+            s = jnp.broadcast_to(s.reshape(m, kv_heads, 1, dh),
+                                 (m, kv_heads, g, dh)).reshape(m, h * dh)
         return s
 
     if kernels == "reference":
@@ -373,17 +417,20 @@ def _dense_lif_grad(kernels: str, cfg: LIFConfig, qk_threshold: float,
 
         st = _dense_lif_fused(p, ops["x"], cfg,
                               q=None if q is None else SpikeTensor.dense(q),
-                              qk_threshold=qk_threshold, fmt=fmt)
+                              qk_threshold=qk_threshold, fmt=fmt,
+                              heads=heads, kv_heads=kv_heads)
         return _emitted_dense(st)
 
     return _surrogate_vjp(kernel_fwd, ref_fwd)
 
 
 def _dense_lif_impl(kernels):
-    def impl(p, flat, cfg, *, q, qk_threshold, fmt):
+    def impl(p, flat, cfg, *, q, qk_threshold, fmt, heads=None,
+             kv_heads=None):
         from .spike_tensor import SpikeTensor
 
-        f = _dense_lif_grad(kernels, cfg, qk_threshold, fmt, "b" in p)
+        f = _dense_lif_grad(kernels, cfg, qk_threshold, fmt, "b" in p,
+                            heads, kv_heads)
         ops = {"x": _f32(flat), "w": _f32(p["w"])}
         if "b" in p:
             ops["b"] = _f32(p["b"])

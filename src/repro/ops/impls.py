@@ -105,7 +105,7 @@ def _lif_ref(current, v_prev, s_prev, cfg: LIFConfig):
 @register("fused_pe", "fused")
 def _fused_pe_fused(st: SpikeTensor, w: Array, *, bias, residual, q, v_prev,
                     s_prev, qk_threshold, lif_cfg: LIFConfig, fmt,
-                    block_m, block_n, block_k, skip="dense"):
+                    block_m, block_n, block_k, skip="dense", heads=None):
     from ..kernels.fused_pe import fused_pe
 
     out = fused_pe(
@@ -114,7 +114,7 @@ def _fused_pe_fused(st: SpikeTensor, w: Array, *, bias, residual, q, v_prev,
         vld_cnt=None if st.is_packed else st.vld_cnt,
         tau=lif_cfg.tau, v_th=lif_cfg.v_th, soft_reset=lif_cfg.soft_reset,
         qk_threshold=qk_threshold, block_m=block_m, block_n=block_n,
-        block_k=block_k, out_format=fmt, skip=skip)
+        block_k=block_k, out_format=fmt, skip=skip, heads=heads)
     return FusedOut(_wrap_spikes(out.spikes, out.vld_next, fmt, block_m,
                                  block_n), out.v_next, out.vld_next)
 
@@ -122,7 +122,8 @@ def _fused_pe_fused(st: SpikeTensor, w: Array, *, bias, residual, q, v_prev,
 @register("fused_pe", "reference")
 def _fused_pe_reference(st: SpikeTensor, w: Array, *, bias, residual, q,
                         v_prev, s_prev, qk_threshold, lif_cfg: LIFConfig,
-                        fmt, block_m, block_n, block_k, skip="dense"):
+                        fmt, block_m, block_n, block_k, skip="dense",
+                        heads=None):
     from ..kernels.fused_pe import fused_pe_ref
 
     res = residual.to_dense(jnp.float32) if residual is not None else None
@@ -131,14 +132,16 @@ def _fused_pe_reference(st: SpikeTensor, w: Array, *, bias, residual, q,
         st.to_dense() if st.is_packed else st.data, w, bias=bias,
         residual=res, v_prev=v_prev, s_prev=s_prev, q=qd, tau=lif_cfg.tau,
         v_th=lif_cfg.v_th, soft_reset=lif_cfg.soft_reset,
-        qk_threshold=qk_threshold, block_m=block_m, block_n=block_n)
+        qk_threshold=qk_threshold, block_m=block_m, block_n=block_n,
+        heads=heads)
     return FusedOut(_ref_wrap(spk, vld, fmt, block_m, block_n), v_next, vld)
 
 
 @register("fused_pe_layer", "fused")
 def _fused_pe_layer_fused(st: SpikeTensor, w: Array, *, bias, residual, q,
                           qk_threshold, lif_cfg: LIFConfig, fmt,
-                          block_m, block_n, block_k, skip="dense"):
+                          block_m, block_n, block_k, skip="dense",
+                          heads=None):
     from ..kernels.fused_pe import fused_pe_layer
 
     spikes, vld = fused_pe_layer(
@@ -147,7 +150,7 @@ def _fused_pe_layer_fused(st: SpikeTensor, w: Array, *, bias, residual, q,
         vld_cnt=None if st.is_packed else st.vld_cnt,
         tau=lif_cfg.tau, v_th=lif_cfg.v_th, soft_reset=lif_cfg.soft_reset,
         qk_threshold=qk_threshold, block_m=block_m, block_n=block_n,
-        block_k=block_k, out_format=fmt, skip=skip)
+        block_k=block_k, out_format=fmt, skip=skip, heads=heads)
     return FusedOut(_wrap_spikes(spikes, vld, fmt, block_m, block_n),
                     None, vld)
 
@@ -155,7 +158,8 @@ def _fused_pe_layer_fused(st: SpikeTensor, w: Array, *, bias, residual, q,
 @register("fused_pe_layer", "reference")
 def _fused_pe_layer_reference(st: SpikeTensor, w: Array, *, bias, residual,
                               q, qk_threshold, lif_cfg: LIFConfig, fmt,
-                              block_m, block_n, block_k, skip="dense"):
+                              block_m, block_n, block_k, skip="dense",
+                              heads=None):
     from ..kernels.fused_pe import fused_pe_ref
     from ..kernels.qk_attention import qk_attention_ref
 
@@ -175,7 +179,7 @@ def _fused_pe_layer_reference(st: SpikeTensor, w: Array, *, bias, residual,
                 residual=None if res is None else res[ti], q=q_t,
                 tau=lif_cfg.tau, v_th=lif_cfg.v_th,
                 soft_reset=lif_cfg.soft_reset, qk_threshold=qk_threshold,
-                block_m=block_m, block_n=block_n)
+                block_m=block_m, block_n=block_n, heads=heads)
         else:
             # stateful form: LIF state carries the PRE-mask spikes, the QK
             # mask gates outside — mirroring the kernel layer's T>1 path
@@ -186,7 +190,16 @@ def _fused_pe_layer_reference(st: SpikeTensor, w: Array, *, bias, residual,
                 soft_reset=lif_cfg.soft_reset, block_m=block_m,
                 block_n=block_n)
             s = spk
-            if q_t is not None:
+            if q_t is not None and heads is not None:
+                h, dh = heads
+                rs = q_t[:, :h * dh].astype(jnp.float32).reshape(
+                    -1, h, dh).sum(axis=-1)
+                mask = (rs >= qk_threshold).astype(spk.dtype)
+                spk = (spk.reshape(-1, h, dh)
+                       * mask[:, :, None]).reshape(spk.shape)
+                vld = block_count_map_2d(
+                    pad_to_blocks(spk, block_m, block_n), block_m, block_n)
+            elif q_t is not None:
                 spk = qk_attention_ref(q_t, spk, threshold=qk_threshold)
                 vld = block_count_map_2d(
                     pad_to_blocks(spk, block_m, block_n), block_m, block_n)
@@ -348,11 +361,39 @@ register("pool", "reference")(functools.partial(_pool_impl,
 
 
 # =========================================================== dense -> LIF map
+def expand_group_weights(p: dict, heads: tuple[int, int], kv_heads: int
+                         ) -> dict:
+    """Grouped-KV projection -> per-query-head projection, in WEIGHT space.
+
+    ``p["w"]`` maps to ``kv_heads`` head blocks of ``dh`` columns; the
+    returned weight replicates each kv head's columns ``h // kv_heads``
+    times (``jnp.repeat`` head order: query head qh reads kv head qh//g) so
+    the fused kernel emits the group-EXPANDED [tokens, h*dh] map directly.
+    A stateless LIF of replicated columns equals replicated LIF spikes, so
+    this is bit-identical to masking grouped KV and broadcasting — but the
+    replication cost is one [d, h*dh] WEIGHT (token-count independent)
+    instead of ``_expand_kv``'s per-token [tokens, h*dh] HBM tensor.
+    """
+    h, dh = heads
+    g = h // kv_heads
+    w = p["w"]
+    d = w.shape[0]
+    assert w.shape[1] == kv_heads * dh, (w.shape, kv_heads, dh)
+    out = {"w": jnp.repeat(w.reshape(d, kv_heads, dh), g,
+                           axis=1).reshape(d, h * dh)}
+    if "b" in p:
+        out["b"] = jnp.repeat(p["b"].reshape(kv_heads, dh), g,
+                              axis=0).reshape(h * dh)
+    return out
+
+
 @register("dense_lif", "fused")
 def _dense_lif_fused(p: dict, flat: Array, lif_cfg: LIFConfig, *, q,
-                     qk_threshold, fmt):
+                     qk_threshold, fmt, heads=None, kv_heads=None):
     from ..kernels.fused_pe import fused_pe
 
+    if heads is not None and kv_heads is not None and kv_heads != heads[0]:
+        p = expand_group_weights(p, heads, kv_heads)
     m, k = flat.shape
     bm, bk = DEFAULT_BLOCKS.m, DEFAULT_BLOCKS.k
     # dense residual stream: a ones map — dense blocks are never silent,
@@ -361,22 +402,42 @@ def _dense_lif_fused(p: dict, flat: Array, lif_cfg: LIFConfig, *, q,
     out = fused_pe(flat, p["w"], bias=p.get("b"), vld_cnt=ones_vld,
                    q=_q_operand(q), qk_threshold=qk_threshold,
                    tau=lif_cfg.tau, v_th=lif_cfg.v_th,
-                   soft_reset=lif_cfg.soft_reset, out_format=fmt)
+                   soft_reset=lif_cfg.soft_reset, out_format=fmt,
+                   heads=heads)
     return _wrap_spikes(out.spikes, out.vld_next, fmt, DEFAULT_BLOCKS.m,
                         DEFAULT_BLOCKS.n)
 
 
 @register("dense_lif", "reference")
 def _dense_lif_ref(p: dict, flat: Array, lif_cfg: LIFConfig, *, q,
-                   qk_threshold, fmt):
+                   qk_threshold, fmt, heads=None, kv_heads=None):
     cur = flat.astype(jnp.float32) @ p["w"].astype(jnp.float32)
     if "b" in p:
         cur = cur + p["b"].astype(jnp.float32)
     spk = lif_forward(cur, lif_cfg).astype(jnp.int8)
-    if q is not None:
-        rowsum = q.to_dense(jnp.float32).reshape(flat.shape[0], -1).sum(
+    m = flat.shape[0]
+    if q is not None and heads is not None:
+        # head-blocked mask; grouped KV (kv_heads < h) is masked via a
+        # broadcast over the group axis — the [tokens, h*dh] expansion
+        # exists only as the multiply's output, never as a replicated
+        # pre-mask copy of the KV spikes
+        h, dh = heads
+        hkv = h if kv_heads is None else kv_heads
+        g = h // hkv
+        rs = q.to_dense(jnp.float32).reshape(m, -1)[:, :h * dh].reshape(
+            m, h, dh).sum(axis=-1)
+        mask = (rs >= qk_threshold).astype(jnp.int8)
+        spk = (spk.reshape(m, hkv, 1, dh)
+               * mask.reshape(m, hkv, g, 1)).reshape(m, h * dh)
+    elif q is not None:
+        rowsum = q.to_dense(jnp.float32).reshape(m, -1).sum(
             axis=-1, keepdims=True)
         spk = spk * (rowsum >= qk_threshold).astype(jnp.int8)
+    elif heads is not None and kv_heads is not None and kv_heads != heads[0]:
+        h, dh = heads
+        g = h // kv_heads
+        spk = jnp.broadcast_to(spk.reshape(m, kv_heads, 1, dh),
+                               (m, kv_heads, g, dh)).reshape(m, h * dh)
     vld = block_count_map_2d(
         pad_to_blocks(spk, DEFAULT_BLOCKS.m, DEFAULT_BLOCKS.n),
         DEFAULT_BLOCKS.m, DEFAULT_BLOCKS.n)

@@ -15,10 +15,12 @@ import time — new backends register by importing this module and calling
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+import contextlib
+from typing import Callable, Iterator, Optional
 
 _REGISTRY: dict[tuple[str, str], Callable] = {}
 _LOADED = False
+_DISPATCH_LOG: Optional[list[tuple[str, str]]] = None
 
 
 def register(op: str, mode: str) -> Callable[[Callable], Callable]:
@@ -40,8 +42,28 @@ def _ensure_loaded() -> None:
         from . import impls  # noqa: F401  (registers the kernel families)
 
 
+@contextlib.contextmanager
+def record_dispatches() -> Iterator[list[tuple[str, str]]]:
+    """Record every ``(op, mode)`` this registry resolves inside the block.
+
+    The yielded list fills in dispatch order — the executed-mode audit
+    trail for policy-regression tests (e.g. "a packed policy on a
+    multi-head LM must never resolve a dense pack/unpack round-trip").
+    Records at TRACE time: under ``jax.jit`` a cache hit replays without
+    re-dispatching, so assert against a cold trace (fresh shapes or
+    ``jax.clear_caches``)."""
+    global _DISPATCH_LOG
+    prev, _DISPATCH_LOG = _DISPATCH_LOG, []
+    try:
+        yield _DISPATCH_LOG
+    finally:
+        _DISPATCH_LOG = prev
+
+
 def lookup(op: str, mode: str) -> Callable:
     _ensure_loaded()
+    if _DISPATCH_LOG is not None:
+        _DISPATCH_LOG.append((op, mode))
     try:
         fn = _REGISTRY[(op, mode)]
         if "fused" in mode:

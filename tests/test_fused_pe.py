@@ -189,7 +189,7 @@ def test_snn_cnn_forward_event_path_parity():
     fused = snn_cnn.fuse_model(var, cfg)
     img = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
     l_ref, _, aux_ref = snn_cnn.forward(fused, img, cfg)
-    cfg_ev = dataclasses.replace(cfg, use_event_kernels=True)
+    cfg_ev = dataclasses.replace(cfg, policy="fused_packed")
     l_ev, _, aux_ev = snn_cnn.forward(fused, img, cfg_ev)
     np.testing.assert_allclose(np.asarray(l_ev), np.asarray(l_ref),
                                rtol=1e-4, atol=1e-4)
@@ -209,7 +209,7 @@ def test_qk_spiking_attention_event_path_parity():
     params = model.init(jax.random.PRNGKey(0))
     l_ref, _ = model.prefill(params, {"tokens": toks},
                              return_all_logits=True)
-    model.cfg = dataclasses.replace(cfg, use_event_kernels=True)
+    model.cfg = dataclasses.replace(cfg, policy="fused_dense")
     l_ev, _ = model.prefill(params, {"tokens": toks}, return_all_logits=True)
     np.testing.assert_allclose(np.asarray(l_ev), np.asarray(l_ref),
                                rtol=2e-4, atol=2e-4)

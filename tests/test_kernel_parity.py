@@ -16,7 +16,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import ops
 from repro.core.events import pack_spikes_ref, unpack_spikes_ref
+from repro.core.lif import LIFConfig
+from repro.core.surrogate import spike
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 from repro.kernels.fused_pe import fused_pe, fused_pe_ref
 from repro.kernels.lif_update import lif_update, lif_update_ref
@@ -86,10 +89,16 @@ def test_fused_pe_parity(m, k, n, pattern, fmt):
 @pytest.mark.parametrize("pattern", PATTERNS)
 def test_fused_pe_pack_out_parity(m, k, n, pattern):
     """pack_out chains the event-compressed HBM format: unpacking the
-    emitted PackedSpikes must reproduce the dense oracle bit-for-bit."""
+    emitted PackedSpikes must reproduce the dense oracle bit-for-bit.
+    (Intentional compat-shim exercise — the deprecated kwarg must keep
+    working AND keep warning.)"""
+    from repro.ops.compat import reset_warning_dedup
+
     x = _spikes((m, k), pattern, seed=7)
     w = _weights(k, n)
-    out = fused_pe(x, w, pack_out=True)
+    reset_warning_dedup()
+    with pytest.warns(DeprecationWarning):
+        out = fused_pe(x, w, pack_out=True)
     spk_ref, _, vld_ref = fused_pe_ref(x, w)
     np.testing.assert_array_equal(np.asarray(unpack_spikes(out.spikes)),
                                   np.asarray(spk_ref))
@@ -178,3 +187,110 @@ def test_flash_attention_parity(b, s, h, hkv, d):
     ).reshape(b, h, s, d).transpose(0, 2, 1, 3)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------- multi-head QK write-back sweep
+# (h, hkv): multi-head attention (h == hkv) and grouped-KV (hkv == h/2,
+# plus the deepest grouping hkv == 1) at every head count — the Fig-5
+# on-the-fly dataflow must be head-blocked-exact in BOTH formats.
+HEAD_CONFIGS = [(1, 1), (2, 2), (2, 1), (4, 4), (4, 2)]
+MH_POLICIES = ["reference", "fused_dense", "fused_packed"]
+MH_DH = 16          # head width below the 32-bit pack-word lane: the
+                    # packed per-head popcount must split word lanes
+MH_QK_THRESHOLD = 5.0
+
+
+def _mh_inputs(h, hkv, m=130, k=96, dh=MH_DH):
+    x = jax.random.normal(jax.random.PRNGKey(7 * h + hkv), (m, k)) * 0.6
+    pq = {"w": _weights(k, h * dh, seed=h),
+          "b": jnp.full((h * dh,), 0.05)}
+    pk = {"w": _weights(k, hkv * dh, seed=h + 50),
+          "b": jnp.full((hkv * dh,), 0.05)}
+    return x, pq, pk
+
+
+def _mh_oracle(x, pq, pk, h, hkv, dh, cfg):
+    """Independent per-head oracle: threshold each projection, mask each
+    QUERY head by its own Q row sum, broadcast the mask over the grouped
+    KV head blocks (never materializing a pre-mask replicated KV)."""
+    m = x.shape[0]
+
+    def proj(p):
+        cur = x.astype(jnp.float32) @ p["w"].astype(jnp.float32) + p["b"]
+        return (cur >= cfg.v_th).astype(jnp.int8)
+
+    qs, ks = proj(pq), proj(pk)
+    rs = qs.astype(jnp.float32).reshape(m, h, dh).sum(axis=-1)
+    mask = (rs >= MH_QK_THRESHOLD).astype(jnp.int8)
+    g = h // hkv
+    out = (ks.reshape(m, hkv, 1, dh)
+           * mask.reshape(m, hkv, g, 1)).reshape(m, h * dh)
+    return qs, out
+
+
+@pytest.mark.parametrize("h,hkv", HEAD_CONFIGS)
+@pytest.mark.parametrize("policy", MH_POLICIES)
+def test_dense_lif_multihead_parity(h, hkv, policy):
+    """Q -> head-masked (grouped) K chain through ops.dense_lif: spikes
+    bit-identical to the per-head oracle under every policy."""
+    dh = MH_DH
+    cfg = LIFConfig(v_th=0.5)
+    x, pq, pk = _mh_inputs(h, hkv)
+    q_ref, out_ref = _mh_oracle(x, pq, pk, h, hkv, dh, cfg)
+    q_st = ops.dense_lif(pq, x, cfg, policy=policy)
+    out_st = ops.dense_lif(pk, x, cfg, q=q_st,
+                           qk_threshold=MH_QK_THRESHOLD,
+                           heads=(h, dh), kv_heads=hkv, policy=policy)
+    if policy == "fused_packed":
+        assert q_st.is_packed and out_st.is_packed
+    np.testing.assert_array_equal(np.asarray(q_st.to_dense()),
+                                  np.asarray(q_ref))
+    np.testing.assert_array_equal(np.asarray(out_st.to_dense()),
+                                  np.asarray(out_ref))
+    # the oracle's mask must actually vary per head (no degenerate sweep)
+    if h > 1:
+        rs = np.asarray(q_ref).astype(np.float32).reshape(-1, h, dh)
+        per_head = (rs.sum(-1) >= MH_QK_THRESHOLD)
+        assert 0 < per_head.mean() < 1
+
+
+@pytest.mark.parametrize("h,hkv", HEAD_CONFIGS)
+@pytest.mark.parametrize("policy",
+                         [p + "+grad" for p in MH_POLICIES])
+def test_dense_lif_multihead_grad_parity(h, hkv, policy):
+    """Surrogate gradients through the head-blocked mask match pure-jnp
+    autodiff (per-head Heaviside on the row sums, group-broadcast mask,
+    UNEXPANDED grouped weights) under every differentiable policy."""
+    dh = MH_DH
+    cfg = LIFConfig(v_th=0.5)
+    x, pq, pk = _mh_inputs(h, hkv)
+    m = x.shape[0]
+    g = h // hkv
+    coeff = jnp.arange(h * dh, dtype=jnp.float32)
+
+    def loss(x_, pq_, pk_):
+        q_st = ops.dense_lif(pq_, x_, cfg, policy=policy)
+        out = ops.dense_lif(pk_, x_, cfg, q=q_st,
+                            qk_threshold=MH_QK_THRESHOLD,
+                            heads=(h, dh), kv_heads=hkv, policy=policy)
+        return (out.data * coeff).sum()
+
+    def loss_ref(x_, pq_, pk_):
+        qs = spike(x_ @ pq_["w"] + pq_["b"] - cfg.v_th,
+                   cfg.surrogate, cfg.alpha)
+        ks = spike(x_ @ pk_["w"] + pk_["b"] - cfg.v_th,
+                   cfg.surrogate, cfg.alpha)
+        rs = qs.reshape(m, h, dh).sum(axis=-1)
+        mask = spike(rs - MH_QK_THRESHOLD, cfg.surrogate, cfg.alpha)
+        out = (ks.reshape(m, hkv, 1, dh)
+               * mask.reshape(m, hkv, g, 1)).reshape(m, h * dh)
+        return (out * coeff).sum()
+
+    grads = jax.grad(loss, argnums=(0, 1, 2))(x, pq, pk)
+    grads_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(x, pq, pk)
+    for a, b in zip(jax.tree_util.tree_leaves(grads),
+                    jax.tree_util.tree_leaves(grads_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+    # the mask path keeps wq connected to the loss
+    assert float(jnp.abs(grads[1]["w"]).max()) > 0

@@ -268,20 +268,30 @@ def test_legacy_model_config_flags_equal_policy():
 def test_legacy_snn_config_default_format_is_packed():
     from repro.models.snn_cnn import SNNCNNConfig
 
+    from repro.ops.compat import reset_warning_dedup
+
     cfg = SNNCNNConfig()
     assert cfg.exec_policy == ops.REFERENCE
-    legacy = dataclasses.replace(cfg, **_legacy_kwargs(ev=True))
+    reset_warning_dedup()
+    with pytest.warns(DeprecationWarning):
+        legacy = dataclasses.replace(cfg, **_legacy_kwargs(ev=True))
     assert legacy.exec_policy == ops.FUSED_PACKED      # historical default
-    legacy_d = dataclasses.replace(cfg, **_legacy_kwargs(ev=True,
-                                                         fmt="dense"))
+    reset_warning_dedup()
+    with pytest.warns(DeprecationWarning):
+        legacy_d = dataclasses.replace(cfg, **_legacy_kwargs(ev=True,
+                                                             fmt="dense"))
     assert legacy_d.exec_policy == ops.FUSED_DENSE
 
 
 def test_legacy_engine_flags_equal_policy():
     from repro.serve.engine import EngineConfig
 
+    from repro.ops.compat import reset_warning_dedup
+
     e_new = EngineConfig(policy="fused_packed")
-    e_old = EngineConfig(**_legacy_kwargs(ev=True, fmt="packed"))
+    reset_warning_dedup()
+    with pytest.warns(DeprecationWarning):
+        e_old = EngineConfig(**_legacy_kwargs(ev=True, fmt="packed"))
     base = ops.REFERENCE
     assert ops.merge_engine_policy(base, e_new.policy, None,
                                    None) == ops.FUSED_PACKED
@@ -290,7 +300,9 @@ def test_legacy_engine_flags_equal_policy():
                                          e_old.spike_format)
     assert merged_old == ops.FUSED_PACKED
     # per-axis override: format-only legacy flag keeps the model's kernels
-    fmt_only = EngineConfig(**_legacy_kwargs(fmt="packed"))
+    reset_warning_dedup()
+    with pytest.warns(DeprecationWarning):
+        fmt_only = EngineConfig(**_legacy_kwargs(fmt="packed"))
     assert ops.merge_engine_policy(ops.FUSED_DENSE, fmt_only.policy,
                                    fmt_only.use_event_kernels,
                                    fmt_only.spike_format) == ops.FUSED_PACKED
@@ -306,8 +318,12 @@ def test_legacy_apply_fused_kwargs_equal_policy_results():
     var = snn_cnn.init(jax.random.PRNGKey(0), cfg)
     fused = snn_cnn.fuse_model(var, cfg)
     img = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
-    legacy_cfg = dataclasses.replace(cfg, **_legacy_kwargs(ev=True,
-                                                           fmt="packed"))
+    from repro.ops.compat import reset_warning_dedup
+
+    reset_warning_dedup()
+    with pytest.warns(DeprecationWarning):
+        legacy_cfg = dataclasses.replace(cfg, **_legacy_kwargs(ev=True,
+                                                               fmt="packed"))
     l_old, _, _ = snn_cnn.forward(fused, img, legacy_cfg)
     l_new, _, _ = snn_cnn.forward(fused, img, cfg, policy="fused_packed")
     np.testing.assert_array_equal(np.asarray(l_old), np.asarray(l_new))

@@ -125,7 +125,7 @@ def test_fused_pe_packed_in_q_residual_out_bit_identical():
     ref_spk, _, ref_vld = fused_pe_ref(x, w, bias=b, q=q,
                                        residual=res.astype(jnp.float32))
     out = fused_pe(pack_spikes(x), w, bias=b, q=pack_spikes(q),
-                   residual=pack_spikes(res), pack_out=True)
+                   residual=pack_spikes(res), out_format="packed")
     assert isinstance(out.spikes, PackedSpikes)
     np.testing.assert_array_equal(np.asarray(unpack_spikes(out.spikes)),
                                   np.asarray(ref_spk))
@@ -144,8 +144,8 @@ def test_fused_pe_packed_chain_no_dense_tensor():
     x = _spikes(10, (256, 256))
     w1 = jax.random.normal(jax.random.PRNGKey(11), (256, 128)) * 0.1
     w2 = jax.random.normal(jax.random.PRNGKey(12), (128, 64)) * 0.1
-    l1 = fused_pe(pack_spikes(x), w1, pack_out=True)
-    l2 = fused_pe(l1.spikes, w2, pack_out=True)
+    l1 = fused_pe(pack_spikes(x), w1, out_format="packed")
+    l2 = fused_pe(l1.spikes, w2, out_format="packed")
     r1, _, _ = fused_pe_ref(x, w1)
     r2, _, _ = fused_pe_ref(r1, w2)
     np.testing.assert_array_equal(np.asarray(unpack_spikes(l2.spikes)),
@@ -205,11 +205,9 @@ def test_snn_cnn_packed_event_path_bit_identical_to_dense_event_path():
     fused = snn_cnn.fuse_model(var, cfg)
     img = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
     l_ref, _, aux_ref = snn_cnn.forward(fused, img, cfg)
-    cfg_pk = dataclasses.replace(cfg, use_event_kernels=True,
-                                 spike_format="packed")
+    cfg_pk = dataclasses.replace(cfg, policy="fused_packed")
     l_pk, _, aux_pk = snn_cnn.forward(fused, img, cfg_pk)
-    cfg_dn = dataclasses.replace(cfg, use_event_kernels=True,
-                                 spike_format="dense")
+    cfg_dn = dataclasses.replace(cfg, policy="fused_dense")
     l_dn, _, aux_dn = snn_cnn.forward(fused, img, cfg_dn)
     np.testing.assert_allclose(np.asarray(l_pk), np.asarray(l_dn),
                                rtol=1e-5, atol=1e-5)
@@ -236,8 +234,7 @@ def test_qk_spiking_packed_serving_parity():
     params = model.init(jax.random.PRNGKey(0))
     l_ref, _ = model.prefill(params, {"tokens": toks},
                              return_all_logits=True)
-    model.cfg = dataclasses.replace(cfg, use_event_kernels=True,
-                                    spike_format="packed")
+    model.cfg = dataclasses.replace(cfg, policy="fused_packed")
     l_pk, cache = model.prefill(params, {"tokens": toks},
                                 return_all_logits=True)
     np.testing.assert_allclose(np.asarray(l_pk), np.asarray(l_ref),
@@ -266,8 +263,7 @@ def test_engine_packed_spike_stats():
         return {r.uid: r.out for r in fin}, eng.stats()
 
     out_pk, stats_pk = run(EngineConfig(max_slots=2, max_len=32,
-                                        use_event_kernels=True,
-                                        spike_format="packed"))
+                                        policy="fused_packed"))
     out_dn, stats_dn = run(EngineConfig(max_slots=2, max_len=32))
     assert out_pk == out_dn
     assert stats_pk["spike_format"] == "packed"

@@ -85,7 +85,7 @@ def test_event_kernel_path_bit_exact():
     """C3 integration: routing the QKFormer matmuls through the Pallas
     spike_matmul (block event-skip) changes NOTHING numerically."""
     cfg = dataclasses.replace(_cfg("qkfresnet11"), image_size=16)
-    cfg_ev = dataclasses.replace(cfg, use_event_kernels=True)
+    cfg_ev = dataclasses.replace(cfg, policy="fused_packed")
     var = snn_cnn.init(jax.random.PRNGKey(0), cfg)
     fused = snn_cnn.fuse_model(var, cfg)
     imgs = _imgs()[:, :16, :16, :]
