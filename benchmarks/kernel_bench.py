@@ -18,13 +18,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import RooflineEstimate, artifact_path, time_call
-from repro.kernels.fused_pe import fused_pe, fused_pe_ref
-from repro.kernels.lif_update import lif_update_ref
-from repro.kernels.packed import pack_spikes, unpack_spikes
-from repro.kernels.qk_attention import qk_attention_ref
-from repro.kernels.spike_matmul import spike_matmul, spike_matmul_ref
-from repro.kernels.spike_matmul.ops import block_sparsity
-from repro.kernels.w2ttfs_pool import w2ttfs_pool_fc_ref
+# this benchmark times the raw kernels (no dispatch layer) on purpose —
+# the registry overhead is what benchmarks/ops_dispatch.py measures
+from repro.kernels.fused_pe import fused_pe, fused_pe_ref  # neurallint: disable=NL-REGISTRY-BYPASS
+from repro.kernels.lif_update import lif_update_ref  # neurallint: disable=NL-REGISTRY-BYPASS
+from repro.kernels.packed import pack_spikes, unpack_spikes  # neurallint: disable=NL-REGISTRY-BYPASS
+from repro.kernels.qk_attention import qk_attention_ref  # neurallint: disable=NL-REGISTRY-BYPASS
+from repro.kernels.spike_matmul import spike_matmul, spike_matmul_ref  # neurallint: disable=NL-REGISTRY-BYPASS
+from repro.kernels.spike_matmul.ops import block_sparsity  # neurallint: disable=NL-REGISTRY-BYPASS
+from repro.kernels.w2ttfs_pool import w2ttfs_pool_fc_ref  # neurallint: disable=NL-REGISTRY-BYPASS
 
 ROWS: list[dict] = []
 

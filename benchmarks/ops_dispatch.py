@@ -26,7 +26,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import artifact_path
 from repro import ops
-from repro.kernels.spike_matmul import spike_matmul
+# the raw-kernel baseline this benchmark compares dispatch against
+from repro.kernels.spike_matmul import spike_matmul  # neurallint: disable=NL-REGISTRY-BYPASS
 
 ROWS: list[dict] = []
 

@@ -1,0 +1,30 @@
+"""``repro.analysis`` — static analysis over the kernel registry and the
+project source.
+
+Two engines, one finding model:
+
+  * ``repro.analysis.contracts`` — the abstract contract verifier: walks
+    every registered ``(op, mode)`` pair of the kernel registry under
+    ``jax.eval_shape`` (zero FLOPs, zero kernel launches) over a declared
+    edge-shape corpus and proves dispatch totality, no silent downgrades,
+    format/dtype preservation, metadata propagation, grad coverage,
+    block-contract satisfiability, and static VMEM budgets.
+  * ``repro.analysis.lint`` — AST lint rules over the project source
+    (registry bypass, host sync in traced code, bare Heavisides on the
+    differentiable surface, hardcoded interpret mode, mutable default
+    pytrees, and the legacy-surface guards), with per-line
+    ``# neurallint: disable=RULE`` suppressions.
+
+``tools/neurallint.py`` is the CLI + CI gate over both.
+"""
+from .findings import Finding, RULES, junit_xml, render
+from .abstract import AbstractEvalError, abstract_eval, spike_aval
+from .contracts import ContractReport, verify_contracts
+from .lint import lint_paths, lint_source
+
+__all__ = [
+    "Finding", "RULES", "junit_xml", "render",
+    "AbstractEvalError", "abstract_eval", "spike_aval",
+    "ContractReport", "verify_contracts",
+    "lint_paths", "lint_source",
+]

@@ -1,0 +1,169 @@
+"""The ONE shape-walking implementation: abstract evaluation helpers.
+
+Everything static analysis (and the multi-pod dry run) needs from JAX is
+``jax.eval_shape`` — trace a function over ``ShapeDtypeStruct`` leaves,
+resolve every shape/dtype/sharding decision, run zero FLOPs. This module
+wraps it with the two things the callers kept reimplementing ad hoc:
+
+  * ``abstract_eval(fn, *args, **kw)`` — eval_shape with diagnostics: a
+    failure raises ``AbstractEvalError`` naming the callee and the operand
+    avals instead of a bare tracer error (``launch.dryrun`` walks model
+    init/optimizer shapes through this; ``repro.analysis.contracts`` walks
+    the whole kernel registry through it).
+  * ``spike_aval(...)`` — abstract ``SpikeTensor`` operands in either
+    format, with the padded word grid and metadata map shapes the packed
+    contract pins down.
+  * ``EDGE_SHAPES`` / ``HEAD_CONFIGS`` — the declared edge-shape corpus the
+    contract verifier sweeps: block-aligned, sub-block, and ragged
+    (non-multiple) core shapes, plus the head-blocking configurations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.events import DEFAULT_BLOCKS, LANE_BITS
+
+#: the contract verifier's edge-shape corpus: (m, k, n) core shapes. One
+#: block-aligned cell, one sub-block cell (everything inside one tile), and
+#: one ragged cell that exercises every pad path (m, k, n all non-multiples
+#: of the 128 grid and k a non-multiple of the 32-bit lane width).
+EDGE_SHAPES = (
+    (128, 128, 128),      # exactly one block tile
+    (8, 64, 32),          # sub-block: padding dominates
+    (130, 96, 72),        # ragged: pad lanes + partial tiles on every axis
+)
+
+#: head-blocking configurations for the QK write-back ops: (heads,
+#: kv_heads) with kv_heads < heads exercising the grouped-KV weight
+#: expansion. head_dim is derived from the swept n (n // heads).
+HEAD_CONFIGS = ((None, None), (2, 2), (4, 2))
+
+
+class AbstractEvalError(RuntimeError):
+    """An abstract evaluation failed: carries the callee and operand avals
+    so registry-wide sweeps report *which* cell broke, not a bare tracer
+    traceback."""
+
+    def __init__(self, what: str, avals: Any, cause: Exception):
+        self.what, self.avals, self.cause = what, avals, cause
+        super().__init__(f"abstract eval of {what} failed on {avals}: "
+                         f"{type(cause).__name__}: {cause}")
+
+
+def _aval_str(x: Any) -> str:
+    if hasattr(x, "shape") and hasattr(x, "dtype"):
+        return f"{jnp.dtype(x.dtype).name}[{','.join(map(str, x.shape))}]"
+    return type(x).__name__
+
+
+def _is_aval_leaf(x: Any) -> bool:
+    return hasattr(x, "shape") and hasattr(x, "dtype")
+
+
+def _is_dynamic(x: Any) -> bool:
+    """True when the argument is a pure aval pytree (every leaf carries
+    shape+dtype) — the operands eval_shape traces. Everything else
+    (policies, configs, skip strings, ints, None) is static and closed
+    over."""
+    leaves = jax.tree_util.tree_leaves(x, is_leaf=_is_aval_leaf)
+    return bool(leaves) and all(_is_aval_leaf(l) for l in leaves)
+
+
+def abstract_eval(fn: Callable, *args, what: str = "", **kwargs):
+    """``jax.eval_shape`` over the array-like arguments of ``fn(*args,
+    **kwargs)`` with the static arguments closed over, plus diagnostics.
+
+    Returns the output aval tree (ShapeDtypeStructs in the output pytree
+    structure — SpikeTensor outputs come back as SpikeTensors of
+    ShapeDtypeStruct leaves). Zero FLOPs: nothing is lowered, compiled, or
+    executed.
+    """
+    dyn_idx = [i for i, a in enumerate(args) if _is_dynamic(a)]
+    dyn_keys = [k for k, v in kwargs.items() if _is_dynamic(v)]
+
+    def call(dyn_args, dyn_kwargs):
+        full = list(args)
+        for i, v in zip(dyn_idx, dyn_args):
+            full[i] = v
+        kw = dict(kwargs, **dyn_kwargs)
+        return fn(*full, **kw)
+
+    try:
+        return jax.eval_shape(call, [args[i] for i in dyn_idx],
+                              {k: kwargs[k] for k in dyn_keys})
+    except Exception as e:                      # noqa: BLE001 — re-raised
+        name = what or getattr(fn, "__name__", str(fn))
+        leaves = [_aval_str(l) for l in jax.tree_util.tree_leaves(
+            (args, kwargs), is_leaf=_is_aval_leaf)]
+        raise AbstractEvalError(name, leaves, e) from e
+
+
+def sds(shape: tuple, dtype=jnp.float32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return -(-x // b) * b
+
+
+def packed_grid(m: int, k: int, *, block_m: int = DEFAULT_BLOCKS.m,
+                block_k: int = DEFAULT_BLOCKS.k) -> tuple:
+    """(padded_m, padded_k, word_cols, grid_m, grid_k) of a packed map —
+    the shape algebra the metadata-propagation check verifies against."""
+    mp, kp = _ceil_to(m, block_m), _ceil_to(k, block_k)
+    return mp, kp, kp // LANE_BITS, mp // block_m, kp // block_k
+
+
+def spike_aval(m: int, k: int, fmt: str = "dense", *, lead: tuple = (),
+               block_m: int = DEFAULT_BLOCKS.m,
+               block_k: int = DEFAULT_BLOCKS.k, with_vld: bool = False,
+               dtype=jnp.int8):
+    """An abstract SpikeTensor operand: [*, m, k] logical spikes in either
+    format. Packed avals carry the contract-correct padded word grid and
+    vld_cnt map; ``with_vld`` attaches the metadata map to dense avals too
+    (the chained-layer case)."""
+    from ..ops.spike_tensor import SpikeTensor
+
+    if fmt == "packed":
+        mp, kp, words, gm, gk = packed_grid(m, k, block_m=block_m,
+                                            block_k=block_k)
+        return SpikeTensor(sds((*lead, mp, words), jnp.int32),
+                           sds((*lead, gm, gk), jnp.int32), "packed",
+                           (*lead, m, k), block_m, block_k)
+    vld = None
+    if with_vld:
+        _, _, _, gm, gk = packed_grid(m, k, block_m=block_m, block_k=block_k)
+        vld = sds((*lead, gm, gk), jnp.int32)
+    return SpikeTensor(sds((*lead, m, k), dtype), vld, "dense",
+                       (*lead, m, k), block_m, block_k)
+
+
+# ------------------------------------------------- model-level shape walking
+# (the dry-run's side of the shared implementation)
+def module_param_shapes(init_fn: Callable, *init_args):
+    """Abstract parameter pytree of a model ``init`` (seeded with key 0 —
+    shapes are key-independent)."""
+    if not init_args:
+        init_args = (jax.random.PRNGKey(0),)
+    return abstract_eval(init_fn, *init_args, what="model.init")
+
+
+def optimizer_shapes(opt_init: Callable, params_shape):
+    """Abstract optimizer-state pytree for a parameter aval tree."""
+    return abstract_eval(opt_init, params_shape, what="optimizer.init")
+
+
+@dataclasses.dataclass(frozen=True)
+class TileModel:
+    """Static VMEM residency of one kernel family at one tiling — what the
+    NL-VMEM-BUDGET check prices against ``launch.roofline.VMEM_BYTES``."""
+    family: str
+    block_m: int
+    block_n: int
+    block_k: int
+    packed: bool
+    bytes: int

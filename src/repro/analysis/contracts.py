@@ -1,0 +1,511 @@
+"""Engine 1: the abstract kernel-contract verifier.
+
+Walks the whole ``(op, mode)`` registry — all seven kernel families ×
+reference / fused × dense / packed × byte-skip strategies × ±grad × head
+configurations — and, via ``jax.eval_shape`` over the declared edge-shape
+corpus (``repro.analysis.abstract.EDGE_SHAPES``), proves with ZERO FLOPs:
+
+  * NL-DISPATCH-TOTALITY — every advertised execution point resolves (and
+    the sweep itself covers 100% of the registered pairs: an implementation
+    nobody can drive is a coverage gap, reported, not ignored);
+  * NL-SILENT-DOWNGRADE — the executed registry modes match the requested
+    policy's kernel axis (the generalization of PR 8's
+    ``record_dispatches`` check to every op);
+  * NL-FORMAT-PRESERVE — spike outputs leave in the policy's format with
+    the contracted dtypes;
+  * NL-META-PROP — every packed output carries a shape-consistent
+    ``vld_cnt`` block map (and dense outputs that carry one are grid-true);
+  * NL-GRAD-COVERAGE — every op on a grad-declaring family registers both
+    ``+grad`` modes;
+  * NL-BLOCK-CONTRACT — the packed block-shape contract is satisfiable on
+    the corpus AND its runtime guard rejects mismatched tilings;
+  * NL-VMEM-BUDGET — each family's declared BlockSpec residency model fits
+    ``launch.roofline.VMEM_BYTES``.
+
+Everything runs under abstract evaluation: no kernel launches, no
+compilation, CPU-safe, seconds not minutes — which is what lets CI prove
+the contracts over the whole registry before anything runs on hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, Iterator, Optional
+
+import jax.numpy as jnp
+
+from ..core.events import DEFAULT_BLOCKS
+from ..core.lif import LIFConfig
+from ..kernels.contract import KernelContract, kernel_contracts
+from .abstract import (EDGE_SHAPES, HEAD_CONFIGS, AbstractEvalError,
+                       abstract_eval, packed_grid, sds, spike_aval)
+from .findings import Finding
+
+GRAD_SUFFIX = "+grad"
+
+#: the policy points the sweep drives (preset name -> (kernels, format)).
+#: "auto" is excluded by design: it is a *pricing* layer that resolves to
+#: one of these points per concrete call — its bit-identity to the chosen
+#: point is covered by tests/test_sparsity_adaptive.py at runtime.
+POLICY_POINTS = {
+    "reference": ("reference", "dense"),
+    "reference_packed": ("reference", "packed"),
+    "fused_dense": ("fused", "dense"),
+    "fused_packed": ("fused", "packed"),
+}
+
+
+@dataclasses.dataclass
+class Cell:
+    """One sweep point: an op under one policy/config on one corpus shape."""
+    op: str
+    mode: str                 # the registry mode the policy requests
+    kernels: str              # the policy's kernel axis
+    fmt: str
+    label: str
+    thunk: Callable           # () -> output avals (runs under eval_shape)
+    check: Optional[Callable] = None   # (out) -> list[str] extra violations
+
+
+@dataclasses.dataclass
+class ContractReport:
+    findings: list
+    coverage: set             # (op, mode) pairs the sweep dispatched
+    registered: set           # (op, mode) pairs in the registry
+    cells: int
+    duration_s: float
+
+    @property
+    def uncovered(self) -> set:
+        return self.registered - self.coverage
+
+
+def _pol(name: str, grad: bool):
+    from ..ops.policy import ExecutionPolicy
+
+    kernels, fmt = POLICY_POINTS[name]
+    return ExecutionPolicy(kernels, fmt, differentiable=grad)
+
+
+def _vld_ok(vld, lead: tuple, m: int, n: int, bm: int, bk: int) -> bool:
+    _, _, _, gm, gn = packed_grid(m, n, block_m=bm, block_k=bk)
+    return vld is not None and tuple(vld.shape) == (*lead, gm, gn)
+
+
+def _check_spike_out(st, pol, m: int, n: int, lead: tuple = ()) -> list:
+    """Format/dtype preservation + metadata propagation on one emitted
+    SpikeTensor. Returns (format_violations, meta_violations)."""
+    fmt_bad, meta_bad = [], []
+    if pol.differentiable:
+        # differentiable outputs are dense f32 for autodiff connectivity
+        if st.is_packed or st.data.dtype != jnp.float32:
+            fmt_bad.append(f"+grad output must be dense f32, got "
+                           f"{st.fmt}/{st.data.dtype}")
+        return fmt_bad, meta_bad
+    if st.fmt != pol.format:
+        fmt_bad.append(f"policy format {pol.format!r} but output left "
+                       f"{st.fmt!r}")
+        return fmt_bad, meta_bad
+    if st.is_packed:
+        if st.data.dtype != jnp.int32:
+            fmt_bad.append(f"packed words must be int32, got "
+                           f"{st.data.dtype}")
+        mp, _, words, _, _ = packed_grid(m, n, block_m=st.block_m,
+                                         block_k=st.block_k)
+        if tuple(st.data.shape) != (*lead, mp, words):
+            meta_bad.append(f"packed words shape {tuple(st.data.shape)} != "
+                            f"padded grid {(*lead, mp, words)}")
+        if not _vld_ok(st.vld_cnt, lead, m, n, st.block_m, st.block_k):
+            meta_bad.append(
+                f"packed output must carry a vld_cnt map on its "
+                f"(block_m={st.block_m}, block_k={st.block_k}) grid; got "
+                f"{None if st.vld_cnt is None else tuple(st.vld_cnt.shape)}")
+    elif st.vld_cnt is not None and not _vld_ok(st.vld_cnt, lead, m, n,
+                                               st.block_m, st.block_k):
+        meta_bad.append(f"dense output's vld_cnt grid "
+                        f"{tuple(st.vld_cnt.shape)} inconsistent with "
+                        f"[{m}, {n}] on its declared blocks")
+    return fmt_bad, meta_bad
+
+
+# ------------------------------------------------------------------ drivers
+def _skips_for(pol, contract: KernelContract) -> tuple:
+    if pol.kernels != "fused" or pol.differentiable:
+        return ("dense",)
+    return contract.skips
+
+
+def _matmul_cells(contract, pol, grad: bool) -> Iterator[Cell]:
+    from .. import ops
+
+    shapes = EDGE_SHAPES if not grad else EDGE_SHAPES[::2]
+    for (m, k, n) in shapes:
+        for skip in _skips_for(pol, contract):
+            st = spike_aval(m, k, pol.format)
+            w = sds((k, n))
+            yield Cell(
+                "matmul", pol.mode, pol.kernels, pol.format,
+                f"matmul[{m}x{k}x{n}] skip={skip}",
+                functools.partial(
+                    abstract_eval, ops.matmul, st, w, policy=pol, skip=skip,
+                    what=f"matmul({pol.name}, skip={skip})"),
+                lambda out, m=m, n=n: (
+                    [] if (tuple(out.shape) == (m, n)
+                           and out.dtype == jnp.float32)
+                    else [f"matmul must emit f32 [{m}, {n}] current, got "
+                          f"{out.dtype}{tuple(out.shape)}"], []))
+
+
+def _lif_cells(contract, pol, grad: bool) -> Iterator[Cell]:
+    from .. import ops
+
+    m, _, n = EDGE_SHAPES[-1]
+    yield Cell(
+        "lif", pol.mode, pol.kernels, "dense", f"lif[{m}x{n}]",
+        functools.partial(
+            abstract_eval, ops.lif, sds((m, n)), sds((m, n)),
+            sds((m, n), jnp.int8), policy=pol, what=f"lif({pol.name})"),
+        lambda out, m=m, n=n: (
+            [] if (tuple(out[0].shape) == (m, n)
+                   and tuple(out[1].shape) == (m, n)
+                   and out[1].dtype == jnp.float32)
+            else ["lif must return (spikes, v_next f32) at the input "
+                  "shape"], []))
+
+
+def _fused_pe_cells(contract, pol, grad: bool) -> Iterator[Cell]:
+    from .. import ops
+
+    lif_cfg = LIFConfig()
+    shapes = EDGE_SHAPES if not grad else EDGE_SHAPES[::2]
+    for (m, k, n) in shapes:
+        for heads, _ in HEAD_CONFIGS:
+            if heads is not None and n % heads:
+                continue
+            hcfg = None if heads is None else (heads, n // heads)
+            for skip in _skips_for(pol, contract):
+                if skip != "dense" and hcfg is not None:
+                    continue          # keep the sweep quadratic, not cubic
+                st = spike_aval(m, k, pol.format)
+                q = spike_aval(m, n, pol.format)
+                res = (spike_aval(m, n, pol.format,
+                                  block_k=DEFAULT_BLOCKS.n)
+                       if pol.format == "packed" else sds((m, n)))
+                yield Cell(
+                    "fused_pe", pol.mode, pol.kernels, pol.format,
+                    f"fused_pe[{m}x{k}x{n}] heads={hcfg} skip={skip}",
+                    functools.partial(
+                        abstract_eval, ops.fused_pe, st, sds((k, n)),
+                        bias=sds((n,)), residual=res, q=q,
+                        lif_cfg=lif_cfg, policy=pol, skip=skip, heads=hcfg,
+                        what=f"fused_pe({pol.name}, heads={hcfg}, "
+                             f"skip={skip})"),
+                    lambda out, m=m, n=n: _check_spike_out(
+                        out.spikes, pol, m, n))
+
+
+def _fused_pe_layer_cells(contract, pol, grad: bool) -> Iterator[Cell]:
+    from .. import ops
+
+    lif_cfg = LIFConfig()
+    m, k, n = EDGE_SHAPES[-1]
+    for t in (1, 2):
+        for heads, _ in ((None, None), (2, 2)):
+            if heads is not None and n % heads:
+                continue
+            hcfg = None if heads is None else (heads, n // heads)
+            st = spike_aval(m, k, pol.format, lead=(t,))
+            q = spike_aval(m, n, pol.format, lead=(t,))
+            yield Cell(
+                "fused_pe_layer", pol.mode, pol.kernels, pol.format,
+                f"fused_pe_layer[T={t},{m}x{k}x{n}] heads={hcfg}",
+                functools.partial(
+                    abstract_eval, ops.fused_pe_layer, st, sds((k, n)),
+                    q=q, lif_cfg=lif_cfg, policy=pol, heads=hcfg,
+                    what=f"fused_pe_layer({pol.name}, T={t}, "
+                         f"heads={hcfg})"),
+                lambda out, m=m, n=n, t=t: _check_spike_out(
+                    out.spikes, pol, m, n, lead=(t,)))
+
+
+def _dense_lif_cells(contract, pol, grad: bool) -> Iterator[Cell]:
+    from .. import ops
+
+    lif_cfg = LIFConfig()
+    m, k, n = EDGE_SHAPES[-1]
+    for heads, kv in HEAD_CONFIGS:
+        if heads is not None and n % heads:
+            continue
+        hcfg = None if heads is None else (heads, n // heads)
+        wcols = n if kv in (None, heads) else kv * (n // heads)
+        p = {"w": sds((k, wcols)), "b": sds((wcols,))}
+        q = spike_aval(m, n, pol.format)
+        yield Cell(
+            "dense_lif", pol.mode, pol.kernels, pol.format,
+            f"dense_lif[{m}x{k}x{n}] heads={hcfg} kv={kv}",
+            functools.partial(
+                abstract_eval, ops.dense_lif, p, sds((m, k)), lif_cfg,
+                q=q, heads=hcfg, kv_heads=kv, policy=pol,
+                what=f"dense_lif({pol.name}, heads={hcfg}, kv={kv})"),
+            lambda out, m=m, n=n: _check_spike_out(out, pol, m, n))
+
+
+def _qk_mask_cells(contract, pol, grad: bool) -> Iterator[Cell]:
+    from .. import ops
+
+    for (m, k, _) in EDGE_SHAPES[1:]:
+        q = spike_aval(m, k, pol.format)
+        ks = spike_aval(m, k, pol.format)
+        yield Cell(
+            "qk_mask", pol.mode if grad else pol.kernels, pol.kernels,
+            pol.format, f"qk_mask[{m}x{k}]",
+            functools.partial(abstract_eval, ops.qk_mask, q, ks, policy=pol,
+                              what=f"qk_mask({pol.name})"),
+            lambda out, m=m, k=k: _check_spike_out(out, pol, m, k))
+
+
+def _pack_cells(contract, pol, grad: bool) -> Iterator[Cell]:
+    from .. import ops
+
+    if pol.format == "packed":
+        return                # pack/unpack dispatch on kernels only —
+                              # the dense presets already cover both modes
+    m, k, _ = EDGE_SHAPES[-1]
+    dense = spike_aval(m, k, "dense")
+    packed = spike_aval(m, k, "packed")
+    yield Cell(
+        "pack", pol.kernels, pol.kernels, "packed", f"pack[{m}x{k}]",
+        functools.partial(
+            abstract_eval, ops.pack, dense,
+            policy=dataclasses.replace(pol, format="packed"),
+            what=f"pack({pol.kernels})"),
+        lambda out, m=m, k=k: _check_spike_out(
+            out, _pol("fused_packed", False), m, k))
+    yield Cell(
+        "unpack", pol.kernels, pol.kernels, "dense", f"unpack[{m}x{k}]",
+        functools.partial(abstract_eval, ops.unpack, packed, policy=pol,
+                          what=f"unpack({pol.kernels})"),
+        lambda out, m=m, k=k: (
+            [] if (tuple(out.shape) == (m, k) and out.dtype == jnp.int8)
+            else [f"unpack must emit int8 [{m}, {k}], got "
+                  f"{out.dtype}{tuple(out.shape)}"], []))
+
+
+def _spatial_cells(contract, pol, grad: bool) -> Iterator[Cell]:
+    from .. import ops
+
+    b, h, w, c = 2, 8, 8, 24          # ragged channel count (pad lanes)
+    spatial = (b, h, w, c)
+    st = spike_aval(b * h * w, c, pol.format, lead=(1,))
+    yield Cell(
+        "im2col", pol.mode, pol.kernels, pol.format, f"im2col{spatial}",
+        functools.partial(abstract_eval, ops.im2col, st, spatial, 3, 3, 1,
+                          t=1, policy=pol, what=f"im2col({pol.name})"),
+        lambda out: _check_spike_out(out[0], pol, *out[0].shape[-2:],
+                                     lead=out[0].shape[:-2]))
+    yield Cell(
+        "pool", pol.mode, pol.kernels, pol.format, f"pool{spatial}",
+        functools.partial(abstract_eval, ops.pool, st, spatial, t=1,
+                          window=2, policy=pol, what=f"pool({pol.name})"),
+        lambda out: _check_spike_out(out[0], pol, *out[0].shape[-2:],
+                                     lead=out[0].shape[:-2]))
+
+
+def _attention_cells(contract, pol, grad: bool) -> Iterator[Cell]:
+    from .. import ops
+
+    for (b, s, h, d) in ((1, 16, 2, 8), (2, 24, 4, 16)):
+        yield Cell(
+            "attention", pol.kernels, pol.kernels, "dense",
+            f"attention[b{b} s{s} h{h} d{d}]",
+            functools.partial(
+                abstract_eval, ops.attention, sds((b, s, h, d)),
+                sds((b, s, h, d)), sds((b, s, h, d)), q_block=s,
+                kv_block=s, policy=pol,
+                what=f"attention({pol.kernels}, s={s})"),
+            lambda out, b=b, s=s, h=h, d=d: (
+                [] if tuple(out.shape) == (b, s, h, d)
+                else [f"attention output {tuple(out.shape)} != "
+                      f"{(b, s, h, d)}"], []))
+
+
+def _w2ttfs_cells(contract, pol, grad: bool) -> Iterator[Cell]:
+    from .. import ops
+
+    b, h, w, c, classes, window = 4, 8, 8, 16, 10, 2
+    fc_w = sds(((h // window) * (w // window) * c, classes))
+    yield Cell(
+        "w2ttfs_head", pol.mode, pol.kernels, "dense",
+        f"w2ttfs_head[{b}x{h}x{w}x{c}]",
+        functools.partial(
+            abstract_eval, ops.w2ttfs_head, sds((b, h, w, c), jnp.int8),
+            fc_w, sds((classes,)), window=window, policy=pol,
+            what=f"w2ttfs_head({pol.name})"),
+        lambda out, b=b, classes=classes: (
+            [] if tuple(out.shape) == (b, classes)
+            else [f"w2ttfs_head logits {tuple(out.shape)} != "
+                  f"{(b, classes)}"], []))
+
+
+_DRIVERS = {
+    "matmul": _matmul_cells,
+    "lif": _lif_cells,
+    "fused_pe": _fused_pe_cells,
+    "fused_pe_layer": _fused_pe_layer_cells,
+    "dense_lif": _dense_lif_cells,
+    "qk_mask": _qk_mask_cells,
+    "pack": _pack_cells,               # also drives "unpack"
+    "im2col": _spatial_cells,          # also drives "pool"
+    "attention": _attention_cells,
+    "w2ttfs_head": _w2ttfs_cells,
+}
+
+
+def _iter_cells(contracts: dict, only_ops: Optional[set]) -> Iterator[Cell]:
+    for fam, contract in contracts.items():
+        for op in contract.ops:
+            driver = _DRIVERS.get(op)
+            if driver is None:
+                continue              # secondary op of a shared driver
+            if only_ops is not None and op not in only_ops:
+                continue
+            for preset, (kernels, fmt) in POLICY_POINTS.items():
+                if fmt == "packed" and "packed" not in contract.formats:
+                    continue
+                grads = ((False, True)
+                         if op in contract.gradient_ops() else (False,))
+                for grad in grads:
+                    yield from driver(contract, _pol(preset, grad), grad)
+
+
+# --------------------------------------------------------- one-off checks
+def _grad_coverage(contracts: dict, impls: dict) -> list:
+    bad = []
+    for fam, contract in contracts.items():
+        for op in contract.gradient_ops():
+            for mode in ("reference+grad", "fused+grad"):
+                if (op, mode) not in impls:
+                    bad.append(Finding(
+                        "NL-GRAD-COVERAGE", "<registry>", 0,
+                        f"family {fam!r} declares op {op!r} differentiable "
+                        f"but ({op!r}, {mode!r}) is not registered — the "
+                        f"+grad-reachable path has no vjp"))
+    return bad
+
+
+def _vmem_budget(contracts: dict) -> list:
+    from ..launch.roofline import VMEM_BYTES
+
+    bad = []
+    b = DEFAULT_BLOCKS
+    for fam, contract in contracts.items():
+        if contract.vmem_bytes is None:
+            continue
+        for packed in ((False, True) if "packed" in contract.formats
+                       else (False,)):
+            modeled = contract.vmem_bytes(b.m, b.n, b.k, packed)
+            if modeled > VMEM_BYTES:
+                bad.append(Finding(
+                    "NL-VMEM-BUDGET", "<registry>", 0,
+                    f"{fam} at blocks ({b.m},{b.n},{b.k}) "
+                    f"packed={packed} models {modeled / 2**20:.1f} MiB "
+                    f"resident > VMEM budget "
+                    f"{VMEM_BYTES / 2**20:.0f} MiB"))
+    return bad
+
+
+def _block_contract_guard() -> list:
+    """The packed block-shape contract must be ENFORCED: dispatching a
+    tensor packed on one grid into a kernel tiling another must raise, not
+    silently misroute on a garbage vld map."""
+    from .. import ops
+
+    bad = []
+    st64 = spike_aval(128, 128, "packed", block_m=64, block_k=128)
+    try:
+        abstract_eval(ops.matmul, st64, sds((128, 72)),
+                      policy="fused_packed", what="block-contract probe")
+        bad.append(Finding(
+            "NL-BLOCK-CONTRACT", "<registry>", 0,
+            "a tensor packed on block_m=64 dispatched into the default "
+            "128-tiling did NOT raise — check_block_contract guard is "
+            "missing or bypassed"))
+    except AbstractEvalError as e:
+        if not isinstance(e.cause, ValueError):
+            bad.append(Finding(
+                "NL-BLOCK-CONTRACT", "<registry>", 0,
+                f"block-shape mismatch must raise ValueError naming both "
+                f"tilings, got {type(e.cause).__name__}: {e.cause}"))
+    return bad
+
+
+# ----------------------------------------------------------------- the sweep
+def verify_contracts(only_ops: Optional[set] = None) -> ContractReport:
+    """Run the registry-wide abstract sweep. ``only_ops`` restricts to a
+    subset of entry-point names (test hooks); the default sweeps every
+    registered pair and reports any it could not cover."""
+    from ..ops import fallback
+    from ..ops.registry import implementations, record_dispatches
+
+    t0 = time.time()
+    contracts = kernel_contracts()
+    impls = implementations()
+    registered = set(impls)
+    findings: list = []
+    coverage: set = set()
+    cells = 0
+    demoted_before = len(fallback.demotions())
+
+    for cell in _iter_cells(contracts, only_ops):
+        cells += 1
+        with record_dispatches() as log:
+            try:
+                out = cell.thunk()
+            except AbstractEvalError as e:
+                # a ValueError is the block/shape-contract guard firing on
+                # a shape the surface advertises; anything else means the
+                # advertised (op, policy) point simply does not resolve
+                rule = ("NL-BLOCK-CONTRACT"
+                        if isinstance(e.cause, ValueError)
+                        else "NL-DISPATCH-TOTALITY")
+                findings.append(Finding(rule, "<registry>", 0,
+                                        f"{cell.label}: {e}"))
+                coverage.update(log)
+                continue
+        coverage.update(log)
+        for rop, rmode in log:
+            base = rmode[:-len(GRAD_SUFFIX)] \
+                if rmode.endswith(GRAD_SUFFIX) else rmode
+            if base != cell.kernels:
+                findings.append(Finding(
+                    "NL-SILENT-DOWNGRADE", "<registry>", 0,
+                    f"{cell.label}: policy requested kernels="
+                    f"{cell.kernels!r} but the dispatch resolved "
+                    f"({rop!r}, {rmode!r}) — a silent "
+                    f"{cell.kernels}->{base} downgrade"))
+        if cell.check is not None:
+            fmt_bad, meta_bad = cell.check(out)
+            findings += [Finding("NL-FORMAT-PRESERVE", "<registry>", 0,
+                                 f"{cell.label}: {msg}") for msg in fmt_bad]
+            findings += [Finding("NL-META-PROP", "<registry>", 0,
+                                 f"{cell.label}: {msg}") for msg in meta_bad]
+
+    if only_ops is None:
+        findings += _grad_coverage(contracts, impls)
+        findings += _vmem_budget(contracts)
+        findings += _block_contract_guard()
+        for op, mode in sorted(registered - coverage):
+            findings.append(Finding(
+                "NL-DISPATCH-TOTALITY", "<registry>", 0,
+                f"registered implementation ({op!r}, {mode!r}) was not "
+                f"reachable by the sweep — add a driver/config so the "
+                f"static pass covers it"))
+
+    if len(fallback.demotions()) > demoted_before:
+        # an abstract failure tripped the graceful-degradation guard; a
+        # sticky demotion from a STATIC pass must not leak into runtime
+        fallback.reset_demotions()
+
+    return ContractReport(findings, coverage, registered, cells,
+                          time.time() - t0)

@@ -1,0 +1,110 @@
+"""The finding model shared by both neurallint engines, and the rule
+catalog (see docs/static_analysis.md for the prose version)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+from xml.sax.saxutils import escape
+
+#: rule id -> one-line description. BOTH engines draw ids from this table;
+#: ``tools/neurallint.py --rules`` prints it and the test suite asserts
+#: every emitted finding carries a catalogued id.
+RULES = {
+    # -- engine 1: abstract contract verifier (repro.analysis.contracts) --
+    "NL-DISPATCH-TOTALITY": (
+        "every advertised (op, policy) point resolves in the registry — "
+        "no NotImplementedError at dispatch time"),
+    "NL-SILENT-DOWNGRADE": (
+        "a dispatch under policy P must only resolve P's kernel axis: a "
+        "'fused' request recording a 'reference' lookup (or vice versa) is "
+        "the silent-downgrade bug class of PR 8"),
+    "NL-FORMAT-PRESERVE": (
+        "spike outputs leave in the policy's format with the contracted "
+        "dtype (int8 dense / int32 words packed; dense f32 under +grad)"),
+    "NL-META-PROP": (
+        "every packed output carries a vld_cnt block map whose grid is "
+        "shape-consistent with the payload"),
+    "NL-GRAD-COVERAGE": (
+        "every op of a grad-declaring family registers both "
+        "'reference+grad' and 'fused+grad' implementations"),
+    "NL-BLOCK-CONTRACT": (
+        "the packed block-shape contract is satisfiable on the corpus and "
+        "its runtime guard actually rejects mismatched tilings"),
+    "NL-VMEM-BUDGET": (
+        "each family's declared BlockSpec residency model fits the "
+        "per-core VMEM budget (launch.roofline.VMEM_BYTES)"),
+    # -- engine 2: AST lint (repro.analysis.lint) --
+    "NL-REGISTRY-BYPASS": (
+        "repro.kernels.* Pallas entry points imported outside repro.ops / "
+        "repro.kernels — call sites must go through the policy registry"),
+    "NL-HOST-SYNC": (
+        "float()/.item()/np.asarray()/np.array()/jax.device_get() inside "
+        "a jit-decorated function or an engine tick/route path — a hidden "
+        "host sync in traced or per-tick code"),
+    "NL-BARE-HEAVISIDE": (
+        "a Heaviside spelled as a comparison cast on the differentiable "
+        "surface — use core.surrogate.spike so the registered "
+        "pseudo-derivative flows"),
+    "NL-INTERPRET-HARDCODE": (
+        "interpret=True hardcoded in non-test code — interpret mode must "
+        "stay a backend-derived default"),
+    "NL-MUTABLE-DEFAULT": (
+        "mutable default (list/dict/set literal or constructor) in a "
+        "function signature or dataclass field — shared-state pytree bug"),
+    "NL-LEGACY-FLAGS": (
+        "deleted pre-policy flag kwargs (use_event_kernels= / "
+        "spike_format= / pack_out=) outside the compat shim"),
+    "NL-LEGACY-FORKS": (
+        "deleted snn_cnn forward forks (_apply_fused_event / "
+        "_apply_fused_reference / snn_cnn.apply(_fused)) reappearing"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One violation: a catalogued rule, a location, and the message."""
+    rule: str
+    path: str                      # repo-relative, or "<registry>" for
+                                   # engine-1 findings with no source line
+    line: int
+    message: str
+
+    def __post_init__(self):
+        assert self.rule in RULES, f"unknown rule id {self.rule!r}"
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}"
+
+
+def render(findings: list) -> str:
+    """Human-readable report, grouped by rule."""
+    if not findings:
+        return "neurallint: clean"
+    lines = [f"neurallint: {len(findings)} finding(s)"]
+    lines += [str(f) for f in findings]
+    return "\n".join(lines)
+
+
+def junit_xml(findings: list, *, checked: int, suite: str = "neurallint"
+              ) -> str:
+    """Findings as a junit report (one testcase per rule; a rule with
+    findings fails with every location in the failure body) — the CI
+    artifact format."""
+    by_rule: dict[str, list] = {r: [] for r in RULES}
+    for f in findings:
+        by_rule[f.rule].append(f)
+    cases = []
+    for rule, desc in RULES.items():
+        hits = by_rule[rule]
+        if hits:
+            body = escape("\n".join(str(f) for f in hits))
+            cases.append(
+                f'  <testcase classname="{suite}" name="{rule}">\n'
+                f'    <failure message="{len(hits)} finding(s)">'
+                f'{body}</failure>\n  </testcase>')
+        else:
+            cases.append(f'  <testcase classname="{suite}" name="{rule}"/>')
+    return (f'<?xml version="1.0" encoding="utf-8"?>\n'
+            f'<testsuite name="{suite}" tests="{len(RULES)}" '
+            f'failures="{sum(1 for r in by_rule.values() if r)}" '
+            f'checked="{checked}">\n' + "\n".join(cases) + "\n</testsuite>\n")

@@ -1,0 +1,289 @@
+"""Engine 2: project AST lint.
+
+Seven rules over the project source (see ``findings.RULES`` for the
+catalog). Python files get the AST rules plus the legacy-surface regex
+rules; markdown/docs get the regex rules only (the legacy guards police
+prose and examples too — that is where deleted APIs sneak back in).
+
+Suppression: append ``# neurallint: disable=RULE`` (comma-separate for
+several) to the flagged line — or put it alone on the line above for lines
+with no room. Suppressions are per-line and per-rule; there is no
+file-level opt-out, allowlists for the few structurally-exempt files live
+in ``_PATH_EXEMPT`` below.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Iterable, Optional
+
+from .findings import Finding
+
+# which top-level entries a default repo scan walks (mirrors the legacy
+# flag-guard's surface, plus tools/)
+DEFAULT_SCAN = ("src", "benchmarks", "examples", "docs", "tools",
+                "README.md")
+
+_SUPPRESS_RE = re.compile(r"#\s*neurallint:\s*disable=([A-Z0-9-,\s]+)")
+
+# -- the two legacy-surface regex rules (absorbed from the retired
+#    tools/check_no_legacy_flags.py) --
+_LEGACY_FLAGS_RE = re.compile(
+    r"\b(use_event_kernels|spike_format|pack_out)=(?!=)")  # neurallint: disable=NL-LEGACY-FLAGS
+_LEGACY_FORKS_RE = re.compile(
+    r"_apply_fused_event|_apply_fused_reference"            # neurallint: disable=NL-LEGACY-FORKS
+    r"|snn_cnn\.apply(?:_fused)?\s*\(")
+
+#: rule -> path substrings that are structurally exempt (the compat shim
+#: DOCUMENTS the legacy kwargs; ops/kernels ARE the registry; etc.)
+_PATH_EXEMPT = {
+    "NL-LEGACY-FLAGS": ("repro/ops/compat.py", "docs/ops_api.md",
+                        "repro/analysis/", "tools/neurallint.py",
+                        "tools/check_no_legacy_flags.py",
+                        "docs/static_analysis.md"),
+    "NL-LEGACY-FORKS": ("docs/training_framework.md", "repro/analysis/",
+                        "tools/neurallint.py",
+                        "tools/check_no_legacy_flags.py",
+                        "docs/static_analysis.md"),
+    # call sites must route through repro.ops — but the registry layers
+    # themselves, the analysis pass, and the contract module are the
+    # legitimate importers
+    "NL-REGISTRY-BYPASS": ("repro/ops/", "repro/kernels/",
+                           "repro/analysis/"),
+    # Pallas kernel interiors compute inference Heavisides legitimately —
+    # the rule polices the differentiable (jnp) surface
+    "NL-BARE-HEAVISIDE": ("repro/kernels/",),
+}
+
+
+def _exempt(rule: str, path: str) -> bool:
+    p = path.replace("\\", "/")
+    return any(frag in p for frag in _PATH_EXEMPT.get(rule, ()))
+
+
+def _suppressed(lines: list, lineno: int) -> set:
+    """Rules suppressed at 1-indexed ``lineno`` (same line or the line
+    above when that line holds only the directive)."""
+    out: set = set()
+    for ln in (lineno, lineno - 1):
+        if not 1 <= ln <= len(lines):
+            continue
+        m = _SUPPRESS_RE.search(lines[ln - 1])
+        if m and (ln == lineno or lines[ln - 1].lstrip().startswith("#")):
+            out.update(r.strip() for r in m.group(1).split(","))
+    return out
+
+
+# ------------------------------------------------------------- regex rules
+def _lint_text(src: str, path: str) -> list:
+    findings = []
+    lines = src.splitlines()
+    for rule, rx in (("NL-LEGACY-FLAGS", _LEGACY_FLAGS_RE),
+                     ("NL-LEGACY-FORKS", _LEGACY_FORKS_RE)):
+        if _exempt(rule, path):
+            continue
+        for i, line in enumerate(lines, 1):
+            if rx.search(line) and rule not in _suppressed(lines, i):
+                findings.append(Finding(
+                    rule, path, i,
+                    f"legacy surface reintroduced: {line.strip()[:80]!r}"))
+    return findings
+
+
+# --------------------------------------------------------------- AST rules
+def _is_jit_decorator(dec: ast.expr) -> bool:
+    """@jax.jit / @jit / @functools.partial(jax.jit, ...) / @partial(jit)"""
+    def _name(e):
+        if isinstance(e, ast.Attribute):
+            return e.attr
+        if isinstance(e, ast.Name):
+            return e.id
+        return ""
+    if _name(dec) == "jit":
+        return True
+    if isinstance(dec, ast.Call):
+        if _name(dec.func) == "jit":
+            return True
+        if _name(dec.func) == "partial" and dec.args \
+                and _name(dec.args[0]) == "jit":
+            return True
+    return False
+
+
+def _dotted(e: ast.expr) -> str:
+    if isinstance(e, ast.Name):
+        return e.id
+    if isinstance(e, ast.Attribute):
+        return f"{_dotted(e.value)}.{e.attr}"
+    return ""
+
+
+_HOST_SYNC_CALLS = {"np.asarray", "np.array", "numpy.asarray",
+                    "numpy.array", "onp.asarray", "onp.array",
+                    "jax.device_get"}
+_TICK_NAMES = ("tick", "route", "step_tick")
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str, lines: list):
+        self.path, self.lines = path, lines
+        self.findings: list = []
+        self._traced_depth = 0        # inside a jit / tick / route body
+
+    def _emit(self, rule: str, node: ast.AST, msg: str):
+        if _exempt(rule, self.path):
+            return
+        line = getattr(node, "lineno", 0)
+        if rule in _suppressed(self.lines, line):
+            return
+        self.findings.append(Finding(rule, self.path, line, msg))
+
+    # -- imports: NL-REGISTRY-BYPASS --
+    def _check_kernel_import(self, node, modname: str):
+        mod = modname or ""
+        if "kernels" not in mod.split("."):
+            return
+        # the contract module is declaration-only data (no Pallas)
+        if mod.endswith("kernels.contract") or mod.endswith(
+                "kernels") and any(
+                a.name == "contract" for a in getattr(node, "names", [])):
+            return
+        self._emit(
+            "NL-REGISTRY-BYPASS", node,
+            f"import of {mod!r} bypasses the policy registry — call "
+            f"through repro.ops so dispatch, fallback, and autotuning "
+            f"stay in the loop")
+
+    def visit_Import(self, node: ast.Import):
+        for a in node.names:
+            self._check_kernel_import(node, a.name)
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        mod = ("." * node.level) + (node.module or "")
+        self._check_kernel_import(node, mod)
+        self.generic_visit(node)
+
+    # -- function defs: jit scope, mutable defaults, interpret defaults --
+    def _visit_fn(self, node):
+        for default in list(node.args.defaults) + [
+                d for d in node.args.kw_defaults if d is not None]:
+            if isinstance(default, (ast.List, ast.Dict, ast.Set)) or (
+                    isinstance(default, ast.Call)
+                    and _dotted(default.func) in ("list", "dict", "set")):
+                self._emit(
+                    "NL-MUTABLE-DEFAULT", default,
+                    f"mutable default in {node.name}() signature — one "
+                    f"shared instance across every call (and every pytree "
+                    f"built from it)")
+        kwonly = zip(node.args.kwonlyargs, node.args.kw_defaults)
+        for arg, default in list(zip(reversed(node.args.args),
+                                     reversed(node.args.defaults))
+                                 ) + list(kwonly):
+            if arg.arg == "interpret" and isinstance(default, ast.Constant) \
+                    and default.value is True:
+                self._emit(
+                    "NL-INTERPRET-HARDCODE", default,
+                    f"{node.name}() defaults interpret=True — interpret "
+                    f"mode must stay backend-derived (None) outside tests")
+        traced = (any(_is_jit_decorator(d) for d in node.decorator_list)
+                  or node.name in _TICK_NAMES)
+        self._traced_depth += traced
+        self.generic_visit(node)
+        self._traced_depth -= traced
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    def visit_ClassDef(self, node: ast.ClassDef):
+        for stmt in node.body:
+            value = getattr(stmt, "value", None)
+            if isinstance(stmt, (ast.AnnAssign, ast.Assign)) and isinstance(
+                    value, (ast.List, ast.Dict, ast.Set)):
+                self._emit(
+                    "NL-MUTABLE-DEFAULT", stmt,
+                    f"mutable class-level default in {node.name} — use "
+                    f"dataclasses.field(default_factory=...)")
+        self.generic_visit(node)
+
+    # -- calls: host sync, bare Heaviside, interpret=True at call sites --
+    def visit_Call(self, node: ast.Call):
+        name = _dotted(node.func)
+        if self._traced_depth:
+            is_item = (isinstance(node.func, ast.Attribute)
+                       and node.func.attr == "item" and not node.args)
+            is_float = (name == "float" and node.args and not isinstance(
+                node.args[0], ast.Constant))
+            if is_item or is_float or name in _HOST_SYNC_CALLS:
+                self._emit(
+                    "NL-HOST-SYNC", node,
+                    f"{name or '.item'}() inside a traced/per-tick "
+                    f"function forces a device->host sync every call")
+        if name == "jnp.heaviside" or (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr == "astype"
+                and isinstance(node.func.value, ast.Compare)
+                # only > / >= — a `< rate` cast is a random mask, not a
+                # membrane threshold
+                and all(isinstance(o, (ast.Gt, ast.GtE))
+                        for o in node.func.value.ops)):
+            self._emit(
+                "NL-BARE-HEAVISIDE", node,
+                "bare Heaviside (comparison cast) — use "
+                "core.surrogate.spike so the registered pseudo-derivative "
+                "flows under +grad policies")
+        for kw in node.keywords:
+            if kw.arg == "interpret" and isinstance(kw.value, ast.Constant) \
+                    and kw.value.value is True:
+                self._emit(
+                    "NL-INTERPRET-HARDCODE", kw.value,
+                    f"interpret=True hardcoded at a {name or 'call'}() "
+                    f"site — pass None and let the backend decide")
+        self.generic_visit(node)
+
+
+def lint_source(src: str, path: str = "<string>") -> list:
+    """Lint one Python source string. Returns findings (suppressions and
+    path exemptions already applied)."""
+    findings = _lint_text(src, path)
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return findings + [Finding(
+            "NL-REGISTRY-BYPASS", path, e.lineno or 0,
+            f"unparseable Python (lint skipped): {e.msg}")]
+    v = _Visitor(path, src.splitlines())
+    v.visit(tree)
+    return findings + v.findings
+
+
+def lint_paths(paths: Optional[Iterable] = None,
+               root: Optional[Path] = None) -> tuple:
+    """Lint files/dirs (default: ``DEFAULT_SCAN`` under ``root``). Python
+    files get AST + regex rules; .md files regex rules only. Test files are
+    out of scope (fixtures legitimately contain every bad pattern).
+    Returns (findings, files_checked)."""
+    root = Path(root) if root else Path.cwd()
+    targets = [Path(p) for p in paths] if paths else \
+        [root / p for p in DEFAULT_SCAN]
+    files: list = []
+    for t in targets:
+        if t.is_dir():
+            files += sorted(t.rglob("*.py")) + sorted(t.rglob("*.md"))
+        elif t.exists():
+            files.append(t)
+    findings, checked = [], 0
+    for f in files:
+        rel = str(f.relative_to(root) if f.is_absolute() and root in
+                  f.parents else f)
+        if "tests/" in rel.replace("\\", "/") or \
+                f.name.startswith("test_"):
+            continue
+        checked += 1
+        src = f.read_text(encoding="utf-8")
+        if f.suffix == ".py":
+            findings += lint_source(src, rel)
+        else:
+            findings += _lint_text(src, rel)
+    return findings, checked

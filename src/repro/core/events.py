@@ -146,6 +146,7 @@ def block_occupancy(spikes: Array, block_m: int = DEFAULT_BLOCKS.m,
     flat = spikes.reshape(-1, spikes.shape[-1])
     flat = pad_to_blocks(flat, block_m, block_k)
     cnt = block_count_map_2d(flat, block_m, block_k)
+    # occupancy metric, never differentiated  # neurallint: disable=NL-BARE-HEAVISIDE
     return jnp.mean((cnt > 0).astype(jnp.float32))
 
 

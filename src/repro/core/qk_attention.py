@@ -41,7 +41,8 @@ def qk_token_mask(q_spikes: Array, mode: str = "threshold",
     """
     rowsum = q_spikes.sum(axis=-1, keepdims=True)
     if mode == "or":
-        return (rowsum > 0).astype(q_spikes.dtype)
+        # hardware atten_reg: deliberately no gradient into Q
+        return (rowsum > 0).astype(q_spikes.dtype)  # neurallint: disable=NL-BARE-HEAVISIDE
     return spike(rowsum - threshold, surrogate, alpha)
 
 
@@ -51,7 +52,8 @@ def qk_channel_mask(q_spikes: Array, mode: str = "threshold",
     """Per-channel activation mask. q_spikes: [..., N, D] -> [..., 1, D]."""
     colsum = q_spikes.sum(axis=-2, keepdims=True)
     if mode == "or":
-        return (colsum > 0).astype(q_spikes.dtype)
+        # hardware atten_reg: deliberately no gradient into Q
+        return (colsum > 0).astype(q_spikes.dtype)  # neurallint: disable=NL-BARE-HEAVISIDE
     return spike(colsum - threshold, surrogate, alpha)
 
 

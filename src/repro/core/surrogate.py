@@ -51,6 +51,7 @@ def _rect_grad(v: Array, alpha: float) -> Array:
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
 def spike(v_minus_vth: Array, surrogate: str = "atan", alpha: float = 2.0) -> Array:
     """Heaviside spike with surrogate gradient. Output is {0,1} in v's dtype."""
+    # the primitive the rule points everyone at  # neurallint: disable=NL-BARE-HEAVISIDE
     return (v_minus_vth >= 0).astype(v_minus_vth.dtype)
 
 

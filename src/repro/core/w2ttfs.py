@@ -103,7 +103,8 @@ def w2ttfs_time_reuse(spike_map: Array, fc_w: Array, fc_b: Array,
     unit = 1.0 / float(window * window)
 
     def step(acc, u):
-        active = (flat_cnt > u).astype(fc_w.dtype)   # windows still replaying
+        # TTFS replay decode on integer counts, inference-only
+        active = (flat_cnt > u).astype(fc_w.dtype)  # neurallint: disable=NL-BARE-HEAVISIDE
         return acc + (active @ fc_w) * unit, None
 
     init = jnp.zeros((b, fc_w.shape[1]), fc_w.dtype)

@@ -1,0 +1,144 @@
+"""Kernel-contract declarations: what each family PROMISES the registry.
+
+The sparsity/event machinery lives or dies on metadata contracts —
+``vld_cnt`` block maps, ``occ`` word-occupancy bitmaps, packed pad lanes,
+head lane masks — being honored at every ``(op, mode)`` boundary. Runtime
+asserts (``check_block_contract``, the packed-pad-lane integrity guard)
+catch violations *on the shapes that happen to run*; the static pass in
+``repro.analysis.contracts`` proves them over the whole registry before
+anything runs on hardware. This module is the declaration side of that
+pass: each kernel family publishes ONE ``KernelContract`` stating which
+registry ops it backs, which policy axes those ops support, and a static
+VMEM-residency model derived from its BlockSpecs.
+
+Declarations are plain data — this module imports nothing from the ops or
+analysis layers, so a family's ``ops.py`` can declare at import time
+without cycles. ``kernel_contracts()`` is the aggregation point the
+verifier (and ``tools/neurallint.py``) walks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+#: spikes per packed int32 word (mirrors core.events.LANE_BITS without the
+#: import — contract declarations must stay dependency-free)
+LANE_BITS = 32
+
+#: the seven kernel families; ``kernel_contracts`` imports each family's
+#: ``ops`` module so a missing declaration is a hard error, not a silent
+#: coverage gap
+FAMILIES = ("spike_matmul", "lif_update", "fused_pe", "packed",
+            "qk_attention", "flash_attention", "w2ttfs_pool")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelContract:
+    """One family's registry contract.
+
+    family       : kernel-family package name under ``repro.kernels``.
+    ops          : registry op names the family backs (the keys its
+                   ``repro.ops.impls`` registrations use).
+    modes        : base kernel modes registered per op ("reference"/"fused";
+                   the "+grad" variants are derived from ``grad``).
+    formats      : spike-map formats the ops accept/emit.
+    skips        : byte-skip strategies the matmul-sweep ops accept.
+    grad         : True when the family participates in the "+grad" axis
+                   (every op must then also resolve "<mode>+grad").
+    grad_ops     : when only a subset of ``ops`` participates in "+grad",
+                   name them here (overrides ``grad`` per op; e.g. the
+                   packed family's im2col/pool differentiate but
+                   pack/unpack are inference-only format conversions).
+    emits_spikes : True when outputs are SpikeTensors — the metadata-
+                   propagation contract (vld_cnt present + shape-consistent
+                   on every packed output) applies.
+    head_blocked : True when the op takes ``heads=(h, dh)`` (the verifier
+                   sweeps multi-head configs through it).
+    vmem_bytes   : static VMEM-residency model derived from the kernel's
+                   BlockSpecs: worst-case bytes resident per grid step for
+                   a given tiling. Signature ``(block_m, block_n, block_k,
+                   packed) -> int``; None for families whose working set is
+                   not block-tiled (checked against the corpus shapes
+                   instead).
+    """
+    family: str
+    ops: tuple
+    modes: tuple = ("reference", "fused")
+    formats: tuple = ("dense", "packed")
+    skips: tuple = ("dense",)
+    grad: bool = False
+    grad_ops: Optional[tuple] = None
+    emits_spikes: bool = False
+    head_blocked: bool = False
+    vmem_bytes: Optional[Callable[[int, int, int, bool], int]] = None
+
+    def gradient_ops(self) -> tuple:
+        """The ops that must resolve both ``+grad`` registry modes."""
+        if self.grad_ops is not None:
+            return self.grad_ops
+        return self.ops if self.grad else ()
+
+
+_CONTRACTS: dict[str, KernelContract] = {}
+
+
+def declare(contract: KernelContract) -> KernelContract:
+    """Register a family's contract (called at family-ops import time)."""
+    _CONTRACTS[contract.family] = contract
+    return contract
+
+
+def kernel_contracts() -> dict[str, KernelContract]:
+    """All declared contracts, forcing every family's declaration in.
+
+    Importing each family's ``ops`` module here (not at module import) keeps
+    ``repro.kernels.contract`` importable without dragging Pallas in, while
+    guaranteeing the verifier sees a contract for every family — an
+    undeclared family raises instead of shrinking the sweep.
+    """
+    import importlib
+
+    for fam in FAMILIES:
+        importlib.import_module(f"repro.kernels.{fam}.ops")
+        if fam not in _CONTRACTS:
+            raise RuntimeError(
+                f"kernel family {fam!r} declares no KernelContract — every "
+                f"family must declare() one in its ops module so the static "
+                f"verifier covers it")
+    return dict(_CONTRACTS)
+
+
+# ---------------------------------------------------------- VMEM tile models
+def matmul_vmem(block_m: int, block_n: int, block_k: int,
+                packed: bool) -> int:
+    """Spike-matmul sweep residency: one x tile (packed words + the int8
+    unpack scratch, or the int8 tile directly), one f32 w tile, one f32
+    accumulator tile, plus the scalar-prefetched metadata row."""
+    if packed:
+        x = block_m * (block_k // LANE_BITS) * 4 + block_m * block_k
+    else:
+        x = block_m * block_k
+    meta = 4 * (block_k // 8 + 2)            # vld row + nact/kmap scalars
+    return x + block_k * block_n * 4 + block_m * block_n * 4 + meta
+
+
+def fused_pe_vmem(block_m: int, block_n: int, block_k: int,
+                  packed: bool) -> int:
+    """Fused PE adds to the matmul sweep: bias row, residual tile, LIF
+    state tiles (v f32 + s int8), the Q tile for the write-back mask, and
+    the emitted spike tile (packed: words + vld row)."""
+    extra = (block_n * 4                      # bias
+             + block_m * block_n * 4          # residual
+             + block_m * block_n * 5          # v_prev f32 + s_prev int8
+             + block_m * 128                  # q row block (lane-padded)
+             + block_m * block_n)             # emitted int8 spike tile
+    if packed:
+        extra += block_m * (block_n // LANE_BITS) * 4 + 4 * (block_n // 8)
+    return matmul_vmem(block_m, block_n, block_k, packed) + extra
+
+
+def pack_vmem(block_m: int, block_n: int, block_k: int, packed: bool) -> int:
+    """Pack/unpack trio: one int8 tile in, words + vld/occ rows out."""
+    return (block_m * block_k
+            + block_m * (block_k // LANE_BITS) * 4
+            + 2 * 4 * (block_k // 8))

@@ -6,9 +6,18 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..contract import KernelContract, declare
 from .flash_attention import flash_attention_pallas
 
 Array = jax.Array
+
+CONTRACT = declare(KernelContract(
+    family="flash_attention", ops=("attention",), formats=("dense",),
+    # streaming softmax tiles: one [q_block, D] q tile, one [kv_block, D]
+    # k + v tile pair, the f32 accumulator and the m/l running stats rows
+    # (512-blocks, D bounded by the corpus' widest head dim)
+    vmem_bytes=lambda bm, bn, bk, packed: (512 * 128 * 4 * 4
+                                           + 2 * 512 * 4)))
 
 
 @functools.partial(jax.jit, static_argnames=("q_block", "kv_block", "causal",

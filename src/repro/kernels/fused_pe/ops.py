@@ -25,11 +25,17 @@ import jax.numpy as jnp
 
 from ...core.events import (LANE_BITS, PackedSpikes, pad_to_blocks,
                             vld_or_compute, word_occupancy_map_dense)
+from ..contract import KernelContract, declare, fused_pe_vmem
 from ..spike_matmul.ops import check_block_contract, check_skip
 from .fused_pe import fused_pe_pallas
 
 Array = jax.Array
 Spikes = Union[Array, PackedSpikes]
+
+CONTRACT = declare(KernelContract(
+    family="fused_pe", ops=("fused_pe", "fused_pe_layer", "dense_lif"),
+    skips=("dense", "gated", "two_level"), grad=True, emits_spikes=True,
+    head_blocked=True, vmem_bytes=fused_pe_vmem))
 
 
 def _out_format(pack_out: Optional[bool], out_format: Optional[str],

@@ -6,9 +6,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..contract import KernelContract, declare
 from .lif_update import lif_update_pallas
 
 Array = jax.Array
+
+CONTRACT = declare(KernelContract(
+    family="lif_update", ops=("lif",), formats=("dense",), grad=True,
+    # elementwise row-block sweep: x/v f32 in, spikes int8 + v f32 out,
+    # over a (block, D) tile — D bounded by the corpus' widest feature dim
+    vmem_bytes=lambda bm, bn, bk, packed: 256 * bn * (4 + 4 + 1 + 4)))
 
 
 @functools.partial(jax.jit, static_argnames=("tau", "v_th", "soft_reset",

@@ -12,9 +12,17 @@ import jax
 import jax.numpy as jnp
 
 from ...core.events import PackedSpikes, pad_to_blocks
+from ..contract import KernelContract, declare, pack_vmem
 from .packed import pack_spikes_pallas, unpack_spikes_pallas
 
 Array = jax.Array
+
+# im2col/pool ride on this family's contract: they are pure event-format
+# data movement (word-level patch extraction / bitwise-OR pooling) with no
+# reference-vs-fused numeric fork, registered alongside pack/unpack.
+CONTRACT = declare(KernelContract(
+    family="packed", ops=("pack", "unpack", "im2col", "pool"),
+    grad_ops=("im2col", "pool"), emits_spikes=True, vmem_bytes=pack_vmem))
 
 
 def _on_tpu() -> bool:

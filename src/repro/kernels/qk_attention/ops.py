@@ -6,9 +6,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..contract import KernelContract, declare
 from .qk_attention import qk_attention_pallas
 
 Array = jax.Array
+
+CONTRACT = declare(KernelContract(
+    family="qk_attention", ops=("qk_mask",), grad=True, emits_spikes=True,
+    # [block_n, D] q + k tiles (int8) + rowsum column + masked-out tile,
+    # D bounded by the corpus' widest head dim (128)
+    vmem_bytes=lambda bm, bn, bk, packed: 256 * 128 * 3 + 256 * 4))
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "threshold",

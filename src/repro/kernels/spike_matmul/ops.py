@@ -9,9 +9,15 @@ import jax.numpy as jnp
 from ...core.events import (PackedSpikes, block_count_map_2d, compact_kmap,
                             pad_to_blocks, vld_or_compute,
                             word_occupancy_map_dense)
+from ..contract import KernelContract, declare, matmul_vmem
 from .spike_matmul import spike_matmul_gated_pallas, spike_matmul_pallas
 
 Array = jax.Array
+
+CONTRACT = declare(KernelContract(
+    family="spike_matmul", ops=("matmul",),
+    skips=("dense", "gated", "two_level"), grad=True,
+    vmem_bytes=matmul_vmem))
 
 # byte-skip strategies shared by spike_matmul and fused_pe:
 #   dense     — full streaming, @pl.when skips MXU only (the PR-5 behaviour)

@@ -6,9 +6,19 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..contract import KernelContract, declare
 from .w2ttfs_pool import w2ttfs_pool_pallas
 
 Array = jax.Array
+
+CONTRACT = declare(KernelContract(
+    family="w2ttfs_pool", ops=("w2ttfs_head",), formats=("dense",),
+    grad=True,
+    # per-batch-block sweep: [block_b, H, W, C] spike tile + pooled counts
+    # + the full [Ho*Wo*C, classes] FC weight resident (corpus bound:
+    # 8x8x8x128 input, 10 classes)
+    vmem_bytes=lambda bm, bn, bk, packed: (8 * 8 * 8 * 128
+                                           + 4 * 4 * 128 * (10 + 8))))
 
 
 @functools.partial(jax.jit, static_argnames=("window", "block_b", "interpret"))

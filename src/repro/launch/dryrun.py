@@ -52,6 +52,7 @@ def run_cell(arch: str, shape_name: str, mesh_mode: str, outdir: Path,
     import jax
     import jax.numpy as jnp
 
+    from ..analysis.abstract import module_param_shapes, optimizer_shapes
     from ..configs import SHAPES, get_config, build_model
     from ..models import sharding as shd
     from ..optim import adamw_init, adamw_update, clip_by_global_norm
@@ -70,13 +71,15 @@ def run_cell(arch: str, shape_name: str, mesh_mode: str, outdir: Path,
         is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))
 
     specs = model.input_specs(shape)
-    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    # shared shape-walking implementation with the static contract verifier
+    # (repro.analysis.abstract): failures name the callee + operand avals
+    params_shape = module_param_shapes(model.init)
     p_shard = NS(shd.param_specs(params_shape, mesh))
 
     with mesh:
         if shape.kind == "train":
             from ..optim.adamw import AdamWState
-            opt_shape = jax.eval_shape(adamw_init, params_shape)
+            opt_shape = optimizer_shapes(adamw_init, params_shape)
             z1 = shd.zero1_specs(params_shape, mesh)
             o_shard = NS(AdamWState(step=jax.sharding.PartitionSpec(),
                                     m=z1, v=z1))

@@ -34,6 +34,11 @@ PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 LINK_BW = 50e9
 HBM_PER_CHIP = 16e9          # v5e
+# Per-core VMEM capacity (the Pallas tile budget). The static contract
+# verifier (repro.analysis.contracts, rule NL-VMEM-BUDGET) prices every
+# kernel family's declared BlockSpec residency against this before
+# anything runs on hardware.
+VMEM_BYTES = 16 * 2**20      # ~16 MB/core
 
 # -- kernel-level cost-model constants (the sparsity-adaptive autotuner) --
 # Fixed per-pallas_call cost (grid setup, scalar prefetch, launch): keeps

@@ -3,11 +3,11 @@
 Every legacy knob — ``use_event_kernels=``, ``spike_format=``, and
 ``pack_out=`` — funnels through here and ONLY here: the kwargs are still
 accepted at every call site that took them before the ``ExecutionPolicy``
-redesign, they emit a ``DeprecationWarning`` naming the replacement, and a
-CI grep guard (tools/check_no_legacy_flags.py) fails the build if any of
-those kwarg spellings appear as call sites outside this module and the
-test suite. New code passes ``policy=`` (an ``ExecutionPolicy`` or preset
-name) instead.
+redesign, they emit a ``DeprecationWarning`` naming the replacement, and
+the ``NL-LEGACY-FLAGS`` neurallint rule (tools/neurallint.py) fails the
+build if any of those kwarg spellings appear as call sites outside this
+module and the test suite. New code passes ``policy=`` (an
+``ExecutionPolicy`` or preset name) instead.
 
 Migration map (old flag combination -> policy):
 

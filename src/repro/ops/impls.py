@@ -194,7 +194,8 @@ def _fused_pe_layer_reference(st: SpikeTensor, w: Array, *, bias, residual,
                 h, dh = heads
                 rs = q_t[:, :h * dh].astype(jnp.float32).reshape(
                     -1, h, dh).sum(axis=-1)
-                mask = (rs >= qk_threshold).astype(spk.dtype)
+                # inference registration; +grad modes use the surrogate
+                mask = (rs >= qk_threshold).astype(spk.dtype)  # neurallint: disable=NL-BARE-HEAVISIDE
                 spk = (spk.reshape(-1, h, dh)
                        * mask[:, :, None]).reshape(spk.shape)
                 vld = block_count_map_2d(
@@ -426,13 +427,15 @@ def _dense_lif_ref(p: dict, flat: Array, lif_cfg: LIFConfig, *, q,
         g = h // hkv
         rs = q.to_dense(jnp.float32).reshape(m, -1)[:, :h * dh].reshape(
             m, h, dh).sum(axis=-1)
-        mask = (rs >= qk_threshold).astype(jnp.int8)
+        # inference registration; +grad modes use the surrogate
+        mask = (rs >= qk_threshold).astype(jnp.int8)  # neurallint: disable=NL-BARE-HEAVISIDE
         spk = (spk.reshape(m, hkv, 1, dh)
                * mask.reshape(m, hkv, g, 1)).reshape(m, h * dh)
     elif q is not None:
         rowsum = q.to_dense(jnp.float32).reshape(m, -1).sum(
             axis=-1, keepdims=True)
-        spk = spk * (rowsum >= qk_threshold).astype(jnp.int8)
+        # inference registration; +grad modes use the surrogate
+        spk = spk * (rowsum >= qk_threshold).astype(jnp.int8)  # neurallint: disable=NL-BARE-HEAVISIDE
     elif heads is not None and kv_heads is not None and kv_heads != heads[0]:
         h, dh = heads
         g = h // kv_heads

@@ -1,0 +1,191 @@
+"""neurallint: both engines, the CLI gate, and the regression that
+motivated it (PR 8's silent dense downgrade)."""
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (RULES, junit_xml, lint_source, render,
+                            verify_contracts)
+from repro.analysis.lint import lint_paths
+
+REPO = Path(__file__).resolve().parent.parent
+NEURALLINT = [sys.executable, str(REPO / "tools" / "neurallint.py")]
+
+#: a non-exempt project path for fixture snippets (rule exemptions are
+#: path-based; models/ carries none)
+SRC = "src/repro/models/fixture.py"
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ------------------------------------------------------ engine 2: fixtures
+# (one good + one bad per AST rule; the bad snippet must trip EXACTLY its
+# rule so fixtures double as precision tests)
+FIXTURES = {
+    "NL-REGISTRY-BYPASS": (
+        "from repro import ops\ny = ops.matmul\n",
+        "from repro.kernels.spike_matmul import spike_matmul\n"),
+    "NL-HOST-SYNC": (
+        "import jax\n\n@jax.jit\ndef f(x):\n    return x.sum()\n",
+        "import jax\n\n@jax.jit\ndef f(x):\n    return float(x.sum())\n"),
+    "NL-BARE-HEAVISIDE": (
+        "from repro.core.surrogate import spike\n\n\ndef f(v, t):\n"
+        "    return spike(v - t)\n",
+        "def f(v, t):\n    return (v > t).astype('float32')\n"),
+    "NL-INTERPRET-HARDCODE": (
+        "def run(x, interpret=None):\n    return go(x, interpret=interpret)\n",
+        "def run(x, interpret=True):\n    return go(x, interpret=True)\n"),
+    "NL-MUTABLE-DEFAULT": (
+        "def f(x, acc=None):\n    return acc\n",
+        "def f(x, acc=[]):\n    return acc\n"),
+    "NL-LEGACY-FLAGS": (
+        "y = ops.matmul(x, w, policy='fused_dense')\n",
+        "y = ops.matmul(x, w, use_event_kernels=True)\n"),
+    "NL-LEGACY-FORKS": (
+        "y = snn_cnn.forward(params, x)\n",
+        "y = snn_cnn.apply_fused(params, x)\n"),
+}
+
+
+@pytest.mark.parametrize("rule", sorted(FIXTURES))
+def test_fixture_pair(rule):
+    good, bad = FIXTURES[rule]
+    assert rule not in _rules(lint_source(good, SRC)), f"{rule} good fixture"
+    hits = [f for f in lint_source(bad, SRC) if f.rule == rule]
+    assert hits, f"{rule} bad fixture did not trip"
+    assert hits[0].path == SRC and hits[0].line > 0
+
+
+def test_bad_fixtures_are_precise():
+    for rule, (_, bad) in FIXTURES.items():
+        assert _rules(lint_source(bad, SRC)) == {rule}, rule
+
+
+def test_lt_cast_is_not_a_heaviside():
+    # `< rate` casts are random spike-mask generation, not Heavisides
+    src = "def f(u, rate):\n    return (u < rate).astype('int8')\n"
+    assert not lint_source(src, SRC)
+
+
+def test_host_sync_only_inside_traced_code():
+    src = "def f(x):\n    return float(x.sum())\n"   # eager: fine
+    assert not lint_source(src, SRC)
+
+
+def test_suppression_same_line_and_line_above():
+    _, bad = FIXTURES["NL-MUTABLE-DEFAULT"]
+    line = bad.splitlines()[0]
+    same = f"{line}  # neurallint: disable=NL-MUTABLE-DEFAULT\n    return acc\n"
+    above = ("# justified  # neurallint: disable=NL-MUTABLE-DEFAULT\n"
+             f"{bad}")
+    assert not lint_source(same, SRC)
+    assert not lint_source(above, SRC)
+    # suppressing a DIFFERENT rule must not silence this one
+    other = f"{line}  # neurallint: disable=NL-HOST-SYNC\n    return acc\n"
+    assert _rules(lint_source(other, SRC)) == {"NL-MUTABLE-DEFAULT"}
+
+
+def test_repo_is_clean_and_rule_catalog_is_big_enough():
+    findings, checked = lint_paths(root=REPO)
+    assert not findings, render(findings)
+    assert checked > 50
+    assert len(RULES) >= 10
+
+
+# ------------------------------------------- engine 1: the contract sweep
+@pytest.fixture(scope="module")
+def report():
+    return verify_contracts()
+
+
+def test_sweep_totality_and_zero_violations(report):
+    # 100% of the registered (op, mode) pairs must be reachable by the
+    # static sweep — an implementation nobody can drive is a coverage gap
+    assert report.coverage == report.registered, sorted(report.uncovered)
+    assert len(report.registered) >= 24
+    assert not report.findings, render(report.findings)
+
+
+def test_sweep_is_abstract_fast(report):
+    # eval_shape only: the whole registry in well under the CI budget
+    assert report.duration_s < 60.0
+    assert report.cells > 100
+
+
+def test_silent_downgrade_regression(monkeypatch):
+    # re-introduce PR 8's bug class: the fused_pe dispatch resolving the
+    # reference implementation while the policy asked for fused kernels
+    from repro.ops import dispatch, registry
+
+    real = registry.lookup
+
+    def downgrading(op, mode):
+        if op == "fused_pe" and mode.startswith("fused"):
+            mode = mode.replace("fused", "reference")
+        return real(op, mode)
+
+    monkeypatch.setattr(dispatch, "lookup", downgrading)
+    report = verify_contracts(only_ops={"fused_pe"})
+    assert "NL-SILENT-DOWNGRADE" in _rules(report.findings), \
+        render(report.findings)
+
+
+def test_sweep_leaves_no_sticky_demotions():
+    from repro.ops import fallback
+
+    before = len(fallback.demotions())
+    verify_contracts(only_ops={"matmul"})
+    assert len(fallback.demotions()) == before
+
+
+# ------------------------------------------------------------ CLI + junit
+def test_junit_report_shape():
+    xml = junit_xml([], checked=7)
+    assert 'tests="%d"' % len(RULES) in xml and 'failures="0"' in xml
+    from repro.analysis import Finding
+    f = Finding("NL-HOST-SYNC", "a.py", 3, "sync")
+    xml = junit_xml([f], checked=7)
+    assert 'failures="1"' in xml and "a.py:3" in xml
+
+
+def test_finding_requires_catalogued_rule():
+    from repro.analysis import Finding
+    with pytest.raises(AssertionError):
+        Finding("NL-NOT-A-RULE", "a.py", 1, "x")
+
+
+def test_cli_red_on_seeded_bad_fixture(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(FIXTURES["NL-INTERPRET-HARDCODE"][1])
+    r = subprocess.run(NEURALLINT + ["--lint-only", "--paths", str(bad)],
+                       capture_output=True, text=True)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "NL-INTERPRET-HARDCODE" in r.stdout
+
+    good = tmp_path / "good.py"
+    good.write_text(FIXTURES["NL-INTERPRET-HARDCODE"][0])
+    r = subprocess.run(NEURALLINT + ["--lint-only", "--paths", str(good)],
+                       capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_cli_junit_artifact(tmp_path):
+    out = tmp_path / "lint.xml"
+    r = subprocess.run(
+        NEURALLINT + ["--lint-only", "--paths",
+                      str(REPO / "tools" / "neurallint.py"),
+                      "--junit", str(out)],
+        capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert out.exists() and "<testsuite" in out.read_text()
+
+
+def test_legacy_flags_shim_still_works():
+    r = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_no_legacy_flags.py")],
+        capture_output=True, text=True, cwd=REPO)
+    assert r.returncode == 0, r.stdout + r.stderr

@@ -366,7 +366,8 @@ def test_default_blocks_single_source():
 
 # ======================================================== repo-wide guards
 def test_no_legacy_flag_call_sites_outside_shim():
-    """The grep guard (also a CI step) passes on the current tree."""
+    """The legacy guard (now a shim over neurallint's NL-LEGACY-* rules)
+    passes on the current tree."""
     script = Path(__file__).resolve().parent.parent / "tools" / \
         "check_no_legacy_flags.py"
     proc = subprocess.run([sys.executable, str(script)],

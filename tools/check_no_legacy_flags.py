@@ -1,74 +1,22 @@
 #!/usr/bin/env python
-"""CI guard: deleted legacy APIs must not reappear outside their shims.
+"""DEPRECATED shim: the legacy-surface guards moved into neurallint.
 
-Two generations of legacy surface are guarded:
-
-  * the pre-policy FLAG kwargs (``use_event_kernels=`` / ``spike_format=``
-    / ``pack_out=``), replaced by ``ExecutionPolicy``; their only
-    sanctioned home is the deprecation shim module
-    (``src/repro/ops/compat.py``) and the test suite (which exercises the
-    shims on purpose). The pattern matches ``flag=value`` (PEP8 keyword
-    arguments carry no spaces around ``=``), so annotated parameter
-    declarations like ``pack_out: bool | None = None`` that merely ACCEPT
-    the deprecated kwarg do not trip it.
-  * the pre-unification SNN-CNN forward FORKS (``_apply_fused_event``,
-    ``_apply_fused_reference``, and the standalone ``snn_cnn.apply`` /
-    ``snn_cnn.apply_fused`` pair), collapsed into the ONE policy-driven
-    ``snn_cnn.forward`` body. Any call site (or re-definition) of the old
-    names fails the build — the train/deploy fork must not grow back.
+The two checks this script used to run are now the ``NL-LEGACY-FLAGS`` and
+``NL-LEGACY-FORKS`` rules of ``tools/neurallint.py`` (engine 2), with the
+same patterns and allowlists. This entry point stays for muscle memory and
+old CI configs; it simply invokes those two rules and forwards the exit
+code.
 
 Usage: python tools/check_no_legacy_flags.py  (exit 0 = clean)
 """
 from __future__ import annotations
 
-import pathlib
-import re
 import sys
 
-REPO = pathlib.Path(__file__).resolve().parent.parent
-SCAN_DIRS = ("src", "benchmarks", "examples", "docs")
-ALLOWED = {
-    REPO / "src" / "repro" / "ops" / "compat.py",   # THE deprecation shim
-    REPO / "docs" / "ops_api.md",                   # the migration table
-}
-# call-site kwarg spelling: name immediately followed by '=' but not '=='
-PATTERN = re.compile(r"\b(use_event_kernels|spike_format|pack_out)=(?!=)")
-# deleted snn_cnn forward forks: neither definitions nor call sites may
-# come back anywhere (docs included — only this guard's own description
-# and the migration notes name them)
-FORK_PATTERN = re.compile(
-    r"_apply_fused_event|_apply_fused_reference"
-    r"|snn_cnn\.apply(?:_fused)?\s*\(")
-FORK_ALLOWED = {
-    REPO / "docs" / "training_framework.md",        # the migration notes
-}
-
-
-def main() -> int:
-    hits: list[str] = []
-    targets = [p for d in SCAN_DIRS if (REPO / d).exists()
-               for p in sorted((REPO / d).rglob("*"))]
-    targets.append(REPO / "README.md")
-    for path in targets:
-        if path.suffix not in (".py", ".md"):
-            continue
-        text = path.read_text(encoding="utf-8")
-        for ln, line in enumerate(text.splitlines(), 1):
-            if path not in ALLOWED and PATTERN.search(line):
-                hits.append(f"{path.relative_to(REPO)}:{ln}: "
-                            f"{line.strip()}")
-            if path not in FORK_ALLOWED and FORK_PATTERN.search(line):
-                hits.append(f"{path.relative_to(REPO)}:{ln}: "
-                            f"[deleted forward fork] {line.strip()}")
-    if hits:
-        print("legacy API uses found outside the sanctioned shims "
-              "(use policy= / out_format= / snn_cnn.forward instead):")
-        print("\n".join(hits))
-        return 1
-    print(f"OK: no legacy flag call sites or deleted forward forks "
-          f"({', '.join(SCAN_DIRS)} scanned)")
-    return 0
-
+from neurallint import main as neurallint_main
 
 if __name__ == "__main__":
-    sys.exit(main())
+    print("note: check_no_legacy_flags.py is now a shim over "
+          "`tools/neurallint.py --select NL-LEGACY-FLAGS,NL-LEGACY-FORKS`")
+    sys.exit(neurallint_main(
+        ["--lint-only", "--select", "NL-LEGACY-FLAGS,NL-LEGACY-FORKS"]))

@@ -1,0 +1,96 @@
+#!/usr/bin/env python
+"""neurallint: the repo's static-analysis gate (CI runs this).
+
+Two engines, one exit code:
+
+  * the abstract contract verifier (``repro.analysis.contracts``) — walks
+    every registered ``(op, mode)`` pair of the kernel registry under
+    ``jax.eval_shape`` (zero FLOPs) and proves the dispatch/format/
+    metadata/grad/block/VMEM contracts;
+  * the AST lint (``repro.analysis.lint``) — rule-id'd source checks with
+    per-line ``# neurallint: disable=RULE`` suppressions.
+
+Usage:
+  python tools/neurallint.py                 # both engines, repo scan
+  python tools/neurallint.py --rules         # print the rule catalog
+  python tools/neurallint.py --lint-only --paths src/repro/ops
+  python tools/neurallint.py --select NL-LEGACY-FLAGS,NL-LEGACY-FORKS
+  python tools/neurallint.py --junit out.xml # also write a junit report
+
+Exit status: 0 clean, 1 unsuppressed findings, 2 usage/internal error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+
+def main(argv=None) -> int:
+    from repro.analysis import RULES, junit_xml, lint_paths, render, \
+        verify_contracts
+
+    ap = argparse.ArgumentParser(prog="neurallint",
+                                 description=__doc__.splitlines()[0])
+    ap.add_argument("--rules", action="store_true",
+                    help="print the rule catalog and exit")
+    ap.add_argument("--lint-only", action="store_true",
+                    help="engine 2 only (skip the contract sweep)")
+    ap.add_argument("--contracts-only", action="store_true",
+                    help="engine 1 only (skip the AST lint)")
+    ap.add_argument("--paths", nargs="*", default=None,
+                    help="files/dirs for the AST lint (default: repo scan)")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule ids to report (default: all)")
+    ap.add_argument("--junit", default=None, metavar="FILE",
+                    help="write a junit XML report (the CI artifact)")
+    args = ap.parse_args(argv)
+
+    if args.rules:
+        for rule, desc in RULES.items():
+            print(f"{rule}\n    {desc}")
+        return 0
+    if args.lint_only and args.contracts_only:
+        ap.error("--lint-only and --contracts-only are mutually exclusive")
+
+    selected = None
+    if args.select:
+        selected = {r.strip() for r in args.select.split(",") if r.strip()}
+        unknown = selected - set(RULES)
+        if unknown:
+            ap.error(f"unknown rule id(s): {sorted(unknown)}")
+
+    findings, checked = [], 0
+    if not args.contracts_only:
+        lint_findings, checked = lint_paths(args.paths, root=REPO)
+        findings += lint_findings
+        print(f"neurallint: AST lint over {checked} file(s)")
+    if not args.lint_only:
+        report = verify_contracts()
+        findings += report.findings
+        checked += report.cells
+        print(f"neurallint: contract sweep — "
+              f"{len(report.coverage)}/{len(report.registered)} registered "
+              f"(op, mode) pairs covered in {report.cells} cells "
+              f"({report.duration_s:.1f}s, eval_shape only)")
+        if report.uncovered:
+            # uncovered pairs already produced NL-DISPATCH-TOTALITY findings
+            print(f"neurallint: UNCOVERED: {sorted(report.uncovered)}")
+
+    if selected is not None:
+        findings = [f for f in findings if f.rule in selected]
+    findings.sort(key=lambda f: (f.rule, f.path, f.line))
+
+    if args.junit:
+        Path(args.junit).write_text(junit_xml(findings, checked=checked),
+                                    encoding="utf-8")
+        print(f"neurallint: junit report -> {args.junit}")
+    print(render(findings))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
