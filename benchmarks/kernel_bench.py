@@ -180,7 +180,110 @@ def sparsity_sweep() -> dict:
             "rows": sweep}
 
 
-def main(json_path: str | None = None, with_sweep: bool = False) -> None:
+# ------------------------------------------------------------ grad sweep
+def grad_sweep() -> dict:
+    """``--grad``: the BACKWARD sweep — modeled HBM bytes of the
+    event-skipped custom_vjp (dx + dw) per kernels x skip x sparsity, plus
+    measured fwd+bwd wall-clock of the differentiable matmul per policy
+    and executor.
+
+    Modeled rows use ``roofline.spike_matmul_grad_traffic`` — the cost
+    model the "auto+grad" tuner prices backward plans with — at a
+    16-m-block shape, and ASSERT the acceptance property: event-gated
+    backward bytes strictly decrease with sparsity (the artifact cannot
+    ship a byte-model regression). Measured rows run a jitted
+    value_and_grad over ``ops.matmul`` at a CPU-tractable size: the
+    reference autodiff, the fused custom_vjp on the direct (jnp-
+    transpose) executor, and the fused custom_vjp under
+    ``force_pallas_backward`` per skip mode (interpret-mode Python cost —
+    the byte columns are the TPU-relevant signal, the forced rows are the
+    kernel-path correctness/cost anchor).
+    """
+    from repro import ops as rops
+    from repro.launch import roofline
+    from repro.ops.grad import force_pallas_backward
+
+    print("# grad sweep: modeled backward HBM bytes + measured fwd+bwd "
+          "wall-clock, per policy x skip")
+    rows: list[dict] = []
+    mg, kg, ng = 2048, 1024, 1024
+    for frac_silent in SWEEP_LEVELS:
+        active = 1.0 - frac_silent
+        for kernels, skips in (("reference", ("dense",)),
+                               ("fused", SWEEP_SKIPS)):
+            for skip in skips:
+                t = roofline.spike_matmul_grad_traffic(
+                    mg, kg, ng, active_frac=active, occ_frac=1.0,
+                    packed=False, skip=skip, kernels=kernels)
+                emit("spike_matmul_grad",
+                     f"{mg}x{kg}x{ng} {kernels}/{skip} "
+                     f"silent={frac_silent:.0%}",
+                     t["flops"], t["hbm_bytes"],
+                     modeled_time_us=roofline.kernel_time_s(t) * 1e6,
+                     dx_hbm_bytes=t["dx_hbm_bytes"],
+                     dw_hbm_bytes=t["dw_hbm_bytes"],
+                     kernels=kernels, skip=skip, frac_silent=frac_silent)
+                rows.append(ROWS[-1])
+    for skip in ("gated", "two_level"):
+        series = [r["bytes"] for r in rows
+                  if r["kernels"] == "fused" and r["skip"] == skip]
+        assert all(a > b for a, b in zip(series, series[1:])), \
+            (skip, series)   # backward bytes must fall as sparsity rises
+
+    # measured fwd / fwd+bwd wall-clock per policy x executor x skip
+    ms, ks, ns = 256, 256, 256
+    blocks = dict(block_m=64, block_n=64, block_k=64)
+    xs = _k_structured(ms, ks, 0.5, seed=31).astype(jnp.float32)
+    ws = jax.random.normal(jax.random.PRNGKey(32), (ks, ns)) * 0.1
+
+    def bench_case(policy: str, skip: str, forced: bool) -> dict:
+        pol = rops.as_policy(policy).for_training()
+
+        def loss(x_, w_):
+            return rops.matmul(x_, w_, policy=pol, skip=skip,
+                               **blocks).sum()
+
+        with force_pallas_backward(forced):
+            fwd = jax.jit(loss)
+            both = jax.jit(jax.value_and_grad(loss, argnums=(0, 1)))
+            t_fwd = time_call(fwd, xs, ws) * 1e6
+            t_both = time_call(both, xs, ws) * 1e6
+        tag = "pallas" if forced else "direct"
+        emit("spike_matmul_grad",
+             f"{ms}^3 {policy}/{skip} [{tag}] (measured)", 0.0, 0.0,
+             t_both, fwd_us=t_fwd, bwd_us=max(t_both - t_fwd, 0.0),
+             policy=policy, skip=skip, executor=tag)
+        rows.append(ROWS[-1])
+        return ROWS[-1]
+
+    ref = bench_case("reference", "dense", False)
+    bench_case("fused_dense", "dense", False)
+    grads = {}
+    for skip in SWEEP_SKIPS:
+        bench_case("fused_dense", skip, True)
+        # kernel-executor backward == reference autodiff grads (anchor)
+        pol = rops.as_policy("fused_dense").for_training()
+        with force_pallas_backward():
+            g = jax.jit(jax.grad(
+                lambda x_, w_: rops.matmul(x_, w_, policy=pol, skip=skip,
+                                           **blocks).sum(),
+                argnums=(0, 1)))(xs, ws)
+        grads[skip] = g
+    rpol = rops.as_policy("reference").for_training()
+    gr = jax.jit(jax.grad(
+        lambda x_, w_: rops.matmul(x_, w_, policy=rpol).sum(),
+        argnums=(0, 1)))(xs, ws)
+    for skip, g in grads.items():
+        for a, b in zip(g, gr):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-5)
+    del ref
+    return {"levels": list(SWEEP_LEVELS), "skips": list(SWEEP_SKIPS),
+            "rows": rows}
+
+
+def main(json_path: str | None = None, with_sweep: bool = False,
+         with_grad: bool = False) -> None:
     print("# kernel roofline model (TPU v5e) + measured CPU oracle time")
     print("kernel,case,flops,bytes,tpu_time_us,tpu_bound,cpu_ref_us")
 
@@ -386,6 +489,7 @@ def main(json_path: str | None = None, with_sweep: bool = False) -> None:
 
     # ------------------------------------------------------- sparsity sweep
     sweep = sparsity_sweep() if with_sweep else None
+    grad_rows = grad_sweep() if with_grad else None
 
     # ----------------------------------------------------------- JSON output
     json_path = artifact_path(json_path or "BENCH_kernels.json")
@@ -411,6 +515,8 @@ def main(json_path: str | None = None, with_sweep: bool = False) -> None:
                }}
     if sweep is not None:
         payload["sparsity_sweep"] = sweep
+    if grad_rows is not None:
+        payload["grad_sweep"] = grad_rows
     with open(json_path, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"# wrote {json_path}: fused-PE modeled HBM reduction "
@@ -427,5 +533,11 @@ if __name__ == "__main__":
                     help="also run the byte-skip sparsity sweep: modeled "
                          "HBM bytes + measured wall-clock per sparsity "
                          "level for the gated vs ungated kernels")
+    ap.add_argument("--grad", action="store_true",
+                    help="also run the backward sweep: modeled "
+                         "event-skipped backward HBM bytes per "
+                         "kernels x skip x sparsity + measured fwd+bwd "
+                         "wall-clock of the differentiable matmul per "
+                         "policy and executor")
     args = ap.parse_args()
-    main(args.out, with_sweep=args.sparsity_sweep)
+    main(args.out, with_sweep=args.sparsity_sweep, with_grad=args.grad)

@@ -47,7 +47,7 @@ def main() -> None:
          timestep_ablation.main),
         ("kernels", "Kernel bench — Pallas kernels roofline + oracle timing "
          "+ byte-skip sparsity sweep",
-         lambda: kernel_bench.main(with_sweep=True)),
+         lambda: kernel_bench.main(with_sweep=True, with_grad=True)),
         ("ops", "ops dispatch — repro.ops entry-point overhead vs direct "
          "kernel calls (< 1% bar)", ops_dispatch.main),
         ("serve", "Serving throughput — continuous batching + elastic-FIFO "

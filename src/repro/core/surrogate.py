@@ -69,3 +69,10 @@ spike.defvjp(_spike_fwd, _spike_bwd)
 
 def available_surrogates() -> tuple[str, ...]:
     return tuple(_SURROGATES)
+
+
+def surrogate_grad(v: Array, surrogate: str, alpha: float) -> Array:
+    """The registered pseudo-derivative evaluated at membrane offset ``v``
+    (= v_mem - v_th). Pure jnp — safe inside Pallas kernel bodies, which is
+    how the backward kernels fuse the factor into the ``g @ wᵀ`` sweep."""
+    return _SURROGATES[surrogate](v, alpha)

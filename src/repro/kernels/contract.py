@@ -113,25 +113,37 @@ def matmul_vmem(block_m: int, block_n: int, block_k: int,
                 packed: bool) -> int:
     """Spike-matmul sweep residency: one x tile (packed words + the int8
     unpack scratch, or the int8 tile directly), one f32 w tile, one f32
-    accumulator tile, plus the scalar-prefetched metadata row."""
+    accumulator tile, plus the scalar-prefetched metadata row.  The family
+    budget is the max over its forward and BACKWARD sweeps — the dx
+    backward holds all-f32 tiles (cotangent + w + dx accumulator) plus the
+    cached-current tile its fused surrogate factor re-reads."""
     if packed:
         x = block_m * (block_k // LANE_BITS) * 4 + block_m * block_k
     else:
         x = block_m * block_k
     meta = 4 * (block_k // 8 + 2)            # vld row + nact/kmap scalars
-    return x + block_k * block_n * 4 + block_m * block_n * 4 + meta
+    fwd = x + block_k * block_n * 4 + block_m * block_n * 4 + meta
+    bwd = (block_m * block_n * 4              # incoming cotangent tile
+           + block_k * block_n * 4            # w tile (transposed read)
+           + block_m * block_k * 4            # dx accumulator
+           + block_m * block_n * 4            # cached membrane current
+           + meta)
+    return max(fwd, bwd)
 
 
 def fused_pe_vmem(block_m: int, block_n: int, block_k: int,
                   packed: bool) -> int:
     """Fused PE adds to the matmul sweep: bias row, residual tile, LIF
-    state tiles (v f32 + s int8), the Q tile for the write-back mask, and
-    the emitted spike tile (packed: words + vld row)."""
+    state tiles (v f32 + s int8), the Q tile for the write-back mask, the
+    emitted spike tile (packed: words + vld row), and the f32 membrane-
+    current tile the training forward writes back (``emit_current`` — the
+    residual cache the event-skipped backward differentiates from)."""
     extra = (block_n * 4                      # bias
              + block_m * block_n * 4          # residual
              + block_m * block_n * 5          # v_prev f32 + s_prev int8
              + block_m * 128                  # q row block (lane-padded)
-             + block_m * block_n)             # emitted int8 spike tile
+             + block_m * block_n              # emitted int8 spike tile
+             + block_m * block_n * 4)         # emit_current f32 tile
     if packed:
         extra += block_m * (block_n // LANE_BITS) * 4 + 4 * (block_n // 8)
     return matmul_vmem(block_m, block_n, block_k, packed) + extra

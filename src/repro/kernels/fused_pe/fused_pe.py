@@ -76,6 +76,7 @@ Array = jax.Array
 def _make_kernel(*, tau: float, v_th: float, soft_reset: bool,
                  qk_threshold: float, with_bias: bool, with_residual: bool,
                  with_state: bool, apply_qk: bool, emit_vld: bool,
+                 emit_current: bool,
                  m_valid: int, n_valid: int, block_m: int, block_n: int,
                  packed_in: bool, packed_q: bool, packed_residual: bool,
                  packed_out: bool, skip: str = "dense",
@@ -101,6 +102,7 @@ def _make_kernel(*, tau: float, v_th: float, soft_reset: bool,
         spike_ref = next(it)
         vout_ref = next(it) if with_state else None
         cnt_ref = next(it) if emit_vld else None
+        cur_ref = next(it) if emit_current else None
         acc_ref = next(it)
 
         i = pl.program_id(0)
@@ -136,6 +138,11 @@ def _make_kernel(*, tau: float, v_th: float, soft_reset: bool,
                     cur = cur + unpack_words(r_ref[...], jnp.float32)
                 else:
                     cur = cur + r_ref[...].astype(jnp.float32)
+            if emit_current:
+                # residual cache for the backward: the post-bias/-residual
+                # membrane current leaves ONCE, instead of the vjp
+                # re-running the whole event-gated matmul from its inputs
+                cur_ref[...] = cur
             if with_state:
                 v_prev = v_ref[...].astype(jnp.float32)
                 s_prev = s_ref[...].astype(jnp.float32)
@@ -204,7 +211,8 @@ def _make_kernel(*, tau: float, v_th: float, soft_reset: bool,
 @functools.partial(jax.jit,
                    static_argnames=("tau", "v_th", "soft_reset",
                                     "qk_threshold", "block_m", "block_n",
-                                    "block_k", "emit_vld", "m_valid",
+                                    "block_k", "emit_vld", "emit_current",
+                                    "m_valid",
                                     "n_valid", "packed_in", "packed_q",
                                     "packed_residual", "packed_out",
                                     "skip", "heads", "interpret"))
@@ -219,6 +227,7 @@ def fused_pe_pallas(x: Array, w: Array, vld_cnt: Array,
                     soft_reset: bool = False, qk_threshold: float = 1.0,
                     block_m: int = 128, block_n: int = 128,
                     block_k: int = 128, emit_vld: bool = True,
+                    emit_current: bool = False,
                     m_valid: int | None = None, n_valid: int | None = None,
                     packed_in: bool = False, packed_q: bool = False,
                     packed_residual: bool = False, packed_out: bool = False,
@@ -247,7 +256,11 @@ def fused_pe_pallas(x: Array, w: Array, vld_cnt: Array,
     Requires ``n_valid == h * dh`` (the output must be exactly the
     head-concatenated map). ``None`` keeps the whole-row mask.
 
-    Returns (spikes, v_next | None, vld_next | None).
+    ``emit_current`` additionally emits the post-bias/-residual membrane
+    current as an f32 [M, N] output — the residual cache the event-skipped
+    backward differentiates from instead of recomputing the matmul.
+
+    Returns (spikes, v_next | None, vld_next | None, current | None).
     """
     m = x.shape[0]
     k = x.shape[1] * LANE_BITS if packed_in else x.shape[1]
@@ -269,6 +282,7 @@ def fused_pe_pallas(x: Array, w: Array, vld_cnt: Array,
         tau=tau, v_th=v_th, soft_reset=soft_reset, qk_threshold=qk_threshold,
         with_bias=bias is not None, with_residual=residual is not None,
         with_state=with_state, apply_qk=q is not None, emit_vld=emit_vld,
+        emit_current=emit_current,
         m_valid=m_valid or m, n_valid=n_valid or n,
         block_m=block_m, block_n=block_n, packed_in=packed_in,
         packed_q=packed_q, packed_residual=packed_residual,
@@ -340,6 +354,10 @@ def fused_pe_pallas(x: Array, w: Array, vld_cnt: Array,
             (m // block_m, n // block_n), jnp.int32))
         out_specs.append(pl.BlockSpec((1, 1),
                                       lambda i, j, kk, *refs: (i, j)))
+    if emit_current:
+        out_shape.append(jax.ShapeDtypeStruct((m, n), jnp.float32))
+        out_specs.append(pl.BlockSpec((block_m, block_n),
+                                      lambda i, j, kk, *refs: (i, j)))
 
     outs = pl.pallas_call(
         kern,
@@ -358,4 +376,5 @@ def fused_pe_pallas(x: Array, w: Array, vld_cnt: Array,
     spikes = outs.pop(0)
     v_next = outs.pop(0) if with_state else None
     vld_next = outs.pop(0) if emit_vld else None
-    return spikes, v_next, vld_next
+    current = outs.pop(0) if emit_current else None
+    return spikes, v_next, vld_next, current

@@ -34,7 +34,9 @@ Spikes = Union[Array, PackedSpikes]
 
 CONTRACT = declare(KernelContract(
     family="fused_pe", ops=("fused_pe", "fused_pe_layer", "dense_lif"),
-    skips=("dense", "gated", "two_level"), grad=True, emits_spikes=True,
+    skips=("dense", "gated", "two_level"), grad=True,
+    grad_ops=("fused_pe", "fused_pe_layer", "dense_lif"),
+    emits_spikes=True,
     head_blocked=True, vmem_bytes=fused_pe_vmem))
 
 
@@ -55,10 +57,14 @@ class FusedPEOut(NamedTuple):
                map over the PADDED grid; feed it to the next fused_pe /
                spike_matmul call (same block sizes) as ``vld_cnt`` to skip
                that layer's metadata pass.
+    current  : [M, N] f32 or None — the post-bias/-residual membrane
+               current, emitted only with ``emit_current`` (the residual
+               cache the event-skipped backward differentiates from).
     """
     spikes: Spikes
     v_next: Optional[Array]
     vld_next: Optional[Array]
+    current: Optional[Array] = None
 
 
 def _on_tpu() -> bool:
@@ -75,7 +81,8 @@ def fused_pe(x: Spikes, w: Array, *,
              tau: float = 0.5, v_th: float = 1.0, soft_reset: bool = False,
              qk_threshold: float = 1.0,
              block_m: int = 128, block_n: int = 128, block_k: int = 128,
-             emit_vld: bool = True, out_format: str | None = None,
+             emit_vld: bool = True, emit_current: bool = False,
+             out_format: str | None = None,
              pack_out: bool | None = None, skip: str = "dense",
              heads: tuple[int, int] | None = None,
              interpret: bool | None = None) -> FusedPEOut:
@@ -95,20 +102,24 @@ def fused_pe(x: Spikes, w: Array, *,
     "two_level" — see ``repro.kernels.spike_matmul.ops.SKIP_MODES``).
     ``heads=(h, dh)`` computes the QK mask per head block instead of per
     whole row (multi-head Fig-5 fusion; requires ``w.shape[1] == h*dh``).
+    ``emit_current`` returns the post-bias/-residual membrane current in
+    ``FusedPEOut.current`` — the backward's residual cache.
     """
     fmt = _out_format(pack_out, out_format, "fused_pe")
     return _fused_pe(x, w, bias=bias, residual=residual, v_prev=v_prev,
                      s_prev=s_prev, q=q, vld_cnt=vld_cnt, tau=tau, v_th=v_th,
                      soft_reset=soft_reset, qk_threshold=qk_threshold,
                      block_m=block_m, block_n=block_n, block_k=block_k,
-                     emit_vld=emit_vld, out_format=fmt, skip=skip,
+                     emit_vld=emit_vld, emit_current=emit_current,
+                     out_format=fmt, skip=skip,
                      heads=heads, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("tau", "v_th", "soft_reset",
                                              "qk_threshold", "block_m",
                                              "block_n", "block_k",
-                                             "emit_vld", "out_format",
+                                             "emit_vld", "emit_current",
+                                             "out_format",
                                              "skip", "heads", "interpret"))
 def _fused_pe(x: Spikes, w: Array, *,
               bias: Array | None = None,
@@ -120,7 +131,8 @@ def _fused_pe(x: Spikes, w: Array, *,
               tau: float = 0.5, v_th: float = 1.0, soft_reset: bool = False,
               qk_threshold: float = 1.0,
               block_m: int = 128, block_n: int = 128, block_k: int = 128,
-              emit_vld: bool = True, out_format: str = "dense",
+              emit_vld: bool = True, emit_current: bool = False,
+              out_format: str = "dense",
               skip: str = "dense",
               heads: tuple[int, int] | None = None,
               interpret: bool | None = None) -> FusedPEOut:
@@ -188,11 +200,12 @@ def _fused_pe(x: Spikes, w: Array, *,
     else:
         qp = None
 
-    spikes, v_next, vld_next = fused_pe_pallas(
+    spikes, v_next, vld_next, current = fused_pe_pallas(
         xi, wp, vld, bp, rp, vp, sp, qp, occ,
         tau=tau, v_th=v_th, soft_reset=soft_reset, qk_threshold=qk_threshold,
         block_m=block_m, block_n=block_n, block_k=block_k,
-        emit_vld=emit_vld or pack_out, m_valid=m0, n_valid=n0,
+        emit_vld=emit_vld or pack_out, emit_current=emit_current,
+        m_valid=m0, n_valid=n0,
         packed_in=packed_in, packed_q=packed_q, packed_residual=packed_res,
         packed_out=pack_out, skip=skip, heads=heads, interpret=interpret)
     if pack_out:
@@ -201,7 +214,9 @@ def _fused_pe(x: Spikes, w: Array, *,
         spikes = spikes[:m0, :n0]
     if v_next is not None:
         v_next = v_next[:m0, :n0]
-    return FusedPEOut(spikes, v_next, vld_next)
+    if current is not None:
+        current = current[:m0, :n0]
+    return FusedPEOut(spikes, v_next, vld_next, current)
 
 
 def _stack_packed(pss: list[PackedSpikes]) -> PackedSpikes:

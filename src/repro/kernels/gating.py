@@ -58,3 +58,42 @@ def accum_tile(o_ref, x_ref, w_ref, *, packed_in: bool,
             ws = w_ref[c * LANE_BITS:(c + 1) * LANE_BITS, :]
             o_ref[...] += jnp.dot(xs, ws.astype(jnp.float32),
                                   preferred_element_type=jnp.float32)
+
+
+def accum_tile_t(o_ref, x_ref, g_ref, *, packed_in: bool,
+                 occ_bits=None) -> None:
+    """o_ref += x_tileᵀ @ g_tile — the weight-gradient contraction.
+
+    ``x_ref``: (block_m, block_k) dense spikes or (block_m, block_k/32)
+    int32 words when ``packed_in``. ``g_ref``: (block_m, block_n) f32
+    cotangent. ``o_ref``: (block_k, block_n). ``occ_bits``: optional
+    word-occupancy bitmap for THIS x-tile; a silent 32-column k-stripe of
+    x contributes nothing to output ROWS [c*32, (c+1)*32), so the stripe's
+    (32, block_m) @ (block_m, block_n) sub-dot is elided entirely.
+    """
+    g = g_ref[...].astype(jnp.float32)
+    if occ_bits is None:
+        if packed_in:
+            x = unpack_words(x_ref[...], jnp.float32)
+        else:
+            x = x_ref[...].astype(jnp.float32)
+        o_ref[...] += jnp.dot(x.T, g, preferred_element_type=jnp.float32)
+        return
+
+    if packed_in:
+        wpb = x_ref.shape[-1]
+    else:
+        assert x_ref.shape[-1] % LANE_BITS == 0, x_ref.shape
+        wpb = x_ref.shape[-1] // LANE_BITS
+    assert wpb <= LANE_BITS, (wpb, "occ bitmap covers <= 32 word-columns")
+
+    for c in range(wpb):
+        @pl.when(jnp.bitwise_and(jnp.right_shift(occ_bits, c), 1) != 0)
+        def _stripe(c=c):
+            if packed_in:
+                xs = unpack_words(x_ref[:, c:c + 1], jnp.float32)
+            else:
+                xs = x_ref[:, c * LANE_BITS:(c + 1) * LANE_BITS]
+                xs = xs.astype(jnp.float32)
+            o_ref[c * LANE_BITS:(c + 1) * LANE_BITS, :] += jnp.dot(
+                xs.T, g, preferred_element_type=jnp.float32)

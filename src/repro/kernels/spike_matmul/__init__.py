@@ -1,2 +1,2 @@
-from .ops import spike_matmul
+from .ops import spike_matmul, spike_matmul_dw, spike_matmul_dx
 from .ref import spike_matmul_ref

@@ -108,6 +108,93 @@ def spike_matmul_traffic(m: int, k: int, n: int, *,
             "flops": flops, "mxu_eff": eff, "overhead_s": overhead}
 
 
+def spike_matmul_grad_traffic(m: int, k: int, n: int, *,
+                              block_m: int = 128, block_n: int = 128,
+                              block_k: int = 128, active_frac: float = 1.0,
+                              occ_frac: float = 1.0, packed: bool = False,
+                              skip: str = "dense",
+                              kernels: str = "fused") -> dict:
+    """Streaming HBM-traffic + FLOP model of the BACKWARD of one spike
+    matmul / fused_pe accumulation sweep (the event-skipped custom_vjp),
+    per byte-skip strategy.
+
+    Two sweeps, priced together:
+
+      dx = (g ⊙ surr') @ wᵀ   — dense: the incoming cotangent ``g`` is a
+           float activation gradient, not a spike map, so no vld grid
+           exists on its reduction axis (= the forward's N) and nothing
+           pins the schedule — priced at UNIQUE tensor bytes (a
+           revisit-minimal tiling, the same convention as the reference
+           row), plus one read of the cached membrane-current tile (the
+           residual the forward emitted) for the in-kernel surrogate
+           factor, in place of the recompute-from-x pass the jnp
+           fallback would run.
+      dw = xᵀ @ dv            — event-skipped: the forward operand's vld
+           map transposes onto dw's REDUCTION axis (m), so silent x
+           tiles skip exactly as in the forward. Pinned to the metadata
+           grid, hence priced STREAMING like the forward fused model.
+           ``skip`` gates this sweep only; ``active_frac`` is the
+           forward operand's active-block fraction.
+
+    ``kernels="reference"`` prices the jnp autodiff backward instead:
+    unique-byte dense sweeps plus the surrogate recompute's extra read
+    of x and w (no residual cache). Returns the same
+    {"hbm_bytes", "flops", "mxu_eff", "overhead_s"} dict as the forward
+    model plus per-sweep byte splits — feed to ``kernel_time_s``.
+    """
+    gm, gn, gk = -(-m // block_m), -(-n // block_n), -(-k // block_k)
+    g_tile = block_m * block_n * 4
+    w_tile = block_k * block_n * 4
+    x_tile = block_m * block_k // 8 if packed else block_m * block_k
+    cur_bytes = gm * gn * block_m * block_n * 4      # cached residual
+    dx_out = gm * gk * block_m * block_k * 4
+    dw_out = gk * gn * block_k * block_n * 4
+    if kernels == "reference":
+        # jnp autodiff: unique bytes, both sweeps dense, plus the
+        # surrogate recompute re-streams x and w (no residual cache)
+        recompute = gm * gk * x_tile + gk * gn * w_tile
+        dx_bytes = m * n * 4 + k * n * 4 + dx_out
+        dw_bytes = (gm * gk * x_tile) + m * n * 4 + dw_out
+        return {"hbm_bytes": dx_bytes + dw_bytes + recompute,
+                "dx_hbm_bytes": dx_bytes + recompute,
+                "dw_hbm_bytes": dw_bytes,
+                "flops": 4.0 * m * n * k, "mxu_eff": 1.0,
+                "overhead_s": 0.0}
+    # dx: unique g and w bytes (revisit-minimal schedule — no metadata
+    # grid constrains it), plus ONE cached-current read per (m, n) tile
+    # for the fused surrogate factor
+    dx_bytes = (gm * gn * g_tile + gk * gn * w_tile) + dx_out + cur_bytes
+    dx_flops = 2.0 * m * n * k
+    overhead = 2 * LAUNCH_OVERHEAD_S                 # two pallas sweeps
+    meta_bytes = 4 * gm * gk                         # forward vld map
+    if skip == "dense":
+        dw_steps = gk * gn * gm
+        dw_flops = 2.0 * m * n * k * active_frac     # MXU still skips
+        eff = 1.0
+    else:
+        # ≥1 visited m-tile per (k-row, n-block), continuous in
+        # active_frac so modeled bytes order strictly with sparsity
+        dw_steps = gk * gn * max(active_frac * gm, 1.0)
+        dw_flops = 2.0 * m * n * k * active_frac
+        eff = 1.0
+        overhead += GATING_OVERHEAD_S
+        meta_bytes += 4 * gk * (gm + 1)              # transposed kmap+nact
+        if skip == "two_level":
+            dw_flops *= occ_frac
+            eff = SUBTILE_MXU_EFF
+            meta_bytes += 4 * gm * gk                # occ bitmap
+    dw_bytes = dw_steps * (x_tile + g_tile) + dw_out + meta_bytes
+    # dx always runs full-width tiles; only dw's sub-tile stripes underfill
+    # the MXU. Blend into one effective rate so kernel_time_s stays exact:
+    # time = dx_flops/peak + dw_flops/(peak*eff) = total/(peak*eff_blend).
+    total_flops = dx_flops + dw_flops
+    weighted = dx_flops + dw_flops / max(eff, 1e-3)
+    return {"hbm_bytes": dx_bytes + dw_bytes,
+            "dx_hbm_bytes": dx_bytes, "dw_hbm_bytes": dw_bytes,
+            "flops": total_flops, "mxu_eff": total_flops / weighted,
+            "overhead_s": overhead}
+
+
 def qk_chain_traffic(tokens: int, d_model: int, heads: int, head_dim: int,
                      kv_heads: int | None = None, *, packed: bool = False,
                      block_m: int = 128, block_n: int = 128,

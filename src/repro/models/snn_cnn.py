@@ -52,6 +52,15 @@ class SNNCNNConfig:
     head: str = "w2ttfs"            # w2ttfs | avgpool
     qk_blocks: int = 1
     qk_mask_mode: str = "threshold"  # threshold | or  (Fig 5 atten_reg = "or")
+    # BN-folded TRAINING forward: fold BN (frozen running stats) into the
+    # conv/linear weights on the fly each step, so the unfused training
+    # graph runs the SAME fused-PE layer bodies the deployed artifact runs
+    # (conv+bias+LIF in one pass, no separate BN/LIF stages). Gradients
+    # flow through the fold into conv weights AND BN scale/bias; running
+    # stats are frozen (passed through unchanged) — standard fold-BN QAT
+    # semantics, applied uniformly under ANY differentiable policy so
+    # reference and fused policies stay numerically comparable.
+    bn_fold: bool = False
     dtype: Any = jnp.float32
     # policy: how ``forward`` executes — "reference" (the None default;
     # pure jnp), "fused_dense" (event-driven Pallas kernels, int8 maps
@@ -246,6 +255,59 @@ def fuse_model(variables: dict, cfg: SNNCNNConfig) -> list:
     return fused
 
 
+def fold_train_params(params: list, state: list, cfg: SNNCNNConfig) -> list:
+    """BN-fold of the LIVE training variables — the differentiable twin of
+    ``fuse_model``.
+
+    Folds each layer's BN (FROZEN running stats from ``state``) into its
+    conv/linear weights with ``fuse_bn_into_conv``/``_linear`` and applies
+    the straight-through ``fake_quant`` to the folded weight, yielding the
+    same ``{"w", "b"}`` per-layer shape as the F&Q deployment artifact.
+    Unlike ``fuse_model`` this runs INSIDE the training graph every step:
+    gradients flow through the fold into the conv weights and the BN
+    scale/bias, so ``forward(..., bn_fold=True)`` trains the exact layer
+    bodies (fused conv+bias+LIF passes) that deployment executes."""
+    layers = build_layers(cfg)
+    folded: list = []
+
+    def fq(w):
+        return fake_quant(w, cfg.quant, is_weight=True)
+
+    def fold_conv(cp, bp, bs):
+        w, b = fuse_bn_into_conv(cp["w"], None, bp["scale"], bp["bias"],
+                                 jax.lax.stop_gradient(bs["mean"]),
+                                 jax.lax.stop_gradient(bs["var"]))
+        return {"w": fq(w), "b": b}
+
+    for p, s, layer in zip(params, state, layers):
+        kind = layer[0]
+        if kind == "conv_bn_lif":
+            folded.append({"conv": fold_conv(p["conv"], p["bn"], s["bn"])})
+        elif kind == "resblock":
+            f = {c: fold_conv(p[c], p[bn], s[bn])
+                 for c, bn in (("conv1", "bn1"), ("conv2", "bn2"))}
+            if "conv_sc" in p:
+                f["conv_sc"] = fold_conv(p["conv_sc"], p["bn_sc"],
+                                         s["bn_sc"])
+            folded.append(f)
+        elif kind == "qkformer":
+            f = {}
+            for name in ("q", "k", "proj", "mlp1", "mlp2"):
+                w, b = fuse_bn_into_linear(
+                    p[name]["w"], None, p[f"bn_{name}"]["scale"],
+                    p[f"bn_{name}"]["bias"],
+                    jax.lax.stop_gradient(s[f"bn_{name}"]["mean"]),
+                    jax.lax.stop_gradient(s[f"bn_{name}"]["var"]))
+                f[name] = {"w": fq(w), "b": b}
+            folded.append(f)
+        elif kind == "head":
+            folded.append({"fc": {"w": fq(p["fc"]["w"]),
+                                  "b": p["fc"]["b"]}})
+        else:
+            folded.append({})
+    return folded
+
+
 def _account(aux: dict, st: SpikeTensor, packed: bool) -> SpikeTensor:
     """HBM accounting for every spike tensor shipped between kernels, in
     whatever format it shipped."""
@@ -297,6 +359,12 @@ def forward(variables, images: Array, cfg: SNNCNNConfig, *,
 
     params = variables if fused_graph else variables["params"]
     state = [None] * len(layers) if fused_graph else variables["state"]
+    # BN-folded training walk: fold BN into the weights on the fly and run
+    # the DEPLOYED layer bodies (fused conv+bias+LIF passes) under the
+    # differentiable policy — train what you serve, including BN. Running
+    # stats are frozen (state passes through unchanged).
+    folded = (not fused_graph) and cfg.bn_fold
+    fparams = fold_train_params(params, state, cfg) if folded else params
     t = cfg.timesteps
     x0 = jnp.broadcast_to(images[None], (t, *images.shape)).astype(cfg.dtype)
 
@@ -409,7 +477,7 @@ def forward(variables, images: Array, cfg: SNNCNNConfig, *,
         return cur + pc["b"].astype(jnp.float32)
 
     # ----------------------------------------------------- the layer walk
-    for p, s, layer in zip(params, state, layers):
+    for p, fp, s, layer in zip(params, fparams, state, layers):
         kind = layer[0]
         ns: dict = {}
         if kind == "conv_bn_lif":
@@ -417,16 +485,16 @@ def forward(variables, images: Array, cfg: SNNCNNConfig, *,
             if st is None:
                 # analog input: dense conv (+BN on the unfused graph), then
                 # the first LIF enters the spiking domain
-                if fused_graph:
+                if fused_graph or folded:
                     cur = _per_step(
-                        lambda z: nn.conv_apply(p["conv"], z, stride), x0)
+                        lambda z: nn.conv_apply(fp["conv"], z, stride), x0)
                 else:
                     cur, bn_s = _conv_bn({"conv": p["conv"], "bn": p["bn"]},
                                          s["bn"], x0, cfg, train, stride)
                     ns["bn"] = bn_s
                 st, spatial = to_tokens(lif_chain(cur))
-            elif event:
-                st, spatial = conv_lif(p["conv"], st, spatial, stride)
+            elif event or folded:
+                st, spatial = conv_lif(fp["conv"], st, spatial, stride)
             else:
                 cur, (ho, wo) = conv_block(("conv", "bn"), p, s, st,
                                            spatial, stride, ns)
@@ -437,14 +505,14 @@ def forward(variables, images: Array, cfg: SNNCNNConfig, *,
             spatial = (spatial[0], h2, w2, spatial[3])
         elif kind == "resblock":
             stride = layer[3]
-            if event:
-                s1, sp1 = conv_lif(p["conv1"], st, spatial, stride)
-                if "conv_sc" in p:
-                    res = conv_cur_event(p["conv_sc"], st, spatial, stride)
+            if event or folded:
+                s1, sp1 = conv_lif(fp["conv1"], st, spatial, stride)
+                if "conv_sc" in fp:
+                    res = conv_cur_event(fp["conv_sc"], st, spatial, stride)
                 else:
                     res = st            # identity: binary spike shortcut
                 aux["spikes"][f"res{li}_s1"] = s1.count()
-                st, spatial = conv_lif(p["conv2"], s1, sp1, 1, residual=res)
+                st, spatial = conv_lif(fp["conv2"], s1, sp1, 1, residual=res)
             else:
                 cur1, hw1 = conv_block(("conv1", "bn1"), p, s, st, spatial,
                                        stride, ns)
@@ -463,27 +531,29 @@ def forward(variables, images: Array, cfg: SNNCNNConfig, *,
                 st, spatial = to_tokens(lif_chain(cur2 + sc))
         elif kind == "qkformer":
             d = layer[1]
-            if event:
+            if event or folded:
                 # five fused passes, format-agnostic: each consumes the vld
                 # map its producer emitted in-kernel (the on-the-fly
                 # dataflow), the K pass applies the QK token mask on
                 # write-back (Fig 5), and spike maps cross HBM in the
-                # policy's format throughout
+                # policy's format throughout. The BN-folded training walk
+                # runs this SAME body (hard "or" mask, surrogate-masked
+                # backward) under the differentiable policy.
                 tok = st
                 lifkw = dict(lif_cfg=cfg.lif, policy=pol)
-                q3 = ops.fused_pe_layer(tok, p["q"]["w"], bias=p["q"]["b"],
+                q3 = ops.fused_pe_layer(tok, fp["q"]["w"], bias=fp["q"]["b"],
                                         **lifkw).spikes
                 # atten_reg "or" mode == rowsum >= 1 on integer counts
-                attn3 = ops.fused_pe_layer(tok, p["k"]["w"],
-                                           bias=p["k"]["b"], q=q3,
+                attn3 = ops.fused_pe_layer(tok, fp["k"]["w"],
+                                           bias=fp["k"]["b"], q=q3,
                                            qk_threshold=1.0, **lifkw).spikes
-                y3 = ops.fused_pe_layer(attn3, p["proj"]["w"],
-                                        bias=p["proj"]["b"], residual=tok,
+                y3 = ops.fused_pe_layer(attn3, fp["proj"]["w"],
+                                        bias=fp["proj"]["b"], residual=tok,
                                         **lifkw).spikes
-                m13 = ops.fused_pe_layer(y3, p["mlp1"]["w"],
-                                         bias=p["mlp1"]["b"], **lifkw).spikes
-                y23 = ops.fused_pe_layer(m13, p["mlp2"]["w"],
-                                         bias=p["mlp2"]["b"], residual=y3,
+                m13 = ops.fused_pe_layer(y3, fp["mlp1"]["w"],
+                                         bias=fp["mlp1"]["b"], **lifkw).spikes
+                y23 = ops.fused_pe_layer(m13, fp["mlp2"]["w"],
+                                         bias=fp["mlp2"]["b"], residual=y3,
                                          **lifkw).spikes
                 for s_ in (q3, attn3, y3, m13, y23):
                     account(s_)
@@ -527,8 +597,8 @@ def forward(variables, images: Array, cfg: SNNCNNConfig, *,
         elif kind == "head":
             _, cin, size = layer
             b, h, w_, c = spatial
-            if fused_graph:
-                fc_w, fc_b = p["fc"]["w"], p["fc"]["b"]
+            if fused_graph or folded:
+                fc_w, fc_b = fp["fc"]["w"], fp["fc"]["b"]
             else:
                 fc_w, fc_b = _qw(p["fc"]["w"], cfg), p["fc"]["b"]
             xd = ops.unpack(st, policy=pol) if event else st.data
@@ -547,9 +617,17 @@ def forward(variables, images: Array, cfg: SNNCNNConfig, *,
             aux["spikes"][f"layer{li}"] = st.count()
             aux["rates"][f"layer{li}"] = st.count() / math.prod(st.shape)
         if not fused_graph:
-            new_state.append(ns)
+            # folded walk: BN running stats are frozen — thread them
+            # through unchanged so the carry keeps one tree structure
+            new_state.append(s if folded else ns)
         li += 1
 
     aux["total_spikes"] = sum(v for k_, v in aux["spikes"].items()
                               if k_.startswith("layer"))
+    # measured per-step event density (mean spike rate over the layer
+    # maps): the training loop feeds this to the autotuner so "+grad"
+    # plans price the REAL sparsity of the net being trained, not a prior
+    if aux["rates"]:
+        aux["active_frac"] = (sum(aux["rates"].values())
+                              / len(aux["rates"]))
     return logits, (None if fused_graph else new_state), aux

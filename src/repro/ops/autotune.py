@@ -152,6 +152,59 @@ class AutoTuner:
             block_m=st.block_m, block_n=block_n, block_k=st.block_k,
             allow_reference=allow_reference, allow_wide_n=allow_wide_n)
 
+    def plan_grad_matmul(self, m: int, k: int, n: int, *,
+                         fmt: str = "dense", active_frac: float = 1.0,
+                         occ_frac: float = 1.0, block_m: int = 128,
+                         block_n: int = 128, block_k: int = 128,
+                         allow_reference: bool = True) -> KernelPlan:
+        """Pick the BACKWARD execution point for one accumulation sweep:
+        prices dx (dense streaming, surrogate fused, residual-cache read)
+        plus dw (event-skipped on the forward operand's vld map) per skip
+        strategy against the jnp autodiff backward, with the same
+        ``spike_matmul_grad_traffic`` model the roofline report uses.
+        The returned plan's ``skip`` gates the dw sweep only — dx has no
+        spike operand to gate. Cached by ("matmul_grad", shape, fmt,
+        blocks, sparsity bucket); sparsity comes from the measured
+        per-step training feed (``observe``) when the operands are
+        traced, exactly like the forward path."""
+        a, o = bucket(active_frac), bucket(occ_frac)
+        key = ("matmul_grad", m, k, n, fmt, block_m, block_n, block_k,
+               a, o, allow_reference)
+        plan = self._plans.get(key)
+        if plan is not None:
+            return plan
+        packed = fmt == "packed"
+        candidates = []
+
+        def price(kernels, skip):
+            t = roofline.spike_matmul_grad_traffic(
+                m, k, n, block_m=block_m, block_n=block_n,
+                block_k=block_k, active_frac=a, occ_frac=o,
+                packed=packed, skip=skip, kernels=kernels)
+            candidates.append(KernelPlan(
+                kernels, skip, block_m, block_n, block_k,
+                est_time_s=roofline.kernel_time_s(t),
+                est_hbm_bytes=t["hbm_bytes"],
+                active_frac=a, occ_frac=o))
+
+        for skip in ("dense", "gated", "two_level"):
+            price("fused", skip)
+        if allow_reference:
+            price("reference", "dense")
+        plan = min(candidates, key=lambda p: p.est_time_s)
+        self._plans[key] = plan
+        return plan
+
+    def plan_grad_for(self, st: SpikeTensor, n: int) -> KernelPlan:
+        """Backward plan from a live forward operand: sparsity from its
+        metadata (or the observed training-step hint), blocks pinned to
+        the operand's own grid — the vld map the dw sweep gates on only
+        exists there."""
+        active, occ = self.sparsity_of(st)
+        return self.plan_grad_matmul(
+            st.m, st.k, n, fmt=st.fmt, active_frac=active, occ_frac=occ,
+            block_m=st.block_m, block_k=st.block_k)
+
     def _enumerate(self, m, k, n, *, fmt, active_frac, occ_frac,
                    block_m, block_n, block_k, allow_reference,
                    allow_wide_n=True) -> KernelPlan:

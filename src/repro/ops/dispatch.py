@@ -81,6 +81,17 @@ def _auto_matmul(op: str, pol: ExecutionPolicy, st: SpikeTensor, n: int,
     if tuner.is_demoted(op):
         return (dataclasses.replace(pol, kernels="reference"),
                 "dense", block_m, block_n, block_k)
+    if pol.differentiable:
+        # "auto+grad": price the BACKWARD execution points instead — the
+        # plan picks this layer's backward skip mode (the dw sweep's event
+        # gating) and whether the residual-cached fused vjp beats plain
+        # autodiff on this shape.  Differentiable operands are dense f32
+        # tracers under jit, so the sparsity comes from the measured
+        # per-step training feed (``observe_train_sparsity`` ->
+        # ``AutoTuner.observe``), not the operand metadata.
+        plan = tuner.plan_grad_for(st, n)
+        return (dataclasses.replace(pol, kernels=plan.kernels),
+                plan.skip, block_m, block_n, block_k)
     plan = tuner.plan_for(st, n, block_m=block_m, block_n=block_n,
                           block_k=block_k, allow_wide_n=allow_wide_n)
     pol = dataclasses.replace(pol, kernels=plan.kernels)

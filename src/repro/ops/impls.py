@@ -87,8 +87,15 @@ def _matmul_ref(st: SpikeTensor, w: Array, *, block_m, block_n, block_k,
 # ================================================================= lif_update
 @register("lif", "fused")
 def _lif_fused(current, v_prev, s_prev, cfg: LIFConfig):
-    from ..kernels.lif_update import lif_update
+    from ..kernels.lif_update import lif_update, lif_update_ref
 
+    if jax.default_backend() != "tpu":
+        # purely elementwise: off-TPU the Pallas interpreter emulation has
+        # no skip or format behaviour to preserve — same math, ~10x the
+        # wall clock. The kernel itself stays covered by the kernel-level
+        # parity tests, which invoke it directly.
+        return lif_update_ref(current, v_prev, s_prev, tau=cfg.tau,
+                              v_th=cfg.v_th, soft_reset=cfg.soft_reset)
     return lif_update(current, v_prev, s_prev, tau=cfg.tau, v_th=cfg.v_th,
                       soft_reset=cfg.soft_reset)
 
@@ -390,23 +397,32 @@ def expand_group_weights(p: dict, heads: tuple[int, int], kv_heads: int
 
 @register("dense_lif", "fused")
 def _dense_lif_fused(p: dict, flat: Array, lif_cfg: LIFConfig, *, q,
-                     qk_threshold, fmt, heads=None, kv_heads=None):
+                     qk_threshold, fmt, heads=None, kv_heads=None,
+                     with_current=False):
     from ..kernels.fused_pe import fused_pe
 
     if heads is not None and kv_heads is not None and kv_heads != heads[0]:
         p = expand_group_weights(p, heads, kv_heads)
     m, k = flat.shape
-    bm, bk = DEFAULT_BLOCKS.m, DEFAULT_BLOCKS.k
+    bm, bn, bk = (DEFAULT_BLOCKS.m, DEFAULT_BLOCKS.n, DEFAULT_BLOCKS.k)
+    mq = -(-m // bm) * bm   # fused_pe pads x up to the block grid
+    kq = -(-k // bk) * bk
     # dense residual stream: a ones map — dense blocks are never silent,
     # so no metadata pass is spent on the operand
-    ones_vld = jnp.ones((-(-m // bm), -(-k // bk)), jnp.int32)
+    ones_vld = jnp.ones((mq // bm, kq // bk), jnp.int32)
     out = fused_pe(flat, p["w"], bias=p.get("b"), vld_cnt=ones_vld,
                    q=_q_operand(q), qk_threshold=qk_threshold,
                    tau=lif_cfg.tau, v_th=lif_cfg.v_th,
                    soft_reset=lif_cfg.soft_reset, out_format=fmt,
-                   heads=heads)
-    return _wrap_spikes(out.spikes, out.vld_next, fmt, DEFAULT_BLOCKS.m,
-                        DEFAULT_BLOCKS.n)
+                   block_m=bm, block_n=bn, block_k=bk,
+                   # heads only drives the head-blocked MASK — grouped KV
+                   # without q is fully handled by the weight expansion
+                   heads=None if q is None else heads,
+                   emit_current=with_current)
+    st = _wrap_spikes(out.spikes, out.vld_next, fmt, bm, bn)
+    # the grad path asks for the kernel-cached membrane current (pre-LIF,
+    # post-bias) so its backward never re-runs the projection matmul
+    return (st, out.current) if with_current else st
 
 
 @register("dense_lif", "reference")

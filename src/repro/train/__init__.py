@@ -1,5 +1,6 @@
 from .trainer import (TrainState, make_train_step, make_kd_train_step,
-                      make_compressed_train_step, train_state_init)
+                      make_compressed_train_step, observe_train_sparsity,
+                      train_state_init)
 from .checkpoint import (save_checkpoint, restore_checkpoint,
                          latest_checkpoint, AsyncCheckpointer)
 from .elastic import ElasticRunner

@@ -129,9 +129,17 @@ def make_kd_train_step(student_apply: Callable, teacher_apply: Callable,
             return _student(params, state, images, policy=pol)
 
     def loss_fn(params, state, batch):
-        s_logits, new_state = student_apply(params, state, batch["images"])
+        out = student_apply(params, state, batch["images"])
+        # students may return (logits, state) or (logits, state, aux);
+        # an aux carrying "active_frac" (snn_cnn's mean firing rate over
+        # the spike layers) surfaces as a metric — the measured per-step
+        # sparsity signal ``observe_train_sparsity`` feeds the autotuner
+        s_logits, new_state = out[0], out[1]
+        aux = out[2] if len(out) > 2 else None
         t_logits = teacher_apply(teacher_params, batch["images"])
         loss, metrics = kd_loss(s_logits, t_logits, batch["labels"], kd)
+        if isinstance(aux, dict) and "active_frac" in aux:
+            metrics = dict(metrics, active_frac=aux["active_frac"])
         return loss, (metrics, new_state)
 
     def step(carry, batch):
@@ -149,6 +157,26 @@ def make_kd_train_step(student_apply: Callable, teacher_apply: Callable,
         return (new_p, new_o, new_state), dict(metrics, lr=lr)
 
     return step
+
+
+def observe_train_sparsity(metrics: dict) -> None:
+    """Feed one training step's measured spike sparsity into the roofline
+    autotuner — the host-side half of the ``"auto+grad"`` loop.
+
+    Call on the (device or host) metrics dict a ``make_kd_train_step``
+    step returned: when the student surfaced an ``active_frac`` (snn_cnn's
+    mean firing rate), it EWMA-feeds ``AutoTuner.observe``, so the next
+    trace's backward plans price the dw event skip at the sparsity the
+    model actually runs at instead of the dense-safe default.  The rate is
+    a neuron-level proxy for the active-BLOCK fraction the byte model
+    wants; the tuner's bucket quantization absorbs the gap.  No-op when
+    the metric is absent."""
+    frac = metrics.get("active_frac")
+    if frac is None:
+        return
+    from ..ops.autotune import get_tuner
+
+    get_tuner().observe(float(frac))
 
 
 # -------------------------------------------- compressed DP grads (shard_map)
